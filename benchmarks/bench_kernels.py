@@ -1,0 +1,86 @@
+"""Microbenchmarks: jnp reference paths on CPU (wall time) — honest CPU
+numbers; TPU performance is analysed structurally via the dry-run
+roofline, not measured here."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, iters=10):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts))
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # attention reference (prefill path)
+    from repro.kernels.flash_attention.ref import attention_reference
+    B, H, L, hd = 1, 8, 1024, 64
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, L, hd)), jnp.float32)
+               for _ in range(3))
+    fn = jax.jit(lambda q, k, v: attention_reference(q, k, v, causal=True))
+    t = _bench(fn, q, k, v)
+    flops = 4 * B * H * L * L * hd
+    rows.append({"name": "attention_ref_1k", "us_per_call": t * 1e6,
+                 "derived": f"{flops/t/1e9:.1f}GF/s"})
+
+    # SSD scan reference
+    from repro.kernels.ssd_scan.ref import ssd_reference
+    b, l, h, p, g, n = 1, 2048, 8, 64, 1, 128
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(1e-3, 0.1, (b, l, h)), jnp.float32)
+    A = jnp.asarray(-np.ones(h), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    fn = jax.jit(lambda *a: ssd_reference(*a, chunk=256)[0])
+    t = _bench(fn, x, dt, A, Bm, Cm)
+    rows.append({"name": "ssd_ref_2k", "us_per_call": t * 1e6,
+                 "derived": f"{l*b/t:,.0f}tok/s"})
+
+    # decode attention reference over a 32k cache
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_reference)
+    B2, Hq, Hkv, S = 4, 8, 2, 32768
+    q2 = jnp.asarray(rng.normal(size=(B2, Hq, hd)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(size=(B2, Hkv, S, hd)), jnp.float32)
+    v2 = jnp.asarray(rng.normal(size=(B2, Hkv, S, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B2, S))
+    qp = jnp.full((B2,), S - 1, jnp.int32)
+    fn = jax.jit(lambda *a: decode_attention_reference(*a))
+    t = _bench(fn, q2, k2, v2, pos, qp)
+    bytes_read = B2 * Hkv * S * hd * 4 * 2
+    rows.append({"name": "decode_attn_ref_32k", "us_per_call": t * 1e6,
+                 "derived": f"{bytes_read/t/1e9:.1f}GB/s"})
+
+    # MoE block
+    from repro.configs import get_arch
+    from repro.models.moe import init_moe, moe_block
+    cfg = get_arch("qwen2-moe-a2.7b", variant="reduced")
+    pmoe = init_moe(jax.random.PRNGKey(0), cfg)
+    xm = jnp.asarray(rng.normal(size=(2, 256, cfg.d_model)), jnp.float32)
+    fn = jax.jit(lambda p, x: moe_block(p, x, cfg)[0])
+    t = _bench(fn, pmoe, xm)
+    rows.append({"name": "moe_block_512tok", "us_per_call": t * 1e6,
+                 "derived": f"{512/t:,.0f}tok/s"})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

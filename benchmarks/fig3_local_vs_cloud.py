@@ -1,0 +1,118 @@
+"""Paper Fig. 3 reproduction: local (Zoo) vs cloud-API latency as the
+number of images per user request grows.
+
+Local = the composed classify>>decode service deployed locally, measured
+wall-clock per batch (CPU; the paper used a laptop CPU too).
+Cloud  = the same service deployed behind the analytical network model
+parameterised to the paper's setting (34 Mbps uplink, per-image payloads
+7KB-1.2MB, remote service time with jitter and queueing congestion).
+
+The claims to reproduce: local response time grows LINEARLY in the number
+of images with LOW variance; cloud grows super-linearly with high,
+unpredictable variance.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.zoo_builders as zb
+from repro.core.deploy import DeploymentPlan, deploy
+from repro.core.netmodel import NetworkModel
+
+
+def build_service():
+    clf = zb.classifier_service("pixtral-12b", n_classes=1000)
+    clf = clf.with_params(
+        clf.metadata["init_params"](jax.random.PRNGKey(0)))
+    dec = zb.label_decoder(1000)
+    return clf, dec, clf >> dec
+
+
+def run(counts=(5, 10, 15, 20, 25), repeats: int = 10) -> List[Dict]:
+    clf, dec, svc = build_service()
+    cfg_fe = clf.signature.inputs["embeddings"]
+    n_tok, d_emb = cfg_fe.shape[1], cfg_fe.shape[2]
+    rng = np.random.default_rng(0)
+    net = NetworkModel(bandwidth_mbps=34.0, rtt_ms=60.0, server_ms=350.0,
+                       jitter_frac=0.35, congestion_per_item=0.04, seed=0)
+    local = deploy(svc, DeploymentPlan.all_local(svc), stages=[clf, dec])
+    remote = deploy(svc, DeploymentPlan.all_remote(svc, net),
+                    stages=[clf, dec])
+    # image payload sizes as in the paper: 7KB..1243KB
+    # the paper's Zoo processes each image as its own request; warm up the
+    # single-image program once so compile time is excluded
+    warm = {"embeddings": jnp.asarray(
+        rng.normal(0, 1, (1, n_tok, d_emb)), jnp.float32)}
+    local.call(warm)
+    rows = []
+    for n in counts:
+        loc_times, cld_times = [], []
+        for rep in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                img = {"embeddings": jnp.asarray(
+                    rng.normal(0, 1, (1, n_tok, d_emb)), jnp.float32)}
+                local.call(img)
+            loc_times.append(time.perf_counter() - t0)
+
+            # cloud: each image is its own request (the paper's workflow),
+            # with queueing position driving congestion
+            total = 0.0
+            for i in range(n):
+                payload = int(rng.uniform(7e3, 1.243e6))
+                total += net.request_s(payload, 2048, queue_position=i)
+            cld_times.append(total)
+        rows.append({
+            "n_images": n,
+            "local_mean_s": float(np.mean(loc_times)),
+            "local_std_s": float(np.std(loc_times)),
+            "cloud_mean_s": float(np.mean(cld_times)),
+            "cloud_std_s": float(np.std(cld_times)),
+        })
+    return rows
+
+
+def check_claims(rows: List[Dict]) -> Dict[str, bool]:
+    """Assert the paper's qualitative claims on the measured curves."""
+    n = np.array([r["n_images"] for r in rows], float)
+    loc = np.array([r["local_mean_s"] for r in rows])
+    cld = np.array([r["cloud_mean_s"] for r in rows])
+    # linear fit residual for local
+    A = np.stack([n, np.ones_like(n)], 1)
+    coef, *_ = np.linalg.lstsq(A, loc, rcond=None)
+    resid = float(np.max(np.abs(A @ coef - loc)) / np.mean(loc))
+    per_item_cloud = cld / n
+    claims = {
+        "local_linear": resid < 0.15,
+        "local_low_variance": all(r["local_std_s"]
+                                  < 0.3 * r["local_mean_s"] + 5e-3
+                                  for r in rows),
+        "cloud_slower": bool(np.all(cld > loc)),
+        "cloud_superlinear": per_item_cloud[-1] > per_item_cloud[0] * 1.05,
+        "cloud_high_variance": any(r["cloud_std_s"] > r["local_std_s"]
+                                   for r in rows),
+    }
+    return claims
+
+
+def main():
+    rows = run()
+    print("fig3: local (Zoo) vs modelled cloud API, batch response time")
+    print(f"{'n':>3s} {'local':>12s} {'cloud':>12s}")
+    for r in rows:
+        print(f"{r['n_images']:3d} {r['local_mean_s']:8.3f}±"
+              f"{r['local_std_s']:.3f} {r['cloud_mean_s']:8.3f}±"
+              f"{r['cloud_std_s']:.3f}")
+    claims = check_claims(rows)
+    for k, v in claims.items():
+        print(f"claim {k:22s}: {'REPRODUCED' if v else 'NOT reproduced'}")
+    return rows, claims
+
+
+if __name__ == "__main__":
+    main()

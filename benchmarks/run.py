@@ -1,0 +1,109 @@
+"""Benchmark harness: one entry per paper table/figure + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+
+Emits ``name,us_per_call,derived`` CSV lines per the harness contract,
+followed by human-readable sections.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def bench_fig2(csv):
+    from benchmarks.fig2_inference_time import run
+    rows = run(iters=30)
+    for r in rows:
+        csv.append((f"fig2_{r['model']}_fused", r["fused_ms"] * 1e3,
+                    f"{r['speedup']:.2f}x_vs_naive"))
+    print(f"\n== fig2: fused vs per-stage dispatch ==")
+    for r in rows:
+        print(f"  {r['model']:18s} fused={r['fused_ms']:8.2f}ms "
+              f"naive={r['naive_ms']:8.2f}ms speedup={r['speedup']:.2f}x")
+
+
+def bench_fig3(csv):
+    from benchmarks.fig3_local_vs_cloud import check_claims, run
+    rows = run(repeats=5)
+    claims = check_claims(rows)
+    print(f"\n== fig3: local vs modelled cloud ==")
+    for r in rows:
+        csv.append((f"fig3_local_n{r['n_images']}",
+                    r["local_mean_s"] * 1e6,
+                    f"cloud={r['cloud_mean_s']:.2f}s"))
+        print(f"  n={r['n_images']:3d} local={r['local_mean_s']:.3f}s"
+              f"±{r['local_std_s']:.3f} cloud={r['cloud_mean_s']:.3f}s"
+              f"±{r['cloud_std_s']:.3f}")
+    for k, v in claims.items():
+        print(f"  claim {k:22s}: {'REPRODUCED' if v else 'NOT reproduced'}")
+
+
+def bench_kernels(csv):
+    from benchmarks.bench_kernels import run
+    print(f"\n== kernel reference microbenches (CPU) ==")
+    for r in run():
+        csv.append((r["name"], r["us_per_call"], r["derived"]))
+        print(f"  {r['name']:24s} {r['us_per_call']:12.1f}us "
+              f"{r['derived']}")
+
+
+def bench_serving(csv):
+    from benchmarks.bench_serving import run
+    print(f"\n== serving engine throughput ==")
+    for r in run():
+        csv.append((f"serve_b{r['max_batch']}",
+                    r["decode_ms_p50"] * 1e3,
+                    f"{r['tok_per_s']:.1f}tok/s"))
+        print(f"  batch={r['max_batch']} tok/s={r['tok_per_s']:8.1f} "
+              f"p50={r['decode_ms_p50']:.2f}ms p99={r['decode_ms_p99']:.2f}ms")
+
+
+def bench_roofline(csv):
+    """Summarise dry-run roofline artifacts if present."""
+    from repro.launch.roofline import load_all
+    rows = load_all()
+    if not rows:
+        print("\n== roofline: no dry-run artifacts (run "
+              "repro.launch.dryrun) ==")
+        return
+    print(f"\n== roofline summary ({len(rows)} dry-run combos) ==")
+    by_dom = {}
+    for r in rows:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    for dom, rs in sorted(by_dom.items()):
+        print(f"  {dom}-bound: {len(rs)} combos")
+    for r in rows:
+        csv.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                    max(r['compute_s'], r['memory_s'],
+                        r['collective_s']) * 1e6,
+                    f"dom={r['dominant']}"))
+
+
+ALL = {"fig2": bench_fig2, "fig3": bench_fig3, "kernels": bench_kernels,
+       "serving": bench_serving, "roofline": bench_roofline}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(ALL)
+    csv = []
+    failed = []
+    for name in names:
+        try:
+            ALL[name](csv)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: --arch <id> resolves through ``ARCHS``."""
+from repro.configs.base import (EncoderConfig, FrontendConfig, ModelConfig,
+                                MoEConfig, SHAPES, ShapeConfig, SSMConfig,
+                                active_param_count, param_count)
+
+from repro.configs.internlm2_20b import CONFIG as _internlm2
+from repro.configs.seamless_m4t_medium import CONFIG as _seamless
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.qwen2_5_14b import CONFIG as _qwen25
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen2moe
+from repro.configs.pixtral_12b import CONFIG as _pixtral
+from repro.configs.llama3_2_1b import CONFIG as _llama32
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba
+
+from repro.configs.extra import EXTRA_ARCHS
+
+ARCHS = {c.name: c for c in [
+    _internlm2, _seamless, _starcoder2, _qwen25, _qwen2moe,
+    _pixtral, _llama32, _granite, _mamba2, _jamba,
+]}
+
+
+def get_arch(name: str, *, variant: str = "") -> ModelConfig:
+    """Resolve an architecture id, optionally with a variant suffix.
+
+    variants: "swa" -> sliding-window attention (window 4096) for
+    sub-quadratic long-context decode on dense archs; "reduced" -> smoke
+    config.
+    """
+    cfg = ARCHS.get(name) or EXTRA_ARCHS[name]
+    if variant == "swa":
+        cfg = cfg.replace(name=cfg.name + "-swa", sliding_window=4096)
+    elif variant == "reduced":
+        cfg = cfg.reduced()
+    elif variant:
+        raise ValueError(f"unknown variant {variant!r}")
+    return cfg

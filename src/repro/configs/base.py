@@ -1,0 +1,278 @@
+"""Configuration schema for the repro framework.
+
+Every assigned architecture is expressed as a frozen ``ModelConfig``; input
+shapes are ``ShapeConfig``. Configs are pure data — building a model from a
+config happens in :mod:`repro.models.model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration."""
+
+    n_experts: int                  # routed experts
+    top_k: int
+    d_expert: int                   # hidden dim of each routed expert
+    n_shared: int = 0               # always-on shared experts
+    d_shared: int = 0               # hidden dim of the shared expert block
+    capacity_factor: float = 1.25   # tokens-per-expert capacity multiplier
+    router_jitter: float = 0.0
+    moe_every: int = 1              # 1 = every layer is MoE; 2 = alternate
+    aux_loss_weight: float = 0.01   # load-balance auxiliary loss
+    group_routing: bool = False     # route within per-row token groups
+                                    # (data-local; kills the global gather)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) mixer configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256                # SSD chunk length (dual form)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for encoder–decoder models (same d_model as decoder)."""
+
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    # Encoder consumes frontend embeddings; no embedding table of its own.
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB (the one allowed carve-out).
+
+    ``input_specs`` provides precomputed frame/patch embeddings of shape
+    ``(batch, n_tokens, d_embed)``; a learned linear projector maps
+    ``d_embed -> d_model``.
+    """
+
+    kind: str                       # "vision" | "audio"
+    n_tokens: int                   # patches / frames per example
+    d_embed: int                    # embedding dim produced by the stub
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 0             # hybrid: one attn layer per this many
+    sliding_window: int = 0         # 0 = full attention
+    attn_block: int = 0             # >0: chunked causal attention (skip
+                                    # above-diagonal blocks, flash-style)
+    kv_quant: bool = False          # int8 KV cache (per-slot-head scales)
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    dtype: str = "bfloat16"         # activation dtype
+    param_dtype: str = "bfloat16"
+    remat: bool = False             # activation checkpointing per layer/block
+    unroll_layers: bool = False     # python-unroll the layer stack (exact
+                                    # cost analysis; used by calibration)
+    source: str = ""                # citation for the architecture
+
+    # ------------------------------------------------------------------ #
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def p_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_decoder_cache(self) -> bool:
+        return True  # all assigned families are autoregressive decoders
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Reduced variant used by smoke tests (2 layers, d_model<=512, <=4 experts)
+    def reduced(self) -> "ModelConfig":
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        if n_heads:
+            n_kv = max(1, min(self.n_kv_heads, n_heads))
+            while n_heads % n_kv:
+                n_kv -= 1
+        else:
+            n_kv = 0  # attention-free (ssm)
+        kw = dict(
+            name=self.name + "-reduced",
+            n_layers=2,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 512) or 0,
+            vocab=min(self.vocab, 1024),
+            head_dim=(d_model // n_heads) if n_heads else 1,
+            dtype="float32",
+            param_dtype="float32",
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_expert=min(self.moe.d_expert, 128),
+                n_shared=min(self.moe.n_shared, 1),
+                d_shared=min(self.moe.d_shared, 128),
+            )
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=32, head_dim=32, chunk=32)
+        if self.encoder is not None:
+            kw["encoder"] = EncoderConfig(
+                n_layers=2, n_heads=n_heads, n_kv_heads=n_kv,
+                d_ff=min(self.encoder.d_ff, 512))
+        if self.frontend is not None:
+            kw["frontend"] = dataclasses.replace(
+                self.frontend, n_tokens=16, d_embed=64)
+        if self.attn_every:
+            kw["n_layers"] = self.attn_every  # one full super-block
+        return self.replace(**kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                       # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (used for 6ND model-FLOPs in roofline)."""
+    d, hd = cfg.d_model, cfg.hd
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params() -> int:
+        p = d * (cfg.n_heads * hd) + 2 * d * (cfg.n_kv_heads * hd) \
+            + (cfg.n_heads * hd) * d
+        if cfg.qkv_bias:
+            p += (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+        return p
+
+    def mlp_params(d_ff: int) -> int:
+        return 3 * d * d_ff  # gated SwiGLU
+
+    def moe_params(m: MoEConfig) -> Tuple[int, int]:
+        total = m.n_experts * 3 * d * m.d_expert + d * m.n_experts
+        active = m.top_k * 3 * d * m.d_expert + d * m.n_experts
+        if m.n_shared:
+            shared = 3 * d * (m.d_shared or m.d_expert * m.n_shared)
+            total += shared
+            active += shared
+        return total, active
+
+    def ssm_params(s: SSMConfig) -> int:
+        d_in = s.d_inner(d)
+        nh = s.n_heads(d)
+        # in_proj -> [z, x, B, C, dt], conv, out_proj, A, D, dt_bias, norm
+        proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+        return d * proj_out + (d_in + 2 * s.n_groups * s.d_state) * s.d_conv \
+            + d_in * d + 3 * nh + d_in
+
+    total = emb
+    per_layer_norms = 2 * d
+    if cfg.family in ("dense", "vlm"):
+        total += cfg.n_layers * (attn_params() + mlp_params(cfg.d_ff)
+                                 + per_layer_norms)
+    elif cfg.family == "moe":
+        mt, _ = moe_params(cfg.moe)
+        total += cfg.n_layers * (attn_params() + mt + per_layer_norms)
+    elif cfg.family == "ssm":
+        total += cfg.n_layers * (ssm_params(cfg.ssm) + per_layer_norms // 2)
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        n_ssm = cfg.n_layers - n_attn
+        total += n_attn * attn_params() + n_ssm * ssm_params(cfg.ssm)
+        if cfg.moe is not None:
+            mt, _ = moe_params(cfg.moe)
+            n_moe = cfg.n_layers // max(1, cfg.moe.moe_every)
+            total += n_moe * mt + (cfg.n_layers - n_moe) * mlp_params(cfg.d_ff)
+        else:
+            total += cfg.n_layers * mlp_params(cfg.d_ff)
+        total += cfg.n_layers * per_layer_norms
+    elif cfg.family == "encdec":
+        enc = cfg.encoder
+        enc_hd = d // enc.n_heads
+        enc_attn = d * (enc.n_heads * enc_hd) + 2 * d * (enc.n_kv_heads * enc_hd) \
+            + (enc.n_heads * enc_hd) * d
+        total += enc.n_layers * (enc_attn + mlp_params(enc.d_ff) + per_layer_norms)
+        # decoder: self-attn + cross-attn + mlp
+        total += cfg.n_layers * (2 * attn_params() + mlp_params(cfg.d_ff)
+                                 + 3 * d)
+    if cfg.frontend is not None:
+        total += cfg.frontend.d_embed * d
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE uses top-k experts only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    full = param_count(cfg)
+    m = cfg.moe
+    d = cfg.d_model
+    per_moe_layer_total = m.n_experts * 3 * d * m.d_expert
+    per_moe_layer_active = m.top_k * 3 * d * m.d_expert
+    if cfg.family == "moe":
+        n_moe = cfg.n_layers
+    else:
+        n_moe = cfg.n_layers // max(1, m.moe_every)
+    return full - n_moe * (per_moe_layer_total - per_moe_layer_active)

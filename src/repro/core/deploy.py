@@ -1,0 +1,172 @@
+"""Deployment — the second half of the paper's service definition, kept
+strictly separate from functionality: the same composed service can be
+placed local, remote, or split across endpoints **without changing its
+structure** (the paper's step-3 property).
+
+Endpoints:
+  * ``local``  — this process; stages fuse into a single jitted program.
+  * ``mesh``   — a JAX device mesh (a pod slice); jit under that mesh.
+  * ``remote`` — an endpoint behind a modelled network; compute runs here
+    (the container is one machine) but latency is accounted through the
+    :class:`NetworkModel`, matching how the paper measured cloud calls.
+
+Consecutive stages on the same endpoint are grouped and compiled as ONE XLA
+program — composition fusion. Transfers between endpoints are charged for
+the intermediate pytree bytes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.compose import seq
+from repro.core.netmodel import NetworkModel, tree_nbytes
+from repro.core.service import Service
+
+
+@dataclass(frozen=True)
+class Endpoint:
+    name: str
+    kind: str = "local"                      # local | mesh | remote
+    mesh: Optional[Any] = None
+    network: Optional[NetworkModel] = None   # for remote
+
+
+@dataclass
+class StageTelemetry:
+    stage: str
+    endpoint: str
+    compute_s: float
+    transfer_s: float
+
+
+@dataclass
+class Telemetry:
+    stages: List[StageTelemetry] = field(default_factory=list)
+
+    @property
+    def total_s(self) -> float:
+        return sum(s.compute_s + s.transfer_s for s in self.stages)
+
+    @property
+    def transfer_total_s(self) -> float:
+        return sum(s.transfer_s for s in self.stages)
+
+
+@dataclass(frozen=True)
+class DeploymentPlan:
+    """stage-name -> endpoint-name; endpoints by name."""
+
+    endpoints: Dict[str, Endpoint]
+    assignments: Dict[str, str]
+
+    @classmethod
+    def all_local(cls, service: Service) -> "DeploymentPlan":
+        stages = service.metadata.get("stages", [service.name])
+        return cls(endpoints={"local": Endpoint("local")},
+                   assignments={s: "local" for s in stages})
+
+    @classmethod
+    def all_remote(cls, service: Service,
+                   network: Optional[NetworkModel] = None) -> "DeploymentPlan":
+        stages = service.metadata.get("stages", [service.name])
+        ep = Endpoint("cloud", kind="remote",
+                      network=network or NetworkModel())
+        return cls(endpoints={"cloud": ep},
+                   assignments={s: "cloud" for s in stages})
+
+    @classmethod
+    def split(cls, service: Service, split_at: int,
+              network: Optional[NetworkModel] = None) -> "DeploymentPlan":
+        """First ``split_at`` stages local, rest remote (Neurosurgeon-style
+        hybrid the paper cites)."""
+        stages = service.metadata.get("stages", [service.name])
+        eps = {"local": Endpoint("local"),
+               "cloud": Endpoint("cloud", kind="remote",
+                                 network=network or NetworkModel())}
+        asg = {s: ("local" if i < split_at else "cloud")
+               for i, s in enumerate(stages)}
+        return cls(endpoints=eps, assignments=asg)
+
+
+class DeployedService:
+    """A composed service bound to a deployment plan."""
+
+    def __init__(self, service: Service, plan: DeploymentPlan,
+                 stages: Optional[List[Service]] = None):
+        self.service = service
+        self.plan = plan
+        # Recover the stage list: either supplied, or treat as one stage.
+        if stages is None:
+            names = service.metadata.get("stages")
+            if names and service.metadata.get("combinator") == "seq":
+                raise ValueError("pass the component stage services for a "
+                                 "seq composition")
+            stages = [service]
+        self.stages = stages
+        self._groups = self._group()
+        self._compiled: Dict[int, Any] = {}
+
+    # -------------------------------------------------------------- #
+    def _group(self) -> List[Tuple[Endpoint, List[Service]]]:
+        groups: List[Tuple[Endpoint, List[Service]]] = []
+        for s in self.stages:
+            ep_name = self.plan.assignments.get(s.name, "local")
+            ep = self.plan.endpoints[ep_name]
+            if groups and groups[-1][0].name == ep.name:
+                groups[-1][1].append(s)
+            else:
+                groups.append((ep, [s]))
+        return groups
+
+    def _fn_for(self, gi: int):
+        if gi not in self._compiled:
+            ep, stages = self._groups[gi]
+            svc = stages[0] if len(stages) == 1 else seq(*stages)
+            fn = jax.jit(svc.fn)
+            self._compiled[gi] = (svc, fn)
+        return self._compiled[gi]
+
+    # -------------------------------------------------------------- #
+    def call(self, inputs, *, queue_position: int = 0
+             ) -> Tuple[Any, Telemetry]:
+        telemetry = Telemetry()
+        x = inputs
+        for gi, (ep, stages) in enumerate(self._groups):
+            svc, fn = self._fn_for(gi)
+            payload = tree_nbytes(x)
+
+            def run():
+                t0 = time.perf_counter()
+                if ep.kind == "mesh" and ep.mesh is not None:
+                    with ep.mesh:
+                        y = fn(svc.params, x)
+                else:
+                    y = fn(svc.params, x)
+                y = jax.block_until_ready(y)
+                return y, time.perf_counter() - t0
+
+            y, compute_s = run()
+            transfer_s = 0.0
+            if ep.kind == "remote":
+                # remote latency is fully modelled (RTT + payload/bw +
+                # modelled server time); the local wall time merely
+                # produced the result and is not charged
+                transfer_s = ep.network.request_s(
+                    payload, tree_nbytes(y),
+                    queue_position=queue_position)
+                compute_s = 0.0
+            telemetry.stages.append(StageTelemetry(
+                stage="+".join(s.name for s in stages), endpoint=ep.name,
+                compute_s=compute_s, transfer_s=transfer_s))
+            x = y
+        return x, telemetry
+
+
+def deploy(service: Service, plan: Optional[DeploymentPlan] = None,
+           stages: Optional[List[Service]] = None) -> DeployedService:
+    plan = plan or DeploymentPlan.all_local(service)
+    return DeployedService(service, plan, stages=stages)

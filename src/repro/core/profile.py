@@ -1,0 +1,59 @@
+"""Per-stage instrumentation — the paper's Owl instrumentation feature
+("collecting forward computation latency of each node ... took 50 LoC"):
+given a composed service's stages, time each stage's compute and the
+intermediate payload sizes, without changing the service itself."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, List, Sequence
+
+import jax
+
+from repro.core.netmodel import tree_nbytes
+from repro.core.service import Service
+
+
+@dataclass
+class StageProfile:
+    stage: str
+    compute_ms: float
+    output_bytes: int
+    n_params: int
+
+
+def profile_stages(stages: Sequence[Service], inputs: Any, *,
+                   iters: int = 5) -> List[StageProfile]:
+    """Run the pipeline stage by stage, timing each (median of iters)."""
+    out: List[StageProfile] = []
+    x = inputs
+    for s in stages:
+        fn = jax.jit(s.fn)
+        jax.block_until_ready(fn(s.params, x))        # compile
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            y = jax.block_until_ready(fn(s.params, x))
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        y = fn(s.params, x)
+        out.append(StageProfile(
+            stage=s.name,
+            compute_ms=times[len(times) // 2] * 1e3,
+            output_bytes=tree_nbytes(y),
+            n_params=s.n_params))
+        x = y
+    return out
+
+
+def format_profile(profiles: List[StageProfile]) -> str:
+    total = sum(p.compute_ms for p in profiles)
+    lines = [f"{'stage':40s} {'ms':>10s} {'%':>6s} {'out bytes':>12s} "
+             f"{'params':>10s}"]
+    for p in profiles:
+        lines.append(
+            f"{p.stage:40s} {p.compute_ms:10.2f} "
+            f"{100 * p.compute_ms / max(total, 1e-9):5.1f}% "
+            f"{p.output_bytes:12,d} {p.n_params:10,d}")
+    lines.append(f"{'TOTAL':40s} {total:10.2f}")
+    return "\n".join(lines)

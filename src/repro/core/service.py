@@ -1,0 +1,130 @@
+"""The paper's central abstraction: a typed, composable ML *service*.
+
+Following the paper, a service = **functionality** (a pure computational
+function with a typed interaction interface) + **deployment** (interface &
+location, handled in :mod:`repro.core.deploy` — deliberately separate, so a
+service can move local -> remote -> split without structural change).
+
+A ``Signature`` is a pytree of ``TensorSpec`` (shape with ``-1`` wildcards +
+dtype) for inputs and outputs — the JAX analogue of the OCaml static types
+the original Zoo leaned on. Composition primitives live in
+:mod:`repro.core.compose`; compatibility checking in
+:mod:`repro.core.compat`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------- #
+# typed signatures
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class TensorSpec:
+    """Shape/dtype spec; -1 dims are wildcards (e.g. batch)."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+
+    @classmethod
+    def of(cls, x) -> "TensorSpec":
+        return cls(tuple(int(s) for s in x.shape), str(jnp.dtype(x.dtype)))
+
+    def matches(self, other: "TensorSpec") -> bool:
+        if len(self.shape) != len(other.shape):
+            return False
+        for a, b in zip(self.shape, other.shape):
+            if a != -1 and b != -1 and a != b:
+                return False
+        return jnp.dtype(self.dtype) == jnp.dtype(other.dtype)
+
+    def concretize(self, x) -> bool:
+        """Does a concrete array/SDS satisfy this spec?"""
+        return self.matches(TensorSpec.of(x))
+
+    def to_json(self):
+        return {"shape": list(self.shape), "dtype": self.dtype}
+
+    @classmethod
+    def from_json(cls, d):
+        return cls(tuple(d["shape"]), d["dtype"])
+
+
+def spec_tree_of(tree) -> Any:
+    """Array/ShapeDtypeStruct pytree -> TensorSpec pytree."""
+    return jax.tree.map(TensorSpec.of, tree)
+
+
+@dataclass(frozen=True)
+class Signature:
+    inputs: Any     # pytree of TensorSpec
+    outputs: Any
+
+    def to_json(self):
+        def enc(tree):
+            flat, treedef = jax.tree.flatten(tree)
+            return {"treedef": str(treedef),
+                    "leaves": [t.to_json() for t in flat]}
+        return {"inputs": enc(self.inputs), "outputs": enc(self.outputs)}
+
+
+# --------------------------------------------------------------------- #
+# service
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Service:
+    """functionality half of a Zoo service.
+
+    ``fn(params, inputs) -> outputs`` must be a pure, jit-able function.
+    ``params`` may be ``None`` for stateless adapter services.
+    """
+
+    name: str
+    fn: Callable[[Any, Any], Any]
+    signature: Signature
+    params: Any = None
+    version: str = "0.1.0"
+    description: str = ""
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    # -- ergonomics ---------------------------------------------------- #
+    def __rshift__(self, other: "Service") -> "Service":
+        from repro.core.compose import seq
+        return seq(self, other)
+
+    def __call__(self, inputs, params=None):
+        return self.fn(self.params if params is None else params, inputs)
+
+    def jitted(self) -> Callable[[Any], Any]:
+        fn = self.fn
+        return jax.jit(lambda params, inputs: fn(params, inputs))
+
+    def with_params(self, params) -> "Service":
+        return dataclasses.replace(self, params=params)
+
+    def check_input(self, inputs) -> None:
+        from repro.core.compat import check_concrete
+        check_concrete(self.signature.inputs, inputs, where=self.name)
+
+    @property
+    def n_params(self) -> int:
+        if self.params is None:
+            return 0
+        return sum(int(np.prod(x.shape))
+                   for x in jax.tree.leaves(self.params))
+
+    def output_eval_shape(self, inputs):
+        return jax.eval_shape(self.fn, self.params, inputs)
+
+
+def service_from_fn(name, fn, example_in, params=None, **kw) -> Service:
+    """Build a service and derive its signature via eval_shape."""
+    out = jax.eval_shape(fn, params, example_in)
+    sig = Signature(spec_tree_of(example_in), spec_tree_of(out))
+    return Service(name=name, fn=fn, signature=sig, params=params, **kw)

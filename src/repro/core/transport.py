@@ -1,0 +1,145 @@
+"""Repository transports — the paper's step-② ("pull from the remote
+repository **or from peer devices** such as machine B") made concrete.
+
+A ``Transport`` moves service directories (manifest + params files)
+between a remote root and the local cache. The container has no network,
+so remote transports are modelled: byte counts are real (the actual files
+are copied), latency is charged through the :class:`NetworkModel`, and a
+``PeerTransport`` differs from ``RepoTransport`` only in its network
+parameters (LAN-ish vs WAN-ish) — matching the paper's motivation that
+edge-to-edge pulls can be cheaper than cloud pulls.
+"""
+from __future__ import annotations
+
+import shutil
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+from repro.core.netmodel import NetworkModel
+
+
+@dataclass
+class PullReport:
+    name: str
+    version: str
+    nbytes: int
+    seconds: float
+    source: str
+    cached: bool = False
+
+
+class Transport:
+    """Copies <root>/<name>/<version>/* into the local cache root."""
+
+    kind = "base"
+
+    def __init__(self, remote_root, network: Optional[NetworkModel] = None):
+        self.remote_root = Path(remote_root)
+        self.network = network
+
+    def list_remote(self) -> List[Tuple[str, str]]:
+        return sorted(
+            (p.parent.parent.name, p.parent.name)
+            for p in self.remote_root.glob("*/*/manifest.json"))
+
+    def fetch(self, name: str, version: str, cache_root) -> PullReport:
+        src = self.remote_root / name / version
+        if not (src / "manifest.json").exists():
+            raise FileNotFoundError(f"{name}@{version} not on {self.kind}")
+        dst = Path(cache_root) / name / version
+        if (dst / "manifest.json").exists():
+            return PullReport(name, version, 0, 0.0, self.kind, cached=True)
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copytree(src, dst)
+        nbytes = sum(f.stat().st_size for f in dst.rglob("*") if f.is_file())
+        secs = self.network.transfer_s(nbytes) if self.network else 0.0
+        return PullReport(name, version, nbytes, secs, self.kind)
+
+    def push(self, name: str, version: str, cache_root) -> PullReport:
+        src = Path(cache_root) / name / version
+        dst = self.remote_root / name / version
+        if dst.exists():
+            raise FileExistsError(f"{name}@{version} already on {self.kind}")
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copytree(src, dst)
+        nbytes = sum(f.stat().st_size for f in dst.rglob("*") if f.is_file())
+        secs = self.network.transfer_s(nbytes) if self.network else 0.0
+        return PullReport(name, version, nbytes, secs, self.kind)
+
+
+class RepoTransport(Transport):
+    """The central model repository (the paper's Gist server A):
+    WAN-class link."""
+
+    kind = "repo"
+
+    def __init__(self, remote_root, network: Optional[NetworkModel] = None):
+        super().__init__(remote_root,
+                         network or NetworkModel(bandwidth_mbps=34.0,
+                                                 rtt_ms=60.0, seed=1))
+
+
+class PeerTransport(Transport):
+    """A peer edge device (the paper's machine B): LAN-class link."""
+
+    kind = "peer"
+
+    def __init__(self, remote_root, network: Optional[NetworkModel] = None):
+        super().__init__(remote_root,
+                         network or NetworkModel(bandwidth_mbps=900.0,
+                                                 rtt_ms=2.0, seed=2))
+
+
+@dataclass
+class SyncedRegistry:
+    """A local registry backed by an ordered list of transports; pulls
+    try the cache, then each transport in order (peers before the repo —
+    the paper's edge-first pull)."""
+
+    cache_root: Path
+    transports: List[Transport] = field(default_factory=list)
+
+    def __post_init__(self):
+        from repro.core.registry import Registry
+        self.cache_root = Path(self.cache_root)
+        self.local = Registry(self.cache_root)
+
+    def pull(self, name: str, version: Optional[str] = None,
+             *, verify: bool = True):
+        report = None
+        versions = self.local.versions(name) \
+            if (self.cache_root / name).exists() else []
+        if not versions or (version and version not in versions):
+            for t in self.transports:
+                try:
+                    remote_versions = [v for n, v in t.list_remote()
+                                       if n == name]
+                    if not remote_versions:
+                        continue
+                    v = version or sorted(remote_versions)[-1]
+                    report = t.fetch(name, v, self.cache_root)
+                    break
+                except FileNotFoundError:
+                    continue
+            else:
+                raise FileNotFoundError(
+                    f"{name} not in cache or any transport")
+            # composed services: fetch stage deps too
+            import json
+            man = json.loads((self.cache_root / name / report.version
+                              / "manifest.json").read_text())
+            for ref in man.get("stages", []) or []:
+                self.pull(ref["name"], ref.get("version"), verify=verify)
+        svc = self.local.pull(name, version, verify=verify)
+        return svc, report
+
+    def publish(self, service, *, builder, config=None, stage_refs=None,
+                push_to: Optional[Transport] = None, overwrite=False):
+        man = self.local.publish(service, builder=builder, config=config,
+                                 stage_refs=stage_refs, overwrite=overwrite)
+        report = None
+        if push_to is not None:
+            report = push_to.push(service.name, service.version,
+                                  self.cache_root)
+        return man, report

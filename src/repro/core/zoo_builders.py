@@ -1,0 +1,111 @@
+"""Builders that wrap framework models as zoo services.
+
+These are the analogues of the paper's deployment example:
+``image classifier (InceptionV3) >> label decoder`` becomes
+``embedding classifier (assigned-arch backbone) >> label decoder``.
+Importing this module registers the builders with the registry.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core.registry import register_builder
+from repro.core.service import (Service, Signature, TensorSpec,
+                                spec_tree_of)
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.model import build
+
+
+@register_builder("model.lm")
+def lm_service(arch: str, variant: str = "", batch: int = -1,
+               seq: int = -1) -> Service:
+    """Next-token-logits service: {'tokens'} -> logits (B, L, V)."""
+    cfg = get_arch(arch, variant=variant)
+    model = build(cfg)
+
+    def fn(params, inputs):
+        logits, _ = T.forward_train(params, cfg, inputs["tokens"])
+        return logits
+
+    sig = Signature({"tokens": TensorSpec((batch, seq), "int32")},
+                    TensorSpec((batch, seq, cfg.vocab), "float32"))
+    return Service(name=f"lm_{arch}", fn=fn, signature=sig,
+                   description=f"next-token logits for {arch}",
+                   metadata={"arch": arch, "variant": variant,
+                             "builder": "model.lm"})
+
+
+@register_builder("model.classifier")
+def classifier_service(arch: str, n_classes: int, variant: str = "reduced",
+                       n_tokens: Optional[int] = None,
+                       d_embed: Optional[int] = None) -> Service:
+    """Embedding classifier (the InceptionV3 analogue): consumes frontend
+    patch/frame embeddings, mean-pools the backbone output, projects to
+    class logits. ``init_params(key)`` hangs off the service metadata."""
+    cfg = get_arch(arch, variant=variant)
+    assert cfg.frontend is not None, f"{arch} has no frontend stub"
+    n_tokens = n_tokens or cfg.frontend.n_tokens
+    d_embed = d_embed or cfg.frontend.d_embed
+
+    def fn(params, inputs):
+        x = T.embed_inputs(params["backbone"], cfg,
+                           embeddings=inputs["embeddings"])
+        x, _, _ = T._scan_blocks(params["backbone"], x, cfg, mode="train")
+        x = L.rms_norm(params["backbone"]["ln_f"], x, cfg.norm_eps)
+        pooled = jnp.mean(x.astype(jnp.float32), axis=1)
+        return L.linear(params["head"], pooled)
+
+    def init_params(key):
+        k1, k2 = jax.random.split(key)
+        return {"backbone": T.init_transformer(k1, cfg),
+                "head": L.init_linear(k2, cfg.d_model, n_classes,
+                                      jnp.float32)}
+
+    sig = Signature(
+        {"embeddings": TensorSpec((-1, n_tokens, d_embed), str(cfg.dtype))},
+        TensorSpec((-1, n_classes), "float32"))
+    return Service(name=f"classify_{arch}", fn=fn, signature=sig,
+                   description=f"{arch} backbone patch-embedding classifier "
+                               f"({n_classes} classes)",
+                   metadata={"arch": arch, "variant": variant,
+                             "n_classes": n_classes,
+                             "init_params": init_params,
+                             "builder": "model.classifier"})
+
+
+@register_builder("adapter.label_decoder")
+def label_decoder(n_classes: int) -> Service:
+    """The paper's 'decoding service for ImageNet': class vector ->
+    {class_id, confidence} in human-consumable form."""
+    def fn(_params, logits):
+        probs = jax.nn.softmax(logits, axis=-1)
+        return {"class_id": jnp.argmax(probs, axis=-1).astype(jnp.int32),
+                "confidence": jnp.max(probs, axis=-1)}
+
+    sig = Signature(
+        TensorSpec((-1, n_classes), "float32"),
+        {"class_id": TensorSpec((-1,), "int32"),
+         "confidence": TensorSpec((-1,), "float32")})
+    return Service(name="label_decoder", fn=fn, signature=sig,
+                   description="argmax + confidence label decoding",
+                   metadata={"builder": "adapter.label_decoder"})
+
+
+@register_builder("adapter.topk_decoder")
+def topk_decoder(n_classes: int, k: int = 5) -> Service:
+    def fn(_params, logits):
+        probs = jax.nn.softmax(logits, axis=-1)
+        vals, idx = jax.lax.top_k(probs, k)
+        return {"class_ids": idx.astype(jnp.int32), "confidences": vals}
+
+    sig = Signature(
+        TensorSpec((-1, n_classes), "float32"),
+        {"class_ids": TensorSpec((-1, k), "int32"),
+         "confidences": TensorSpec((-1, k), "float32")})
+    return Service(name=f"top{k}_decoder", fn=fn, signature=sig,
+                   metadata={"builder": "adapter.topk_decoder"})

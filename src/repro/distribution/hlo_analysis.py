@@ -1,0 +1,68 @@
+"""HLO text analysis: collective traffic extraction.
+
+``compiled.cost_analysis()`` has no collective-bytes term, so we parse the
+optimized (post-SPMD) HLO and sum result-shape bytes per collective op
+kind. The module is the per-device program, so totals are per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# e.g.:  %ag = bf16[4,128]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather-start|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute-start|collective-permute)\b")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (result shapes),
+    plus op counts under ``n_<kind>`` keys."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        out[kind] += _shape_bytes(shape_str)
+        out[f"n_{kind}"] += 1
+    return dict(out)
+
+
+def total_collective_bytes(stats: Dict[str, int]) -> int:
+    return sum(v for k, v in stats.items() if not k.startswith("n_"))
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> Dict[str, int]:
+    """Crude fusion-name histogram — useful for spotting remat recompute
+    (duplicate op stems) when iterating on §Perf."""
+    counts: Dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"^\s*(?:ROOT\s+)?%?([a-z][a-z0-9_.-]*)\s*=",
+                         hlo_text, re.M):
+        stem = m.group(1).split(".")[0]
+        counts[stem] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

@@ -1,0 +1,272 @@
+"""Sharding rules: logical activation names and parameter-path rules.
+
+Models call :func:`shard_activation` with a logical name; when an
+``ActivationRules`` context is active (set by the launcher), this applies
+``lax.with_sharding_constraint``. Outside a mesh context it is a no-op, so
+model code stays pure and CPU tests are unaffected.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+# --------------------------------------------------------------------- #
+# activation rules
+# --------------------------------------------------------------------- #
+# logical name -> PartitionSpec builder(batch_axes, model_axis)
+def default_activation_rules(batch_axes=("data",), model_axis="model",
+                             seq_axis=None):
+    b = tuple(batch_axes)
+    batch = b if len(b) > 1 else b[0]
+    return {
+        # (B, L, D)
+        "act_btd": P(batch, seq_axis, None),
+        # (B, L, H, hd)
+        "act_heads": P(batch, seq_axis, model_axis, None),
+        # (B, L, V)
+        "logits": P(batch, seq_axis, model_axis),
+        # MoE dispatch (E, C, d)
+        "moe_expert": P(model_axis, None, None),
+        # grouped MoE dispatch (G, E, C, d): groups on data, experts on model
+        "moe_expert_grouped": P(batch, model_axis, None, None),
+        # KV cache (B, S, Hkv, hd)
+        "kv_cache": P(batch, seq_axis, model_axis, None),
+        # SSM state (B, nh, p, n)
+        "ssm_state": P(batch, model_axis, None, None),
+    }
+
+
+class ActivationRules:
+    def __init__(self, mesh: Mesh, rules: dict):
+        self.mesh = mesh
+        self.rules = rules
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = ActivationRules(mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.rules = prev
+
+
+def current_rules() -> Optional[ActivationRules]:
+    return getattr(_ctx, "rules", None)
+
+
+def shard_activation(x, name: str):
+    ctx = current_rules()
+    if ctx is None or name not in ctx.rules:
+        return x
+    spec = ctx.rules[name]
+    # Drop constraint if rank mismatch (e.g. flattened activations).
+    if hasattr(x, "ndim") and len(spec) != x.ndim:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, spec))
+    except ValueError:
+        return x
+
+
+# --------------------------------------------------------------------- #
+# parameter rules (path-pattern -> PartitionSpec)
+# --------------------------------------------------------------------- #
+# Patterns are matched against '/'-joined pytree paths, first match wins.
+# Each rule value is a spec or a LIST of candidate specs — the first whose
+# sharded dims all divide evenly is used (e.g. expert-parallel MoE falls
+# back to tensor-parallel experts when E % mesh_model != 0).
+# None entries in the spec mean replicated on that dim.
+def default_param_rules(model_axis="model", zero_axis=None):
+    m = model_axis
+    rules = [
+        # embeddings / unembedding: shard vocab
+        (r".*embed.*/table", (m, None)),
+        (r".*lm_head/w", (None, m)),
+        # attention
+        (r".*attn.*/wq/w", (None, m)),
+        (r".*attn.*/wk/w", (None, m)),
+        (r".*attn.*/wv/w", (None, m)),
+        (r".*attn.*/wo/w", (m, None)),
+        (r".*attn.*/w[qkv]/b", (m,)),
+        # dense MLP: d_ff on model
+        (r".*mlp/wi/w", (None, m)),
+        (r".*mlp/wg/w", (None, m)),
+        (r".*mlp/wo/w", (m, None)),
+        # MoE: experts on model axis (expert parallelism); tensor-parallel
+        # experts (d_expert on model) when E doesn't divide the axis
+        (r".*moe/router/w", (None, None)),
+        (r".*moe/w[ig]$", [(m, None, None), (None, None, m)]),
+        (r".*moe/wo$", [(m, None, None), (None, m, None)]),
+        (r".*moe/shared/wi/w", (None, m)),
+        (r".*moe/shared/wg/w", (None, m)),
+        (r".*moe/shared/wo/w", (m, None)),
+        # SSM: inner dim on model; fall back to the input dim when the
+        # packed projection width doesn't divide (e.g. 256-way flat axis)
+        (r".*ssm/in_proj/w", [(None, m), (m, None)]),
+        (r".*ssm/out_proj/w", (m, None)),
+        (r".*ssm/conv_w", (m, None)),
+        (r".*ssm/conv_b", (m,)),
+        (r".*ssm/norm/scale", (m,)),
+        # frontend projector
+        (r".*frontend_proj/w", (None, m)),
+        # norms and scalars: replicated
+        (r".*", None),
+    ]
+    return rules
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pk in path:
+        if hasattr(pk, "key"):
+            parts.append(str(pk.key))
+        elif hasattr(pk, "idx"):
+            parts.append(str(pk.idx))
+        else:
+            parts.append(str(pk))
+    return "/".join(parts)
+
+
+def _axis_size(ax, axis_sizes) -> int:
+    return int(np.prod([axis_sizes[a] for a in
+                        (ax if isinstance(ax, tuple) else (ax,))]))
+
+
+def _fit_spec(spec, shape, axis_sizes):
+    """Pad a spec to rank; returns (fixed_spec, fully_ok). Non-divisible
+    sharded dims are replicated (fully_ok=False so candidates can fall
+    through)."""
+    if spec is None:
+        return (None,) * len(shape), True
+    spec = tuple(spec)
+    if len(spec) < len(shape):
+        spec = (None,) * (len(shape) - len(spec)) + spec
+    elif len(spec) > len(shape):
+        return (None,) * len(shape), False
+    fixed, ok = [], True
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+        elif shape[dim] % _axis_size(ax, axis_sizes) == 0:
+            fixed.append(ax)
+        else:
+            fixed.append(None)
+            ok = False
+    return tuple(fixed), ok
+
+
+def spec_for_path(path_str: str, shape, rules, axis_sizes) -> P:
+    for pat, spec in rules:
+        if re.fullmatch(pat, path_str):
+            candidates = spec if isinstance(spec, list) else [spec]
+            fallback = None
+            for cand in candidates:
+                fixed, ok = _fit_spec(cand, shape, axis_sizes)
+                if ok:
+                    return P(*fixed)
+                if fallback is None:
+                    fallback = fixed
+            return P(*fallback)
+    return P()
+
+
+def add_zero_sharding(specs_tree, shapes_tree, mesh: Mesh,
+                      zero_axes=("data",)):
+    """ZeRO-style: additionally shard each leaf's largest still-replicated
+    dim over ``zero_axes`` (used for optimizer state / fsdp params)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    z = int(np.prod([axis_sizes[a] for a in zero_axes]))
+    zax = zero_axes if len(zero_axes) > 1 else zero_axes[0]
+
+    def one(sharding, leaf):
+        shape = leaf.shape
+        spec = list(sharding.spec) + [None] * (len(shape) - len(sharding.spec))
+        best, best_size = None, 0
+        for dim in range(len(shape)):
+            if spec[dim] is None and shape[dim] % z == 0 \
+                    and shape[dim] > best_size:
+                best, best_size = dim, shape[dim]
+        if best is not None:
+            spec[best] = zax
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs_tree, shapes_tree)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch_axes=("data",),
+                    *, seq_axis=None, model_axis="model"):
+    """Decode/prefill cache sharding. Leaves are recognised by their cache
+    key: k/v/xk/xv (nb, B, S, H, hd), pos (nb, B, S), step (nb, B),
+    conv (nb, B, K-1, C), ssm (nb, B, nh, p, n). ``seq_axis`` shards the
+    KV sequence dim instead of batch for batch=1 long-context decode."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b = tuple(batch_axes)
+    batch = b if len(b) > 1 else b[0]
+    m = model_axis
+    # if the sequence axis uses the model axis (KV-sequence sharding for
+    # decode — §Perf), the heads dim must not also use it
+    seq_axes = (seq_axis if isinstance(seq_axis, tuple)
+                else ((seq_axis,) if seq_axis else ()))
+    heads = None if model_axis in seq_axes else m
+    by_name = {
+        "k": (None, batch, seq_axis, heads, None),
+        "v": (None, batch, seq_axis, heads, None),
+        "xk": (None, batch, seq_axis, heads, None),
+        "xv": (None, batch, seq_axis, heads, None),
+        "pos": (None, batch, seq_axis),
+        "step": (None, batch),
+        "k_scale": (None, batch, seq_axis, heads),
+        "v_scale": (None, batch, seq_axis, heads),
+        "conv": (None, batch, None, m),
+        "ssm": (None, batch, m, None, None),
+    }
+
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        spec = by_name.get(name)
+        if spec is None:
+            return NamedSharding(mesh, P())
+        fixed, _ = _fit_spec(spec, leaf.shape, axis_sizes)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh, batch_axes=("data",)):
+    """Host batch: shard the leading (global batch) dim."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b = tuple(batch_axes)
+    batch = b if len(b) > 1 else b[0]
+
+    def one(leaf):
+        spec = (batch,) + (None,) * (len(leaf.shape) - 1)
+        fixed, _ = _fit_spec(spec, leaf.shape, axis_sizes)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def param_shardings(params_tree, mesh: Mesh, rules=None):
+    """Map a (shaped) param pytree to NamedShardings via path rules.
+
+    Dims whose size is not divisible by the mesh axis are replicated."""
+    rules = rules or default_param_rules()
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        spec = spec_for_path(_path_str(path), leaf.shape, rules, axis_sizes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)

@@ -1,0 +1,110 @@
+"""Pallas TPU decode-attention kernel (flash-decoding style).
+
+One query token attends over a long KV cache. TPU adaptation:
+* The KV sequence is the sequential grid dimension; each step stages one
+  (bk, hd) K/V tile into VMEM and updates the online-softmax state held in
+  VMEM scratch — the cache itself never leaves HBM more than once.
+* GQA is exploited: all G query heads of a KV group are processed together
+  as the (G, hd) "matrix" side of the MXU matmuls, so the arithmetic
+  intensity per KV byte is G× that of per-head decode — this kernel is the
+  memory-roofline workhorse for ``decode_32k``/``long_500k``.
+* Ring-buffer validity (slot position array) and the sliding window are
+  applied as masks from a position tile, so the same kernel serves full
+  and windowed caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   bk: int, G: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[0]                                  # (bk,)
+    q_pos = qpos_ref[0]                               # scalar
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= q_pos)
+    if window:
+        valid &= pos > (q_pos - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)         # (G, bk)
+
+    m_prev = m_scr[:, 0:1]
+    l_prev = l_scr[:, 0:1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = jnp.broadcast_to(alpha * l_prev
+                                  + jnp.sum(p, axis=1, keepdims=True),
+                                  l_scr.shape)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, pos, q_pos, *, window=0, bk=128,
+                            interpret=False):
+    """q: (B, Hq, hd); k, v: (B, Hkv, S, hd); pos: (B, S); q_pos: (B,)."""
+    B, Hq, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    # regroup q to (B*Hkv, G, hd) so one grid step covers a KV group
+    qg = q.reshape(B, Hkv, G, hd).reshape(B * Hkv, G, hd)
+    kg = k.reshape(B * Hkv, 1, S, hd)
+    vg = v.reshape(B * Hkv, 1, S, hd)
+    posg = jnp.repeat(pos, Hkv, axis=0)               # (B*Hkv, S)
+    qposg = jnp.repeat(q_pos, Hkv, axis=0)            # (B*Hkv,)
+
+    grid = (B * Hkv, 1, S // bk)
+    kernel = functools.partial(_decode_kernel, scale=1.0 / (hd ** 0.5),
+                               window=window, bk=bk, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, h, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, h, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg, posg, qposg)
+    return out.reshape(B, Hq, hd)

@@ -1,0 +1,29 @@
+"""Oracle for single-token GQA decode attention over a (ring-buffer) cache.
+
+q: (B, Hq, hd) — one new token per sequence
+k, v: (B, Hkv, S, hd) — cache in per-head layout
+pos: (B, S) absolute position stored in each slot (-1 = empty)
+q_pos: (B,) absolute position of the query token
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_reference(q, k, v, pos, q_pos, *, window=0):
+    B, Hq, hd = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kf) \
+        / jnp.sqrt(hd)
+    valid = (pos >= 0) & (pos <= q_pos[:, None])
+    if window:
+        valid &= pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vf).astype(q.dtype)

@@ -1,0 +1,223 @@
+"""Pallas TPU flash-attention kernel (prefill / training path).
+
+TPU adaptation of the classic GPU algorithm:
+* Q/K/V tiles are staged HBM->VMEM by ``BlockSpec`` (the analogue of the
+  GPU's shared-memory staging, but driven by the sequential grid).
+* The score matmul and the PV matmul hit the MXU; tiles default to
+  (128, 128) so both matmul dims are systolic-array aligned.
+* The KV loop is the *last* grid dimension — on TPU the grid is executed
+  sequentially on a core, so the online-softmax running state (m, l, acc)
+  lives in VMEM scratch and persists across KV iterations; output is
+  written once on the final iteration.
+* Causal tiles above the diagonal are skipped with ``pl.when`` (no VMEM
+  traffic, no MXU work), halving compute for long sequences.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128  # TPU lane width: scratch last-dims padded to this
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Tile-level skip: strictly-above-diagonal (causal) or fully outside
+    # the sliding window.
+    q_lo, q_hi = iq * bq, iq * bq + bq - 1
+    k_lo = ik * bk
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_hi)
+    if window:
+        live = jnp.logical_and(live, (ik * bk + bk - 1) > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal or window:
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0:1]                          # (bq, 1)
+        l_prev = l_scr[:, 0:1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)       # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)                 # fully-masked rows
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _flash_gqa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      scale: float, causal: bool, window: int,
+                      bq: int, bk: int, G: int):
+    """GQA-native: one grid row covers a whole KV-head group — the K/V
+    tiles are staged into VMEM ONCE for all G query heads (G× less KV
+    HBM traffic than head-expanded MHA, the same win the decode kernel
+    exploits)."""
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo, q_hi = iq * bq, iq * bq + bq - 1
+    k_lo = ik * bk
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_hi)
+    if window:
+        live = jnp.logical_and(live, (ik * bk + bk - 1) > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(G * bq, -1)   # (G·bq, hd)
+        k = k_ref[0].astype(jnp.float32)                       # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal or window:
+            rows = jax.lax.broadcasted_iota(jnp.int32, (G * bq, bk), 0)
+            qpos = q_lo + jnp.mod(rows, bq)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (G * bq, bk), 1)
+            mask = jnp.ones((G * bq, bk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0:1]
+        l_prev = l_scr[:, 0:1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            alpha * l_prev + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        hd = o_ref.shape[-1]
+        o_ref[0] = (acc_scr[...] / l).reshape(G, bq, hd).astype(o_ref.dtype)
+
+
+def flash_attention_gqa_pallas(q, k, v, *, causal=True, window=0,
+                               bq=128, bk=128, interpret=False):
+    """q: (B, Hq, L, hd); k, v: (B, Hkv, L, hd) — no head expansion."""
+    B, Hq, Lq, hd = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(bq, Lq)
+    bk = min(bk, Lk)
+    assert Lq % bq == 0 and Lk % bk == 0
+    # regroup: (B·Hkv, G, L, hd) so one grid row shares the KV tiles
+    qg = q.reshape(B, Hkv, G, Lq, hd).reshape(B * Hkv, G, Lq, hd)
+    kg = k.reshape(B * Hkv, Lk, hd)
+    vg = v.reshape(B * Hkv, Lk, hd)
+    grid = (B * Hkv, Lq // bq, Lk // bk)
+
+    kernel = functools.partial(_flash_gqa_kernel, scale=1.0 / (hd ** 0.5),
+                               causal=causal, window=window, bq=bq, bk=bk,
+                               G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, bq, hd), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, bq, hd), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, Lq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * bq, _LANES), jnp.float32),
+            pltpu.VMEM((G * bq, _LANES), jnp.float32),
+            pltpu.VMEM((G * bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(B, Hq, Lq, hd)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0,
+                           bq=128, bk=128, interpret=False):
+    """q, k, v: (B, H, L, hd) (same head count — GQA expanded by ops.py)."""
+    B, H, Lq, hd = q.shape
+    Lk = k.shape[2]
+    bq = min(bq, Lq)
+    bk = min(bk, Lk)
+    assert Lq % bq == 0 and Lk % bk == 0, (Lq, bq, Lk, bk)
+    grid = (B, H, Lq // bq, Lk // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (hd ** 0.5), causal=causal,
+        window=window, bq=bq, bk=bk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lq, hd), q.dtype),
+        scratch_shapes=[
+            # online-softmax running state, persists across the KV grid dim
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running max m
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

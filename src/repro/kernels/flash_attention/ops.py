@@ -1,0 +1,37 @@
+"""jit'd wrapper: GQA layout plumbing around the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_gqa_pallas, flash_attention_pallas)
+
+
+def mha_attention(q, k, v, *, causal=True, window=0, use_pallas=False,
+                  interpret=True, bq=128, bk=128):
+    """q, k, v: (B, H/Hkv, L, hd) per-head layout. The Pallas path is
+    GQA-native (no head expansion — KV tiles staged once per group)."""
+    Hq, Hkv = q.shape[1], k.shape[1]
+    if use_pallas:
+        if Hkv != Hq:
+            return flash_attention_gqa_pallas(
+                q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                interpret=interpret)
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      bq=bq, bk=bk, interpret=interpret)
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return _ref.attention_reference(q, k, v, causal=causal, window=window)
+
+
+def gqa_flash(q, k, v, *, causal=True, window=0, **kw):
+    """(B, L, H, hd) model layout -> kernel layout and back."""
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = mha_attention(qt, kt, vt, causal=causal, window=window, **kw)
+    return jnp.transpose(out, (0, 2, 1, 3))

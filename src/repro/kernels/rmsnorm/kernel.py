@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused residual-add + RMSNorm.
+
+Bandwidth-bound fusion: the unfused HLO reads the residual stream twice
+(add, then norm) and writes the intermediate back to HBM; the fused kernel
+streams one (bn, d) tile through VMEM, does add + reduce + scale on the
+VPU in fp32, and writes both the normed output and the updated residual —
+1 read + 2 writes instead of 2 reads + 3 writes per element.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, res_ref, scale_ref, y_ref, newres_ref, *,
+                    eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    r = res_ref[...].astype(jnp.float32)
+    s = scale_ref[...].astype(jnp.float32)
+    t = x + r
+    var = jnp.mean(t * t, axis=-1, keepdims=True)
+    y = t * jax.lax.rsqrt(var + eps) * s[None, :]
+    y_ref[...] = y.astype(y_ref.dtype)
+    newres_ref[...] = t.astype(newres_ref.dtype)
+
+
+def fused_rmsnorm_pallas(x, residual, scale, *, eps=1e-5, bn=128,
+                         interpret=False):
+    N, d = x.shape
+    bn = min(bn, N)
+    assert N % bn == 0
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((N, d), x.dtype),
+                   jax.ShapeDtypeStruct((N, d), x.dtype)],
+        interpret=interpret,
+    )(x, residual, scale)

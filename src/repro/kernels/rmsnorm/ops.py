@@ -1,0 +1,13 @@
+"""jit'd wrapper for fused residual + RMSNorm."""
+from __future__ import annotations
+
+from repro.kernels.rmsnorm import ref as _ref
+from repro.kernels.rmsnorm.kernel import fused_rmsnorm_pallas
+
+
+def fused_rmsnorm(x, residual, scale, *, eps=1e-5, use_pallas=False,
+                  interpret=True, bn=128):
+    if use_pallas:
+        return fused_rmsnorm_pallas(x, residual, scale, eps=eps, bn=bn,
+                                    interpret=interpret)
+    return _ref.fused_rmsnorm_reference(x, residual, scale, eps=eps)

@@ -1,0 +1,14 @@
+"""Oracle for fused residual-add + RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def fused_rmsnorm_reference(x, residual, scale, eps=1e-5):
+    """y = rmsnorm(x + residual) * scale; also returns the new residual
+    stream (x + residual). x, residual: (N, d)."""
+    r = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    var = jnp.mean(r * r, axis=-1, keepdims=True)
+    y = r * lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype), r.astype(x.dtype)

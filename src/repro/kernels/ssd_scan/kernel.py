@@ -1,0 +1,127 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060):
+* The chunk axis is the sequential grid dimension; the inter-chunk
+  recurrent state (p, n) lives in VMEM scratch and persists across grid
+  steps — the TPU analogue of the GPU kernel's persistent-CTA carry.
+* All four inner products are expressed as (chunk x n/p) matmuls so the
+  quadratic *dual* form runs on the MXU; with chunk/p/n multiples of 128
+  every matmul is systolic-aligned. The elementwise decay algebra runs on
+  the VPU in fp32.
+* One (batch, head) pair per grid row keeps the working set
+  (4·chunk·max(p,n) fp32) comfortably inside VMEM.
+
+Outputs y per position and the final state (for prefill -> decode
+handoff), exactly matching ``ref.ssd_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref,
+                y_ref, state_ref, s_scr, *, chunk: int):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # (chunk, p)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # (chunk,)
+    A = A_ref[0].astype(jnp.float32)             # scalar
+    Bm = B_ref[0, 0, 0].astype(jnp.float32)      # (chunk, n)
+    Cm = C_ref[0, 0, 0].astype(jnp.float32)      # (chunk, n)
+    D = D_ref[0].astype(jnp.float32)
+
+    dA = dt * A                                  # (chunk,)
+    cum = jnp.cumsum(dA)                         # inclusive
+    # L[i, j] = exp(cum_i - cum_j) for j <= i else 0
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(lj <= li, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+
+    xdt = x * dt[:, None]                        # (chunk, p)
+    # intra-chunk dual form: (C B^T ⊙ L) @ (dt·x)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * Lmat, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: contribution of the carried state
+    state = s_scr[...]                           # (p, n)
+    y_off = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(cum)[:, None]
+    y = y + x * D
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update: s' = exp(cum_end)·s + Σ_j exp(cum_end - cum_j)·dt_j x_j B_j^T
+    decay = jnp.exp(cum[-1] - cum)               # (chunk,)
+    upd = jax.lax.dot_general(xdt * decay[:, None], Bm,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    s_scr[...] = state * jnp.exp(cum[-1]) + upd
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        state_ref[0, 0] = s_scr[...]
+
+
+def ssd_pallas(x, dt, A, B, C, D=None, *, chunk=64, initial_state=None,
+               interpret=False):
+    """Same contract as ``ref.ssd_reference``; initial_state must be None
+    (the model's prefill path always starts from zero state)."""
+    assert initial_state is None, "pallas path starts from zero state"
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+    if D is None:
+        D = jnp.zeros((h,), jnp.float32)
+
+    # layout: chunk-major per (batch, head)
+    xk = x.transpose(0, 2, 1, 3).reshape(b, h, nc, chunk, p)
+    dtk = dt.transpose(0, 2, 1).reshape(b, h, nc, chunk)
+    Bk = B.transpose(0, 2, 1, 3).reshape(b, g, nc, chunk, n)
+    Ck = C.transpose(0, 2, 1, 3).reshape(b, g, nc, chunk, n)
+
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci, rep=rep: (hi,)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci, rep=rep: (bi, hi // rep, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci, rep=rep: (bi, hi // rep, ci, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, chunk, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, jnp.asarray(A, jnp.float32), Bk, Ck,
+      jnp.asarray(D, jnp.float32))
+
+    y = y.reshape(b, h, l, p).transpose(0, 2, 1, 3)
+    return y, state

@@ -1,0 +1,34 @@
+"""Public entry points for the SSD scan.
+
+``ssd``/``ssd_step`` dispatch to the Pallas TPU kernel when requested (and
+validated via interpret mode in tests) or to the pure-jnp oracle — which is
+also what multi-pod dry-runs lower, since Pallas CPU lowering is not
+representative of TPU codegen.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan import ref as _ref
+
+_USE_PALLAS = False  # toggled by repro.kernels.set_backend
+
+
+def set_use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+def ssd(x, dt, A, B, C, D=None, *, chunk=64, initial_state=None,
+        use_pallas=None):
+    use = _USE_PALLAS if use_pallas is None else use_pallas
+    if use:
+        from repro.kernels.ssd_scan import kernel as _k
+        return _k.ssd_pallas(x, dt, A, B, C, D, chunk=chunk,
+                             initial_state=initial_state, interpret=True)
+    return _ref.ssd_reference(x, dt, A, B, C, D, chunk=chunk,
+                              initial_state=initial_state)
+
+
+def ssd_step(state, x, dt, A, B, C, D=None):
+    return _ref.ssd_decode_step(state, x, dt, A, B, C, D)

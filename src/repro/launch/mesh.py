@@ -1,0 +1,28 @@
+"""Production mesh definition (TPU v5e pods).
+
+A function, not a module-level constant — importing this module must never
+touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,    # FLOP/s
+    "hbm_bandwidth": 819e9,       # B/s
+    "ici_link_bandwidth": 50e9,   # B/s per link
+    "hbm_bytes": 16 * 1024**3,    # 16 GB
+}

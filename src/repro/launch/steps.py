@@ -1,0 +1,168 @@
+"""Shared step-construction for launchers and the dry-run: resolve an
+(arch x input-shape) pair to (step_fn, sharded input ShapeDtypeStructs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distribution.sharding import (add_zero_sharding, batch_shardings,
+                                         cache_shardings,
+                                         default_activation_rules,
+                                         param_shardings)
+from repro.launch.mesh import batch_axes as mesh_batch_axes
+from repro.models.model import Model, build
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.train_loop import make_train_step
+
+
+class ShapeSkip(Exception):
+    """This (arch x shape) pair is skipped by design (see DESIGN.md)."""
+
+
+def resolve_config(arch: str, shape_name: str) -> ModelConfig:
+    shape = SHAPES[shape_name]
+    cfg = get_arch(arch)
+    if shape_name == "long_500k":
+        if cfg.family == "encdec":
+            raise ShapeSkip("enc-dec speech decoder: 512k-token decode is "
+                            "out of the model family's envelope (DESIGN.md)")
+        if cfg.family in ("dense", "vlm") and not cfg.sliding_window:
+            # sub-quadratic requirement: sliding-window variant
+            cfg = get_arch(arch, variant="swa")
+    if shape.mode == "train":
+        cfg = cfg.replace(remat=True)
+    return cfg
+
+
+def _with_shardings(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def depth_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """Scan trip counts, per scan unit (used for cost extrapolation —
+    XLA cost analysis counts a while-loop body once)."""
+    from repro.models.transformer import n_blocks
+    if cfg.family == "encdec":
+        return {"enc": cfg.encoder.n_layers, "dec": cfg.n_layers}
+    return {"blocks": n_blocks(cfg)}
+
+
+def with_depth(cfg: ModelConfig, counts: Dict[str, int]) -> ModelConfig:
+    from repro.models.transformer import block_spec
+    if cfg.family == "encdec":
+        return cfg.replace(
+            n_layers=counts["dec"],
+            encoder=dataclasses.replace(cfg.encoder,
+                                        n_layers=counts["enc"]))
+    return cfg.replace(n_layers=counts["blocks"] * len(block_spec(cfg)))
+
+
+def apply_opts(cfg: ModelConfig, opts: Dict[str, Any]) -> ModelConfig:
+    """Optimization knobs explored in §Perf (beyond the paper-faithful
+    baseline)."""
+    if opts.get("moe_group") and cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  group_routing=True))
+    if opts.get("ssd_chunk") and cfg.ssm is not None:
+        cfg = cfg.replace(ssm=dataclasses.replace(cfg.ssm,
+                                                  chunk=opts["ssd_chunk"]))
+    if opts.get("attn_block"):
+        cfg = cfg.replace(attn_block=opts["attn_block"])
+    if opts.get("kv_quant"):
+        cfg = cfg.replace(kv_quant=True)
+    return cfg
+
+
+def build_step(arch: str, shape_name: str, mesh, *, zero: bool = False,
+               microbatch: int = 0, cfg_transform=None, opts=None
+               ) -> Tuple[Any, Tuple, ModelConfig, Dict[str, Any]]:
+    """Returns (step_fn, sharded_arg_specs, cfg, info)."""
+    opts = opts or {}
+    shape = SHAPES[shape_name]
+    cfg = resolve_config(arch, shape_name)
+    cfg = apply_opts(cfg, opts)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    model = build(cfg)
+    b_axes = mesh_batch_axes(mesh)
+    specs = model.input_specs(shape)
+    info: Dict[str, Any] = {"mode": shape.mode, "variant":
+                            ("swa" if cfg.sliding_window else "")}
+
+    # long-context batch=1: shard the KV sequence instead of batch
+    seq_axis = "data" if (shape.is_decode and shape.global_batch == 1) \
+        else None
+    if opts.get("kv_seq_shard") and shape.is_decode:
+        # §Perf: KV-sequence sharding over the (otherwise idle for the
+        # cache) model axis — wins when n_kv_heads < mesh model size
+        seq_axis = ("data", "model") if seq_axis else "model"
+
+    if shape.mode == "train":
+        opt = AdamW(lr=cosine_schedule(3e-4, 100, 10_000))
+        step_fn = make_train_step(model, opt, microbatch=microbatch,
+                                  unroll_micro=opts.get("unroll_micro",
+                                                        False))
+        state_shapes = jax.eval_shape(
+            lambda k: {"params": model.init(k),
+                       "opt": opt.init(model.init(k)),
+                       "step": jnp.zeros((), jnp.int32)},
+            jax.random.PRNGKey(0))
+        state_sh = param_shardings(state_shapes, mesh)
+        if zero:
+            opt_sh = {"m": add_zero_sharding(state_sh["opt"]["m"],
+                                             state_shapes["opt"]["m"], mesh,
+                                             zero_axes=b_axes),
+                      "v": add_zero_sharding(state_sh["opt"]["v"],
+                                             state_shapes["opt"]["v"], mesh,
+                                             zero_axes=b_axes),
+                      "step": state_sh["opt"]["step"]}
+            par_sh = add_zero_sharding(state_sh["params"],
+                                       state_shapes["params"], mesh,
+                                       zero_axes=b_axes)
+            state_sh = {"params": par_sh, "opt": opt_sh,
+                        "step": state_sh["step"]}
+        batch_sh = batch_shardings(specs["batch"], mesh, b_axes)
+        args = (_with_shardings(state_shapes, state_sh),
+                _with_shardings(specs["batch"], batch_sh))
+        return step_fn, args, cfg, info
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    rules = None
+    if opts.get("flat_model") and shape.is_decode \
+            and shape.global_batch == 1:
+        # batch=1: the data axis is idle for params — flatten (data, model)
+        # into one 256-way model axis so weights shard 16x further
+        from repro.distribution.sharding import default_param_rules
+        rules = default_param_rules(model_axis=tuple(mesh.axis_names))
+    par_sh = param_shardings(params_shapes, mesh, rules=rules)
+    params_sds = _with_shardings(params_shapes, par_sh)
+
+    if shape.mode == "prefill":
+        batch_sh = batch_shardings(specs["batch"], mesh, b_axes)
+        cache_sh = cache_shardings(specs["cache"], mesh, b_axes,
+                                   seq_axis=seq_axis)
+        args = (params_sds,
+                _with_shardings(specs["batch"], batch_sh),
+                _with_shardings(specs["cache"], cache_sh))
+        return model.prefill, args, cfg, info
+
+    # decode
+    token_sh = batch_shardings(specs["token"], mesh, b_axes)
+    cache_sh = cache_shardings(specs["cache"], mesh, b_axes,
+                               seq_axis=seq_axis)
+    args = (params_sds,
+            _with_shardings(specs["token"], token_sh),
+            _with_shardings(specs["cache"], cache_sh))
+    return model.decode_step, args, cfg, info
+
+
+def activation_rules_for(mesh, shape: ShapeConfig):
+    b_axes = mesh_batch_axes(mesh)
+    return default_activation_rules(batch_axes=b_axes)

@@ -1,0 +1,216 @@
+"""Encoder–decoder backbone (seamless-m4t class): bidirectional encoder over
+frontend frame embeddings + autoregressive text decoder with cross-attention.
+
+The audio frontend (mel + conv feature extractor) is a STUB per the brief:
+``input_specs()`` supplies precomputed frame embeddings (B, T_src, d_embed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distribution.sharding import shard_activation
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _init_enc_layer(key, cfg: ModelConfig):
+    e = cfg.encoder
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+        "attn": L.init_attention(ks[0], cfg, n_heads=e.n_heads,
+                                 n_kv_heads=e.n_kv_heads),
+        "ln2": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, e.d_ff, cfg.p_dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+        "self_attn": L.init_attention(ks[0], cfg),
+        "ln_x": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+        "cross_attn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.p_dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder.n_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "frontend_proj": L.init_linear(ks[2], cfg.frontend.d_embed,
+                                       cfg.d_model, cfg.p_dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_ln": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+        "embed": L.init_embedding(ks[3], cfg.vocab, cfg.d_model, cfg.p_dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "ln_f": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+        "lm_head": L.init_linear(ks[4], cfg.d_model, cfg.vocab, cfg.p_dtype),
+    }
+
+
+# --------------------------------------------------------------------- #
+# encoder
+# --------------------------------------------------------------------- #
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T_src, d_embed) -> memory (B, T_src, d)."""
+    x = L.linear(params["frontend_proj"], frames).astype(cfg.act_dtype)
+    x = shard_activation(x, "act_btd")
+    e = cfg.encoder
+    hd = cfg.d_model // e.n_heads
+
+    def body(x, lp):
+        h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+        B, T, _ = h.shape
+        q = L.linear(lp["attn"]["wq"], h).reshape(B, T, -1, hd)
+        k = L.linear(lp["attn"]["wk"], h).reshape(B, T, -1, hd)
+        v = L.linear(lp["attn"]["wv"], h).reshape(B, T, -1, hd)
+        pos = jnp.arange(T)
+        if cfg.rope:
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+        y = L.gqa_attention(q, k, v, causal=False)          # bidirectional
+        x = x + L.linear(lp["attn"]["wo"], y.reshape(B, T, -1))
+        h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h)
+        return shard_activation(x, "act_btd"), None
+
+    if cfg.unroll_layers:
+        nl = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+        for i in range(nl):
+            lp = jax.tree.map(lambda t: t[i], params["enc_layers"])
+            x, _ = body(x, lp)
+    else:
+        x, _ = lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(params["enc_ln"], x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------- #
+# decoder
+# --------------------------------------------------------------------- #
+def _cross_kv(lp, memory, cfg: ModelConfig):
+    B, S, _ = memory.shape
+    k = L.linear(lp["cross_attn"]["wk"], memory).reshape(B, S, -1, cfg.hd)
+    v = L.linear(lp["cross_attn"]["wv"], memory).reshape(B, S, -1, cfg.hd)
+    return k, v
+
+
+def _dec_block(lp, x, cfg: ModelConfig, *, mode, cache=None, memory=None):
+    """One decoder layer. cache: {'self': kv_cache, 'xk': ..., 'xv': ...}."""
+    new_cache: Dict[str, Any] = {}
+    h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    if mode == "train":
+        y, _ = L.attention_block(lp["self_attn"], h, cfg)
+    elif mode == "prefill":
+        y, nc = L.prefill_into_cache(lp["self_attn"], h, cfg, cache["self"])
+        new_cache["self"] = nc
+    else:
+        y, nc = L.attention_block(lp["self_attn"], h, cfg,
+                                  cache=cache["self"])
+        new_cache["self"] = nc
+    x = x + y
+
+    h = L.rms_norm(lp["ln_x"], x, cfg.norm_eps)
+    if mode == "decode":
+        xk, xv = cache["xk"], cache["xv"]
+        new_cache["xk"], new_cache["xv"] = xk, xv
+    else:
+        xk, xv = _cross_kv(lp, memory, cfg)
+        if mode == "prefill":
+            new_cache["xk"], new_cache["xv"] = xk, xv
+    B, Lq = h.shape[:2]
+    q = L.linear(lp["cross_attn"]["wq"], h).reshape(B, Lq, -1, cfg.hd)
+    y = L.gqa_attention(q, xk, xv, causal=False)
+    x = x + L.linear(lp["cross_attn"]["wo"], y.reshape(B, Lq, -1))
+
+    h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp(lp["mlp"], h)
+    x = shard_activation(x, "act_btd")
+    return x, (new_cache or None)
+
+
+def make_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      src_len: int, dtype=None):
+    dtype = dtype or cfg.act_dtype
+    one = {
+        "self": L.make_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.hd,
+                                dtype),
+        "xk": jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "xv": jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+
+
+def _scan_dec(params, x, cfg, *, mode, cache=None, memory=None):
+    fn = functools.partial(_dec_block, cfg=cfg, mode=mode, memory=memory)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+    if cfg.unroll_layers:
+        nl = jax.tree.leaves(params["dec_layers"])[0].shape[0]
+        new_caches = []
+        for i in range(nl):
+            lp = jax.tree.map(lambda t: t[i], params["dec_layers"])
+            c = None if cache is None else \
+                jax.tree.map(lambda t: t[i], cache)
+            x, nc = fn(lp, x) if mode == "train" else fn(lp, x, cache=c)
+            if nc is not None:
+                new_caches.append(nc)
+        new_cache = None if not new_caches else \
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, new_cache
+    if mode == "train":
+        def body(x, lp):
+            x, _ = fn(lp, x)
+            return x, None
+        x, _ = lax.scan(body, x, params["dec_layers"])
+        return x, None
+
+    def body(x, xs):
+        lp, c = xs
+        x, nc = fn(lp, x, cache=c)
+        return x, nc
+    x, new_cache = lax.scan(body, x, (params["dec_layers"], cache))
+    return x, new_cache
+
+
+def _logits(params, cfg, x):
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return shard_activation(
+        L.linear(params["lm_head"], x).astype(jnp.float32), "logits")
+
+
+def forward_train(params, cfg: ModelConfig, tokens, embeddings):
+    """embeddings: (B, T_src, d_embed) audio frames; tokens: (B, L)."""
+    memory = encode(params, cfg, embeddings)
+    x = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
+    x = shard_activation(x, "act_btd")
+    x, _ = _scan_dec(params, x, cfg, mode="train", memory=memory)
+    return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, embeddings):
+    memory = encode(params, cfg, embeddings)
+    x = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
+    x = shard_activation(x, "act_btd")
+    x, new_cache = _scan_dec(params, x, cfg, mode="prefill", cache=cache,
+                             memory=memory)
+    return _logits(params, cfg, x[:, -1:]), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    x = L.embed(params["embed"], token).astype(cfg.act_dtype)
+    x, new_cache = _scan_dec(params, x, cfg, mode="decode", cache=cache)
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,359 @@
+"""Core neural-net layers: norms, RoPE, GQA attention, gated MLP, embeddings.
+
+Pure-functional style: each layer is an ``init_*`` returning a param pytree
+and an ``apply`` function. Layer stacks are scanned (params stacked on a
+leading layer axis) so HLO size is depth-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------- #
+def _normal(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False):
+    p = {"w": _normal(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rms_norm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": _normal(key, (vocab, d), dtype, scale=0.02)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x):
+    return x @ p["table"].T
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------- #
+def rope_cos_sin(positions, head_dim, theta):
+    """positions: int array (...,) -> cos/sin of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, L, H, hd), positions: (L,) or (B, L)."""
+    cos, sin = rope_cos_sin(positions, x.shape[-1], theta)
+    cos, sin = cos[..., None, :], sin[..., None, :]   # head axis
+    while cos.ndim < x.ndim:                          # leading batch axis
+        cos, sin = cos[None], sin[None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention core (GQA, causal / sliding-window / cross)
+# --------------------------------------------------------------------- #
+def gqa_attention(q, k, v, *, q_positions=None, k_positions=None,
+                  causal=True, window=0, k_valid=None):
+    """Grouped-query attention.
+
+    q: (B, Lq, Hq, hd); k, v: (B, Lk, Hkv, hd). Hq % Hkv == 0.
+    q_positions: (Lq,) or (B, Lq) absolute positions of the queries.
+    k_positions: (Lk,) or (B, Lk) absolute positions of the keys.
+    window: 0 = full; else keys with kpos < qpos - window + 1 are masked.
+    k_valid: optional (B, Lk) or (Lk,) bool mask of valid cache slots.
+    """
+    B, Lq, Hq, hd = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    # keep operands in model dtype; accumulate on the MXU in f32
+    # (avoids converting/duplicating the whole KV cache to f32 in HBM)
+    qg = q.reshape(B, Lq, Hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+
+    mask = None
+    if causal or window:
+        if q_positions is None:
+            q_positions = jnp.arange(Lq)
+        if k_positions is None:
+            k_positions = jnp.arange(Lk)
+        qp = q_positions if q_positions.ndim == 2 else q_positions[None]
+        kp = k_positions if k_positions.ndim == 2 else k_positions[None]
+        m = kp[:, None, :] <= qp[:, :, None] if causal else \
+            jnp.ones((1, Lq, Lk), bool)
+        if window:
+            m = m & (kp[:, None, :] > qp[:, :, None] - window)
+        mask = m
+    if k_valid is not None:
+        kv = k_valid if k_valid.ndim == 2 else k_valid[None]
+        valid = kv[:, None, :]
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1)          # f32
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Lq, Hq, hd).astype(q.dtype)
+
+
+def chunked_causal_attention(q, k, v, *, block, positions=None, window=0):
+    """Block-tiled causal attention (the jnp analogue of the Pallas flash
+    kernel's above-diagonal tile skipping): query block i only attends to
+    the KV prefix it can see, so score FLOPs and live memory are ~halved
+    (and window-bounded under SWA). q: (B, L, Hq, hd); k, v: (B, L, Hkv, hd).
+    """
+    B, L, Hq, hd = q.shape
+    block = min(block, L)
+    assert L % block == 0, (L, block)
+    nq = L // block
+    if positions is None:
+        positions = jnp.arange(L)
+    outs = []
+    for i in range(nq):
+        q_blk = q[:, i * block:(i + 1) * block]
+        q_pos = positions[i * block:(i + 1) * block]
+        start = 0
+        if window:
+            start = max(0, (i * block - window + 1) // block) * block
+        end = (i + 1) * block
+        out = gqa_attention(q_blk, k[:, start:end], v[:, start:end],
+                            q_positions=q_pos,
+                            k_positions=positions[start:end],
+                            causal=True, window=window)
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1)
+
+
+# --------------------------------------------------------------------- #
+# attention block with KV cache
+# --------------------------------------------------------------------- #
+def init_attention(key, cfg: ModelConfig, *, n_heads=None, n_kv_heads=None):
+    n_heads = n_heads or cfg.n_heads
+    n_kv_heads = n_kv_heads or cfg.n_kv_heads
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, n_heads * hd, cfg.p_dtype, cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, n_kv_heads * hd, cfg.p_dtype, cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, n_kv_heads * hd, cfg.p_dtype, cfg.qkv_bias),
+        "wo": init_linear(ks[3], n_heads * hd, d, cfg.p_dtype),
+    }
+
+
+def make_kv_cache(batch, length, n_kv_heads, hd, dtype, quant=False):
+    """Cache pytree. ``pos`` holds the absolute position stored in each
+    slot (-1 = empty) enabling both full and ring-buffer (sliding window)
+    use; ``step`` is each sequence's token count — per batch row, so a
+    serving engine can run sequences at different offsets in one batch.
+    quant=True stores K/V as int8 with per-(slot, head) scales — halves
+    the memory-roofline cost of long-cache decode."""
+    c = {
+        "k": jnp.zeros((batch, length, n_kv_heads, hd),
+                       jnp.int8 if quant else dtype),
+        "v": jnp.zeros((batch, length, n_kv_heads, hd),
+                       jnp.int8 if quant else dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+        "step": jnp.zeros((batch,), jnp.int32),
+    }
+    if quant:
+        c["k_scale"] = jnp.zeros((batch, length, n_kv_heads), jnp.float32)
+        c["v_scale"] = jnp.zeros((batch, length, n_kv_heads), jnp.float32)
+    return c
+
+
+def _quantize_kv(x):
+    """x: (..., hd) -> (int8 values, per-vector scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
+                    window=None):
+    """Self-attention. x: (B, L, d).
+
+    * cache=None: full-sequence (train/prefill without cache), causal.
+    * cache given and L==1: single-token decode; writes slot ``step % S``
+      (ring buffer when S < total positions, i.e. sliding window).
+    Returns (y, new_cache).
+    """
+    B, L, d = x.shape
+    hd = cfg.hd
+    window = cfg.sliding_window if window is None else window
+    q = linear(p["wq"], x).reshape(B, L, -1, hd)
+    k = linear(p["wk"], x).reshape(B, L, -1, hd)
+    v = linear(p["wv"], x).reshape(B, L, -1, hd)
+
+    if cache is None:
+        if positions is None:
+            positions = jnp.arange(L)
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if cfg.attn_block and L > cfg.attn_block:
+            y = chunked_causal_attention(q, k, v, block=cfg.attn_block,
+                                         positions=positions, window=window)
+        else:
+            y = gqa_attention(q, k, v, q_positions=positions,
+                              k_positions=positions, causal=True,
+                              window=window)
+        return linear(p["wo"], y.reshape(B, L, -1)), None
+
+    # --- cached decode (L == 1) -------------------------------------- #
+    S = cache["k"].shape[1]
+    step = cache["step"]                       # (B,) per-sequence position
+    pos = step[:, None]                        # (B, 1)
+    if cfg.rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(step, S)                    # (B,)
+    bidx = jnp.arange(B)
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = _quantize_kv(k[:, 0])
+        vq, vs = _quantize_kv(v[:, 0])
+        new_k = cache["k"].at[bidx, slot].set(kq)
+        new_v = cache["v"].at[bidx, slot].set(vq)
+        new_ks = cache["k_scale"].at[bidx, slot].set(ks)
+        new_vs = cache["v_scale"].at[bidx, slot].set(vs)
+        k_read = _dequantize_kv(new_k, new_ks, q.dtype)
+        v_read = _dequantize_kv(new_v, new_vs, q.dtype)
+    else:
+        new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+        new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+        k_read, v_read = new_k, new_v
+    new_pos = cache["pos"].at[bidx, slot].set(step)
+    k_valid = new_pos >= 0                     # (B, S)
+    y = gqa_attention(q, k_read, v_read,
+                      q_positions=pos,
+                      k_positions=new_pos,
+                      causal=True, window=window, k_valid=k_valid)
+    new_cache = {"k": new_k, "v": new_v, "pos": new_pos, "step": step + 1}
+    if quant:
+        new_cache["k_scale"] = new_ks
+        new_cache["v_scale"] = new_vs
+    return linear(p["wo"], y.reshape(B, L, -1)), new_cache
+
+
+def prefill_into_cache(p, x, cfg: ModelConfig, cache, *, window=None):
+    """Prefill L tokens and populate the cache (cache length >= L for full
+    attention; == window for SWA). Returns (y, cache)."""
+    B, L, _ = x.shape
+    hd = cfg.hd
+    window = cfg.sliding_window if window is None else window
+    positions = jnp.arange(L)
+    q = linear(p["wq"], x).reshape(B, L, -1, hd)
+    k = linear(p["wk"], x).reshape(B, L, -1, hd)
+    v = linear(p["wv"], x).reshape(B, L, -1, hd)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_block and L > cfg.attn_block:
+        y = chunked_causal_attention(q, k, v, block=cfg.attn_block,
+                                     positions=positions, window=window)
+    else:
+        y = gqa_attention(q, k, v, q_positions=positions,
+                          k_positions=positions, causal=True, window=window)
+    S = cache["k"].shape[1]
+    quant = "k_scale" in cache
+    if quant:
+        k_store, k_sc = _quantize_kv(k)
+        v_store, v_sc = _quantize_kv(v)
+    else:
+        k_store, v_store = k, v
+    new_cache = {"step": jnp.full((B,), L, jnp.int32)}
+    if S >= L:
+        new_cache["k"] = lax.dynamic_update_slice(cache["k"], k_store,
+                                                  (0, 0, 0, 0))
+        new_cache["v"] = lax.dynamic_update_slice(cache["v"], v_store,
+                                                  (0, 0, 0, 0))
+        row_pos = jnp.broadcast_to(positions.astype(jnp.int32), (B, L))
+        new_cache["pos"] = lax.dynamic_update_slice(cache["pos"], row_pos,
+                                                    (0, 0))
+        if quant:
+            new_cache["k_scale"] = lax.dynamic_update_slice(
+                cache["k_scale"], k_sc, (0, 0, 0))
+            new_cache["v_scale"] = lax.dynamic_update_slice(
+                cache["v_scale"], v_sc, (0, 0, 0))
+    else:  # keep last S tokens, aligned to ring-buffer slots
+        tail_pos = positions[L - S:]
+        slots = jnp.mod(tail_pos, S)
+        new_cache["k"] = cache["k"].at[:, slots].set(k_store[:, L - S:])
+        new_cache["v"] = cache["v"].at[:, slots].set(v_store[:, L - S:])
+        new_cache["pos"] = cache["pos"].at[:, slots].set(
+            jnp.broadcast_to(tail_pos.astype(jnp.int32), (B, S)))
+        if quant:
+            new_cache["k_scale"] = cache["k_scale"].at[:, slots].set(
+                k_sc[:, L - S:])
+            new_cache["v_scale"] = cache["v_scale"].at[:, slots].set(
+                v_sc[:, L - S:])
+    return linear(p["wo"], y.reshape(B, L, -1)), new_cache
+
+
+def cross_attention_block(p, x, memory, cfg: ModelConfig):
+    """Encoder–decoder cross attention; memory: (B, S, d)."""
+    B, L, _ = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(B, L, -1, hd)
+    k = linear(p["wk"], memory).reshape(B, memory.shape[1], -1, hd)
+    v = linear(p["wv"], memory).reshape(B, memory.shape[1], -1, hd)
+    y = gqa_attention(q, k, v, causal=False, window=0)
+    return linear(p["wo"], y.reshape(B, L, -1))
+
+
+# --------------------------------------------------------------------- #
+# gated MLP (SwiGLU)
+# --------------------------------------------------------------------- #
+def init_mlp(key, d, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": init_linear(ks[0], d, d_ff, dtype),
+        "wg": init_linear(ks[1], d, d_ff, dtype),
+        "wo": init_linear(ks[2], d_ff, d, dtype),
+    }
+
+
+def mlp(p, x):
+    return linear(p["wo"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x))

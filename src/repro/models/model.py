@@ -1,0 +1,131 @@
+"""Unified model facade: ``build(cfg)`` returns a ``Model`` exposing
+init / train_loss / prefill / decode_step / make_cache / input_specs for
+every assigned family. This is the object the service layer wraps."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+
+def lm_loss(logits, targets, mask=None):
+    """Mean next-token cross entropy. logits: (B, L, V) f32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[..., Any]        # (params, batch) -> (loss, metrics)
+    prefill: Callable[..., Any]           # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable[..., Any]       # (params, token, cache) -> (logits, cache)
+    make_cache: Callable[..., Any]        # (batch, cache_len) -> cache pytree
+
+    def cache_len(self, shape: ShapeConfig) -> int:
+        if self.cfg.sliding_window:
+            return min(shape.seq_len, self.cfg.sliding_window)
+        return shape.seq_len
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one step at the given shape."""
+        cfg = self.cfg
+        B = shape.global_batch
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        fe = cfg.frontend
+
+        if shape.mode == "train":
+            L_tok = shape.seq_len - (fe.n_tokens if fe and cfg.family == "vlm"
+                                     else 0)
+            batch = {"tokens": sds((B, L_tok), i32)}
+            if fe is not None:
+                batch["embeddings"] = sds((B, fe.n_tokens, fe.d_embed),
+                                          cfg.act_dtype)
+            return {"batch": batch}
+
+        if shape.mode == "prefill":
+            L_tok = shape.seq_len - (fe.n_tokens if fe and cfg.family == "vlm"
+                                     else 0)
+            batch = {"tokens": sds((B, L_tok), i32)}
+            if fe is not None:
+                batch["embeddings"] = sds((B, fe.n_tokens, fe.d_embed),
+                                          cfg.act_dtype)
+            cache = jax.eval_shape(
+                lambda: self.make_cache(B, self.cache_len(shape)))
+            return {"batch": batch, "cache": cache}
+
+        # decode: one token against a cache of seq_len
+        cache = jax.eval_shape(
+            lambda: self.make_cache(B, self.cache_len(shape)))
+        return {"token": sds((B, 1), i32), "cache": cache}
+
+
+# --------------------------------------------------------------------- #
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)
+
+
+def _build_decoder(cfg: ModelConfig) -> Model:
+    fe = cfg.frontend
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        emb = batch.get("embeddings") if fe is not None else None
+        logits, aux = T.forward_train(params, cfg, tokens, emb)
+        P = fe.n_tokens if (fe is not None and cfg.family == "vlm") else 0
+        text_logits = logits[:, P:][:, :-1]
+        loss = lm_loss(text_logits, tokens[:, 1:]) + aux
+        return loss, {"lm_loss": loss - aux, "aux_loss": aux}
+
+    def prefill_fn(params, batch, cache):
+        emb = batch.get("embeddings") if fe is not None else None
+        return T.prefill(params, cfg, batch["tokens"], cache, emb)
+
+    def decode_fn(params, token, cache):
+        return T.decode_step(params, cfg, token, cache)
+
+    def make_cache(batch, cache_len, dtype=None):
+        return T.make_cache(cfg, batch, cache_len, dtype)
+
+    return Model(cfg=cfg, init=lambda k: T.init_transformer(k, cfg),
+                 train_loss=train_loss, prefill=prefill_fn,
+                 decode_step=decode_fn, make_cache=make_cache)
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    fe = cfg.frontend
+
+    def train_loss(params, batch):
+        logits, aux = ED.forward_train(params, cfg, batch["tokens"],
+                                       batch["embeddings"])
+        loss = lm_loss(logits[:, :-1], batch["tokens"][:, 1:]) + aux
+        return loss, {"lm_loss": loss - aux, "aux_loss": aux}
+
+    def prefill_fn(params, batch, cache):
+        return ED.prefill(params, cfg, batch["tokens"], cache,
+                          batch["embeddings"])
+
+    def decode_fn(params, token, cache):
+        return ED.decode_step(params, cfg, token, cache)
+
+    def make_cache(batch, cache_len, dtype=None):
+        return ED.make_encdec_cache(cfg, batch, cache_len, fe.n_tokens,
+                                    dtype)
+
+    return Model(cfg=cfg, init=lambda k: ED.init_encdec(k, cfg),
+                 train_loss=train_loss, prefill=prefill_fn,
+                 decode_step=decode_fn, make_cache=make_cache)

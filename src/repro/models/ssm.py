@@ -1,0 +1,133 @@
+"""Mamba-2 (SSD) mixer block: projections, causal conv, gated norm, and the
+SSD scan (chunked dual form for train/prefill, recurrent step for decode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, init_linear, linear, rms_norm
+from repro.kernels.ssd_scan import ops as ssd_ops
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, d_proj, cfg.p_dtype),
+        "conv_w": _normal(ks[1], (conv_dim, s.d_conv), cfg.p_dtype, 0.5),
+        "conv_b": jnp.zeros((conv_dim,), cfg.p_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_in,), cfg.p_dtype)},
+        "out_proj": init_linear(ks[3], d_in, cfg.d_model, cfg.p_dtype),
+    }
+
+
+def make_ssm_cache(batch, cfg: ModelConfig, dtype):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, L, Cc), w: (Cc, K)."""
+    K = w.shape[1]
+    L = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + L] * w[None, None, :, i] for i in range(K))
+    return out + b
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, cfg: ModelConfig):
+    s, d_in, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    x = xBC[..., :d_in]
+    B = xBC[..., d_in:d_in + gn]
+    C = xBC[..., d_in + gn:]
+    return x, B, C
+
+
+def ssm_block(p, u, cfg: ModelConfig, *, cache=None, return_cache=False):
+    """u: (B, L, d). cache=None -> full sequence (chunked SSD); pass
+    ``return_cache=True`` during prefill to also get the decode cache.
+    cache given and L==1 -> recurrent decode step. Returns (y, new_cache)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    Bsz, L, _ = u.shape
+    zxbcdt = linear(p["in_proj"], u)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None:
+        xBC_raw = xBC
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        x, Bc, Cc = _split_xbc(xBC, cfg)
+        xh = x.reshape(Bsz, L, nh, s.head_dim)
+        Bg = Bc.reshape(Bsz, L, s.n_groups, s.d_state)
+        Cg = Cc.reshape(Bsz, L, s.n_groups, s.d_state)
+        # pad to a chunk multiple; dt=0 on padding -> decay 1, zero input,
+        # so outputs and final state are unaffected
+        chunk = min(s.chunk, max(16, 1 << (L - 1).bit_length()))
+        pad = (-L) % chunk
+        if pad:
+            zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)]
+                                   + [(0, 0)] * (a.ndim - 2))
+            xh, Bg, Cg, dt = zp(xh), zp(Bg), zp(Cg), zp(dt)
+        y, final_state = ssd_ops.ssd(xh, dt, A, Bg, Cg, p["D"],
+                                     chunk=chunk)
+        y = y[:, :L]
+        y = y.reshape(Bsz, L, d_in).astype(u.dtype)
+        if return_cache:
+            K = s.d_conv
+            tail = xBC_raw[:, max(0, L - (K - 1)):]
+            if tail.shape[1] < K - 1:
+                tail = jnp.pad(tail,
+                               ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
+            new_cache = {"conv": tail.astype(u.dtype), "ssm": final_state}
+        else:
+            new_cache = None
+    else:
+        # single-token recurrence (L == 1)
+        xBC1 = xBC[:, 0]                                  # (B, Cc)
+        conv_full = jnp.concatenate([cache["conv"], xBC1[:, None]], axis=1)
+        wc = p["conv_w"].astype(jnp.float32)              # (Cc, K)
+        conv_out = jnp.einsum("bkc,ck->bc",
+                              conv_full.astype(jnp.float32),
+                              wc) + p["conv_b"].astype(jnp.float32)
+        xBC1 = jax.nn.silu(conv_out)
+        x, Bc, Cc = _split_xbc(xBC1, cfg)
+        xh = x.reshape(Bsz, nh, s.head_dim)
+        Bg = Bc.reshape(Bsz, s.n_groups, s.d_state)
+        Cg = Cc.reshape(Bsz, s.n_groups, s.d_state)
+        y1, new_state = ssd_ops.ssd_step(cache["ssm"], xh, dt[:, 0], A,
+                                         Bg, Cg, p["D"])
+        y = y1.reshape(Bsz, 1, d_in).astype(u.dtype)
+        new_cache = {"conv": conv_full[:, 1:].astype(cache["conv"].dtype),
+                     "ssm": new_state}
+
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = rms_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                 cfg.norm_eps)
+    return linear(p["out_proj"], y), new_cache

@@ -1,0 +1,256 @@
+"""Decoder stacks for all assigned families (dense / moe / ssm / hybrid /
+vlm), built scan-over-layers so HLO size is depth-independent.
+
+A *block* is the scan unit: one sublayer for homogeneous stacks, or a
+super-block (e.g. Jamba's [1 attn + 7 mamba] with alternating MoE/MLP FFNs)
+for hybrids. Params for all blocks are stacked on a leading axis via
+``jax.vmap`` over init keys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distribution.sharding import shard_activation
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# --------------------------------------------------------------------- #
+# block structure
+# --------------------------------------------------------------------- #
+def block_spec(cfg: ModelConfig) -> List[Tuple[str, Optional[str]]]:
+    """Returns [(mixer, ffn)] per sublayer of the scan unit."""
+    if cfg.family in ("dense", "vlm"):
+        return [("attn", "mlp")]
+    if cfg.family == "moe":
+        return [("attn", "moe")]
+    if cfg.family == "ssm":
+        return [("ssm", None)]
+    if cfg.family == "hybrid":
+        every = max(1, cfg.moe.moe_every) if cfg.moe else 0
+        spec = []
+        for i in range(cfg.attn_every):
+            mixer = "attn" if i == 0 else "ssm"
+            ffn = "moe" if (cfg.moe and i % every == 0) else "mlp"
+            spec.append((mixer, ffn))
+        return spec
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def n_blocks(cfg: ModelConfig) -> int:
+    k = len(block_spec(cfg))
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def init_block(key, cfg: ModelConfig):
+    spec = block_spec(cfg)
+    p: Dict[str, Any] = {}
+    keys = jax.random.split(key, len(spec))
+    for i, (mixer, ffn) in enumerate(spec):
+        sk = jax.random.split(keys[i], 4)
+        sub: Dict[str, Any] = {"ln1": L.init_rms_norm(cfg.d_model, cfg.p_dtype)}
+        if mixer == "attn":
+            sub["attn"] = L.init_attention(sk[0], cfg)
+        else:
+            sub["ssm"] = S.init_ssm(sk[1], cfg)
+        if ffn is not None:
+            sub["ln2"] = L.init_rms_norm(cfg.d_model, cfg.p_dtype)
+            if ffn == "mlp":
+                sub["mlp"] = L.init_mlp(sk[2], cfg.d_model, cfg.d_ff,
+                                        cfg.p_dtype)
+            else:
+                sub["moe"] = M.init_moe(sk[3], cfg)
+        p[f"sub{i}"] = sub
+    return p
+
+
+def init_stack(key, cfg: ModelConfig):
+    nb = n_blocks(cfg)
+    keys = jax.random.split(key, nb)
+    return jax.vmap(lambda k: init_block(k, cfg))(keys)
+
+
+def init_transformer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.p_dtype),
+        "blocks": init_stack(ks[1], cfg),
+        "ln_f": L.init_rms_norm(cfg.d_model, cfg.p_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_linear(ks[2], cfg.d_model, cfg.vocab,
+                                     cfg.p_dtype)
+    if cfg.frontend is not None:
+        p["frontend_proj"] = L.init_linear(ks[3], cfg.frontend.d_embed,
+                                           cfg.d_model, cfg.p_dtype)
+    return p
+
+
+# --------------------------------------------------------------------- #
+# cache
+# --------------------------------------------------------------------- #
+def _block_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    spec = block_spec(cfg)
+    c: Dict[str, Any] = {}
+    for i, (mixer, _) in enumerate(spec):
+        if mixer == "attn":
+            S_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+                else cache_len
+            c[f"sub{i}"] = L.make_kv_cache(batch, S_len, cfg.n_kv_heads,
+                                           cfg.hd, dtype,
+                                           quant=cfg.kv_quant)
+        else:
+            c[f"sub{i}"] = S.make_ssm_cache(batch, cfg, dtype)
+    return c
+
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Stacked (per-block) decode cache pytree."""
+    dtype = dtype or cfg.act_dtype
+    one = _block_cache(cfg, batch, cache_len, dtype)
+    nb = n_blocks(cfg)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (nb,) + x.shape), one)
+
+
+# --------------------------------------------------------------------- #
+# block apply
+# --------------------------------------------------------------------- #
+def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None):
+    """mode: 'train' | 'prefill' | 'decode'. Returns (x, new_cache, aux)."""
+    spec = block_spec(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    for i, (mixer, ffn) in enumerate(spec):
+        sp = bp[f"sub{i}"]
+        h = L.rms_norm(sp["ln1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            if mode == "train":
+                y, nc = L.attention_block(sp["attn"], h, cfg)
+            elif mode == "prefill":
+                y, nc = L.prefill_into_cache(sp["attn"], h, cfg,
+                                             cache[f"sub{i}"])
+            else:
+                y, nc = L.attention_block(sp["attn"], h, cfg,
+                                          cache=cache[f"sub{i}"])
+        else:
+            if mode == "train":
+                y, nc = S.ssm_block(sp["ssm"], h, cfg)
+            elif mode == "prefill":
+                y, nc = S.ssm_block(sp["ssm"], h, cfg, return_cache=True)
+            else:
+                y, nc = S.ssm_block(sp["ssm"], h, cfg,
+                                    cache=cache[f"sub{i}"])
+        if nc is not None:
+            new_cache[f"sub{i}"] = nc
+        x = x + y
+        x = shard_activation(x, "act_btd")
+        if ffn is not None:
+            h = L.rms_norm(sp["ln2"], x, cfg.norm_eps)
+            if ffn == "mlp":
+                y = L.mlp(sp["mlp"], h)
+            else:
+                y, moe_aux = M.moe_block(sp["moe"], h, cfg)
+                aux = aux + moe_aux
+            x = x + y
+            x = shard_activation(x, "act_btd")
+    return x, (new_cache or None), aux
+
+
+# --------------------------------------------------------------------- #
+# full forward passes
+# --------------------------------------------------------------------- #
+def _scan_blocks(params, x, cfg: ModelConfig, *, mode: str, cache=None):
+    block_fn = functools.partial(apply_block, cfg=cfg, mode=mode)
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    if cfg.unroll_layers:
+        nb = jax.tree.leaves(params["blocks"])[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i in range(nb):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            c = None if cache is None else \
+                jax.tree.map(lambda t: t[i], cache)
+            x, nc, a = block_fn(bp, x, cache=c)
+            aux = aux + a
+            if nc is not None:
+                new_caches.append(nc)
+        new_cache = None if not new_caches else \
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, new_cache, aux
+
+    if mode == "train":
+        def body(carry, bp):
+            x, aux = carry
+            x, _, a = block_fn(bp, x)
+            return (x, aux + a), None
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+        return x, None, aux
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, c = xs
+        x, nc, a = block_fn(bp, x, cache=c)
+        return (x, aux + a), nc
+    (x, aux), new_cache = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], cache))
+    return x, new_cache, aux
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens=None, embeddings=None):
+    """tokens: (B, Lt) ids; embeddings: (B, Le, d_embed) frontend stub
+    output (VLM patches / audio frames). Returns (B, L, d)."""
+    parts = []
+    if embeddings is not None:
+        parts.append(L.linear(params["frontend_proj"], embeddings))
+    if tokens is not None:
+        parts.append(L.embed(params["embed"], tokens))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return x.astype(cfg.act_dtype)
+
+
+def logits_from(params, cfg: ModelConfig, x):
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        out = L.unembed(params["embed"], x)
+    else:
+        out = L.linear(params["lm_head"], x)
+    return shard_activation(out.astype(jnp.float32), "logits")
+
+
+def forward_train(params, cfg: ModelConfig, tokens, embeddings=None):
+    """Returns (logits, aux_loss)."""
+    x = embed_inputs(params, cfg, tokens, embeddings)
+    x = shard_activation(x, "act_btd")
+    x, _, aux = _scan_blocks(params, x, cfg, mode="train")
+    return logits_from(params, cfg, x), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, embeddings=None):
+    """Populates cache; returns (last-position logits, cache)."""
+    x = embed_inputs(params, cfg, tokens, embeddings)
+    x = shard_activation(x, "act_btd")
+    x, new_cache, _ = _scan_blocks(params, x, cfg, mode="prefill",
+                                   cache=cache)
+    return logits_from(params, cfg, x[:, -1:]), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    """token: (B, 1) ids. Returns (logits (B, 1, V), new_cache)."""
+    x = embed_inputs(params, cfg, token)
+    x, new_cache, _ = _scan_blocks(params, x, cfg, mode="decode",
+                                   cache=cache)
+    return logits_from(params, cfg, x), new_cache

@@ -1,0 +1,146 @@
+"""Batched serving engine with continuous-batching-lite slot scheduling.
+
+A fixed number of batch *slots* share one batched KV/SSM cache; each slot
+runs an independent sequence at its own offset (per-row ``step`` in the
+cache). When a sequence finishes, the next queued request is prefilled
+(batch=1) and its cache written into the free slot — the decode batch never
+drains. This is the serving analogue the paper's Fig. 3 measures: stable,
+predictable per-token latency under a stream of differently-sized requests.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.request import Request, Response
+from repro.serving.sampler import Sampler
+
+
+def _write_slot(batched, one, b: int):
+    """Write a batch=1 cache pytree into slot ``b`` of a batched cache.
+    All cache leaves carry batch on axis 1 (axis 0 is the scanned
+    layer/block axis)."""
+    return jax.tree.map(lambda full, x: full.at[:, b].set(x[:, 0]),
+                        batched, one)
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 cache_len: int = 512, sampler: Optional[Sampler] = None,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.sampler = sampler or Sampler()
+        self.key = jax.random.PRNGKey(seed)
+
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.responses: Dict[int, Response] = {}
+        self.remaining = np.zeros(max_batch, np.int64)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.cache = model.make_cache(max_batch, cache_len)
+        self.step_times: List[float] = []
+
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_cache: Dict[Any, Any] = {}
+
+    # ------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.submitted_s = time.perf_counter()
+        self.queue.append(req)
+        self.responses[req.uid] = Response(uid=req.uid,
+                                           prompt_len=len(req.prompt))
+
+    def _prefill_one(self, req: Request):
+        L = len(req.prompt)
+        kcache = ("pf", L, req.embeddings is not None)
+        if kcache not in self._prefill_cache:
+            self._prefill_cache[kcache] = jax.jit(self.model.prefill)
+        fn = self._prefill_cache[kcache]
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if req.embeddings is not None:
+            batch["embeddings"] = jnp.asarray(req.embeddings)[None]
+        cache1 = self.model.make_cache(1, self.cache_len)
+        logits, cache1 = fn(self.params, batch, cache1)
+        return logits, cache1
+
+    def _fill_free_slots(self) -> None:
+        for b in range(self.max_batch):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            req.started_s = time.perf_counter()
+            logits, cache1 = self._prefill_one(req)
+            self.cache = _write_slot(self.cache, cache1, b)
+            self.key, sk = jax.random.split(self.key)
+            first = self.sampler(sk, logits[:, -1].astype(jnp.float32))
+            tok = int(first[0])
+            resp = self.responses[req.uid]
+            resp.tokens.append(tok)
+            if req.max_new_tokens <= 1 or (req.eos_id is not None
+                                           and tok == req.eos_id):
+                resp.finished = True
+                req.finished_s = time.perf_counter()
+                continue  # slot stays free
+            self.tokens = self.tokens.at[b, 0].set(first[0])
+            self.slots[b] = req
+            self.remaining[b] = req.max_new_tokens - 1
+
+    # ------------------------------------------------------------ #
+    def step(self) -> None:
+        """One batched decode step across all active slots."""
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.cache)
+        self.key, sk = jax.random.split(self.key)
+        nxt = self.sampler(sk, logits[:, -1].astype(jnp.float32))
+        nxt = np.asarray(nxt)
+        self.tokens = jnp.asarray(nxt[:, None])
+        self.step_times.append(time.perf_counter() - t0)
+
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[b])
+            resp = self.responses[req.uid]
+            resp.tokens.append(tok)
+            self.remaining[b] -= 1
+            done = self.remaining[b] <= 0 or (req.eos_id is not None
+                                              and tok == req.eos_id)
+            if done:
+                resp.finished = True
+                req.finished_s = time.perf_counter()
+                self.slots[b] = None
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, Response]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self._fill_free_slots()
+            if self.active:
+                self.step()
+            steps += 1
+        return self.responses
+
+    # ------------------------------------------------------------ #
+    def latency_stats(self) -> Dict[str, float]:
+        ts = np.asarray(self.step_times[1:] or [0.0])  # drop compile step
+        finished = [r for r in self.responses.values() if r.finished]
+        return {
+            "decode_ms_mean": float(ts.mean() * 1e3),
+            "decode_ms_p50": float(np.percentile(ts, 50) * 1e3),
+            "decode_ms_p99": float(np.percentile(ts, 99) * 1e3),
+            "n_finished": len(finished),
+            "tokens_generated": sum(r.n_generated for r in finished),
+        }

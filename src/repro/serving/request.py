@@ -1,0 +1,33 @@
+"""Request/response dataclasses for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (L,) int32 token ids
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    embeddings: Optional[np.ndarray] = None  # vlm/audio frontend output
+
+    submitted_s: float = 0.0
+    started_s: float = 0.0
+    finished_s: float = 0.0
+
+
+@dataclass
+class Response:
+    uid: int
+    tokens: List[int] = field(default_factory=list)
+    finished: bool = False
+    prompt_len: int = 0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)

@@ -1,0 +1,25 @@
+"""Token samplers: greedy / temperature / top-k, jit-friendly."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Sampler:
+    temperature: float = 0.0   # 0 = greedy
+    top_k: int = 0             # 0 = full distribution
+
+    def __call__(self, key, logits):
+        """logits: (B, V) f32 -> token ids (B,) int32."""
+        if self.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits = logits / self.temperature
+        if self.top_k:
+            vals, idx = jax.lax.top_k(logits, self.top_k)
+            choice = jax.random.categorical(key, vals)
+            return jnp.take_along_axis(idx, choice[:, None],
+                                       axis=-1)[:, 0].astype(jnp.int32)
+        return jax.random.categorical(key, logits).astype(jnp.int32)

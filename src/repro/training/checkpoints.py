@@ -1,0 +1,92 @@
+"""Pytree checkpointing: .npz payload + JSON manifest, content-addressed.
+
+Containers are restricted to nested dicts (all our param trees are), so the
+tree is reconstructible from '/'-joined leaf paths without pickling.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def tree_hash(tree) -> str:
+    h = hashlib.sha256()
+    flat = _flatten(tree)
+    for key in sorted(flat):
+        arr = flat[key]
+        h.update(key.encode())
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def save_pytree(path: os.PathLike, tree, extra: dict | None = None) -> str:
+    """Writes <path>.npz and <path>.json; returns the content hash."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(str(path) + ".npz", **flat)
+    digest = tree_hash(tree)
+    manifest = {"hash": digest,
+                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                           for k, v in flat.items()}}
+    manifest.update(extra or {})
+    with open(str(path) + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    return digest
+
+
+def load_pytree(path: os.PathLike, verify: bool = True):
+    path = Path(path)
+    with np.load(str(path) + ".npz") as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten(flat)
+    if verify and Path(str(path) + ".json").exists():
+        with open(str(path) + ".json") as f:
+            manifest = json.load(f)
+        if manifest.get("hash") and manifest["hash"] != tree_hash(tree):
+            raise IOError(f"checkpoint {path}: content hash mismatch")
+    return tree
+
+
+def save_train_state(path, step: int, params, opt_state, extra=None):
+    meta = {"step": int(step)}
+    meta.update(extra or {})
+    save_pytree(Path(path) / "params", params, extra=meta)
+    save_pytree(Path(path) / "opt_state", opt_state, extra=meta)
+
+
+def load_train_state(path):
+    params = load_pytree(Path(path) / "params")
+    opt_state = load_pytree(Path(path) / "opt_state")
+    with open(Path(path) / "params.json") as f:
+        step = json.load(f).get("step", 0)
+    return step, params, opt_state

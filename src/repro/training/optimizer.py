@@ -1,0 +1,75 @@
+"""AdamW with gradient clipping and cosine LR schedule (no optax — built
+from scratch per the brief). Optimizer state mirrors the param pytree, so
+the same sharding rules apply (and ZeRO-style sharding just re-shards it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[Any], Any]:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Any], Any]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params) -> Tuple[Any, Any]:
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                         state["v"], grads)
+        sf = jnp.asarray(step, jnp.float32)
+        bc1 = 1 - self.b1 ** sf
+        bc2 = 1 - self.b2 ** sf
+        lr = self.lr(step)
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))

@@ -1,0 +1,137 @@
+"""Composable-services core: combinators, compatibility checking,
+adapters — the paper's contribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compat import CompositionError, check_concrete, unify
+from repro.core.compose import (adapter, cast_adapter, ensemble, map_batch,
+                                parallel, route, seq)
+from repro.core.service import (Service, Signature, TensorSpec,
+                                service_from_fn, spec_tree_of)
+
+
+def _linear_service(name, d_in, d_out, key=0):
+    k = jax.random.PRNGKey(key)
+    params = {"w": jax.random.normal(k, (d_in, d_out)) * 0.1}
+    return service_from_fn(
+        name, lambda p, x: x @ p["w"],
+        jax.ShapeDtypeStruct((4, d_in), jnp.float32), params=params)
+
+
+def test_seq_composes_and_fuses():
+    a = _linear_service("a", 8, 16, 0)
+    b = _linear_service("b", 16, 4, 1)
+    s = a >> b
+    x = jnp.ones((4, 8))
+    out = jax.jit(s.fn)(s.params, x)
+    expect = (x @ a.params["w"]) @ b.params["w"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5)
+    assert s.metadata["stages"] == ["a", "b"]
+
+
+def test_seq_rejects_incompatible():
+    a = _linear_service("a", 8, 16)
+    c = _linear_service("c", 32, 4)
+    with pytest.raises(CompositionError) as ei:
+        _ = a >> c
+    assert "16" in str(ei.value) and "32" in str(ei.value)
+
+
+def test_seq_rejects_dtype_mismatch():
+    a = _linear_service("a", 8, 16)
+    b = Service(name="int_only", fn=lambda p, x: x,
+                signature=Signature(TensorSpec((-1, 16), "int32"),
+                                    TensorSpec((-1, 16), "int32")))
+    with pytest.raises(CompositionError):
+        _ = a >> b
+    fixed = a >> cast_adapter(a.signature.outputs, "int32") >> b
+    assert fixed is not None
+
+
+def test_wildcard_batch_dims_match():
+    spec1 = TensorSpec((-1, 16), "float32")
+    spec2 = TensorSpec((4, 16), "float32")
+    assert spec1.matches(spec2) and spec2.matches(spec1)
+    assert not TensorSpec((3, 16), "float32").matches(spec2)
+
+
+def test_parallel_combinator():
+    a = _linear_service("a", 8, 4, 0)
+    b = _linear_service("b", 6, 2, 1)
+    p = parallel({"l": a, "r": b})
+    out = p({"l": jnp.ones((4, 8)), "r": jnp.ones((4, 6))})
+    assert out["l"].shape == (4, 4) and out["r"].shape == (4, 2)
+
+
+def test_ensemble_mean_and_stack():
+    ms = [_linear_service(f"m{i}", 8, 4, i) for i in range(3)]
+    e = ensemble(ms, combine="mean")
+    x = jnp.ones((2, 8))
+    out = e(x)
+    expect = sum(x @ m.params["w"] for m in ms) / 3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5)
+    st = ensemble(ms, combine="stack")
+    assert st(x).shape == (3, 2, 4)
+    assert st.signature.outputs.shape[0] == 3
+
+
+def test_ensemble_rejects_mismatched_members():
+    with pytest.raises(CompositionError):
+        ensemble([_linear_service("a", 8, 4), _linear_service("b", 8, 5)])
+
+
+def test_route_switches_on_device():
+    small = _linear_service("small", 8, 4, 0)
+    big = _linear_service("big", 8, 4, 1)
+    sel = Service(name="sel",
+                  fn=lambda p, x: (jnp.mean(x) > 0).astype(jnp.int32),
+                  signature=Signature(small.signature.inputs,
+                                      TensorSpec((), "int32")))
+    r = route(sel, [small, big])
+    xpos = jnp.ones((4, 8))
+    xneg = -jnp.ones((4, 8))
+    np.testing.assert_allclose(np.asarray(r(xpos)),
+                               np.asarray(xpos @ big.params["w"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r(xneg)),
+                               np.asarray(xneg @ small.params["w"]),
+                               rtol=1e-5)
+
+
+def test_map_batch_lifts_signature():
+    per = service_from_fn("norm", lambda p, x: x / jnp.linalg.norm(x),
+                          jax.ShapeDtypeStruct((8,), jnp.float32))
+    lifted = map_batch(per)
+    out = lifted(jnp.ones((5, 8)))
+    assert out.shape == (5, 8)
+    assert lifted.signature.inputs.shape == (-1, 8)
+
+
+def test_check_concrete_reports_field_path():
+    spec = {"tokens": TensorSpec((-1, 16), "int32")}
+    with pytest.raises(CompositionError) as ei:
+        check_concrete(spec, {"tokens": jnp.zeros((2, 8), jnp.int32)},
+                       where="svc")
+    assert "tokens" in str(ei.value)
+
+
+def test_unify_reports_missing_fields():
+    errs = unify({"a": TensorSpec((1,), "float32")},
+                 {"a": TensorSpec((1,), "float32"),
+                  "b": TensorSpec((1,), "float32")}, where="x")
+    assert errs and "missing" in errs[0]
+
+
+def test_seq_associativity():
+    a = _linear_service("a", 4, 8, 0)
+    b = _linear_service("b", 8, 6, 1)
+    c = _linear_service("c", 6, 2, 2)
+    x = jnp.ones((3, 4))
+    left = (a >> b) >> c
+    right = a >> (b >> c)
+    np.testing.assert_allclose(np.asarray(left(x)), np.asarray(right(x)),
+                               rtol=1e-5)

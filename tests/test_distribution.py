@@ -1,0 +1,161 @@
+"""Distribution layer: param/cache sharding rules, HLO collective parser,
+roofline arithmetic — all testable without multiple devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution.hlo_analysis import (collective_bytes,
+                                             total_collective_bytes)
+from repro.distribution.sharding import (_fit_spec, default_param_rules,
+                                         spec_for_path)
+
+AXES = {"data": 16, "model": 16, "pod": 2}
+
+
+def _spec(path, shape):
+    return tuple(spec_for_path(path, shape, default_param_rules(), AXES))
+
+
+def test_attention_param_rules():
+    assert _spec("blocks/sub0/attn/wq/w", (6144, 6144)) == (None, "model")
+    assert _spec("blocks/sub0/attn/wo/w", (6144, 6144)) == ("model", None)
+    # stacked layer axis is padded with None
+    assert _spec("blocks/sub0/attn/wq/w", (48, 6144, 6144)) \
+        == (None, None, "model")
+
+
+def test_non_divisible_dims_are_replicated():
+    # vocab 49155 % 16 != 0 -> replicated embedding
+    assert _spec("embed/table", (49155, 1536)) == (None, None)
+    assert _spec("embed/table", (92544, 6144)) == ("model", None)
+
+
+def test_moe_expert_parallel_with_fallback():
+    # 16 experts divide the model axis: expert parallelism
+    assert _spec("blocks/sub0/moe/wi", (16, 8192, 24576)) \
+        == ("model", None, None)
+    # 60 experts don't: falls back to tensor-parallel experts
+    assert _spec("blocks/sub0/moe/wi", (60, 2048, 1408)) \
+        == (None, None, "model")
+    assert _spec("blocks/sub0/moe/wo", (60, 1408, 2048)) \
+        == (None, "model", None)
+
+
+def test_optimizer_state_paths_match():
+    # opt state mirrors params under m/ and v/ prefixes
+    assert _spec("opt/m/blocks/sub0/mlp/wi/w", (2048, 8192)) \
+        == (None, "model")
+
+
+def test_fit_spec_clamps_rank():
+    fixed, ok = _fit_spec(("model",), (7,), AXES)
+    assert fixed == (None,) and not ok
+
+
+def test_cache_shardings_seq_vs_batch():
+    import os
+    # single-device mesh is enough to check the specs we request
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.distribution.sharding import cache_shardings
+    shapes = {"sub0": {
+        "k": jax.ShapeDtypeStruct((16, 8, 1024, 8, 128), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((16, 8, 1024), jnp.int32),
+        "step": jax.ShapeDtypeStruct((16, 8), jnp.int32),
+    }}
+    sh = cache_shardings(shapes, mesh, ("data",))
+    assert sh["sub0"]["k"].spec[1] == "data"
+    sh2 = cache_shardings(shapes, mesh, ("data",), seq_axis="model")
+    assert sh2["sub0"]["k"].spec[2] == "model"
+    assert sh2["sub0"]["k"].spec[3] is None  # heads must not reuse model
+
+
+# ------------------------------------------------------------------ #
+# HLO collective parsing
+# ------------------------------------------------------------------ #
+HLO = """
+  %ag = bf16[4,128]{1,0} all-gather(bf16[1,128]{1,0} %p), dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %x), to_apply=%add
+  %rs = (f32[8,8]{1,0}, f32[8,8]{1,0}) reduce-scatter(f32[64,8]{1,0} %y, f32[64,8]{1,0} %z)
+  %cp = u8[100]{0} collective-permute(u8[100]{0} %w)
+  %a2a = s32[16,16]{1,0} all-to-all(s32[16,16]{1,0} %q)
+  %dot = f32[4,4]{1,0} dot(f32[4,8]{1,0} %a, f32[8,4]{1,0} %b)
+"""
+
+
+def test_collective_bytes_parses_each_kind():
+    stats = collective_bytes(HLO)
+    assert stats["all-gather"] == 4 * 128 * 2
+    assert stats["all-reduce"] == 256 * 4
+    assert stats["reduce-scatter"] == 2 * 8 * 8 * 4
+    assert stats["collective-permute"] == 100
+    assert stats["all-to-all"] == 16 * 16 * 4
+    assert stats["n_all-gather"] == 1
+    # dot is not a collective
+    assert total_collective_bytes(stats) == (4 * 128 * 2 + 1024 + 512
+                                             + 100 + 1024)
+
+
+def test_collective_bytes_real_module():
+    """Parse an actual compiled module with a psum."""
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.sharding import NamedSharding
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32,
+                             sharding=NamedSharding(mesh, P("x")))
+    compiled = jax.jit(lambda a: a.sum()).lower(x).compile()
+    stats = collective_bytes(compiled.as_text())  # 1 device: no collectives
+    assert isinstance(stats, dict)
+
+
+# ------------------------------------------------------------------ #
+# roofline arithmetic
+# ------------------------------------------------------------------ #
+def test_roofline_terms_and_dominance():
+    from repro.launch.roofline import analyze
+    rec = {
+        "status": "ok", "arch": "llama3.2-1b", "shape": "train_4k",
+        "mesh": "16x16", "mode": "train", "variant": "", "tag": "",
+        "zero": False, "n_devices": 256,
+        "flops_per_device": 197e12,      # exactly 1 s of compute
+        "bytes_per_device": 819e9 * 2,   # 2 s of memory
+        "collective_bytes_per_device": 50e9 * 0.5,
+        "memory_analysis": {"temp_size_in_bytes": 10 * 2**30},
+        "collectives": {},
+    }
+    a = analyze(rec)
+    assert abs(a["compute_s"] - 1.0) < 1e-9
+    assert abs(a["memory_s"] - 2.0) < 1e-9
+    assert abs(a["collective_s"] - 0.5) < 1e-9
+    assert a["dominant"] == "memory"
+    assert a["fits_hbm"]
+
+
+def test_model_flops_modes():
+    from repro.launch.roofline import model_flops
+    t = model_flops("llama3.2-1b", "train_4k")
+    p = model_flops("llama3.2-1b", "prefill_32k")
+    d = model_flops("llama3.2-1b", "decode_32k")
+    assert t > p > d > 0
+    # train is 3x forward at equal token counts (6ND vs 2ND)
+    assert abs(t / (6 * 4096 * 256) - p / (2 * 32768 * 32)) < 1e-6
+
+
+def test_moe_active_params_lower_than_total():
+    from repro.configs import active_param_count, param_count, ARCHS
+    for name in ("qwen2-moe-a2.7b", "granite-moe-3b-a800m",
+                 "jamba-1.5-large-398b"):
+        assert active_param_count(ARCHS[name]) < param_count(ARCHS[name])
+
+
+def test_param_count_magnitudes():
+    """Analytic parameter counts are in the right ballpark of the
+    models' nameplate sizes."""
+    from repro.configs import ARCHS, param_count
+    expect = {"internlm2-20b": 20e9, "starcoder2-15b": 15e9,
+              "qwen2.5-14b": 14e9, "llama3.2-1b": 1.3e9,
+              "mamba2-780m": 0.78e9, "jamba-1.5-large-398b": 398e9,
+              "pixtral-12b": 12e9}
+    for name, n in expect.items():
+        got = param_count(ARCHS[name])
+        assert 0.5 * n < got < 1.8 * n, (name, got, n)

@@ -1,0 +1,190 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracle (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, shape), dtype)
+
+
+# ------------------------------------------------------------------ #
+# flash attention
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("B,H,L,hd", [
+    (1, 1, 128, 64), (2, 4, 256, 64), (1, 2, 512, 32), (2, 1, 128, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, L, hd, causal, window, dtype):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import attention_reference
+    q, k, v = (_arr((B, H, L, hd), dtype) for _ in range(3))
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 bq=64, bk=64, interpret=True)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_gqa_wrapper():
+    from repro.kernels.flash_attention.ops import gqa_flash
+    from repro.models.layers import gqa_attention
+    B, L, Hq, Hkv, hd = 2, 128, 8, 2, 64
+    q = _arr((B, L, Hq, hd))
+    k = _arr((B, L, Hkv, hd))
+    v = _arr((B, L, Hkv, hd))
+    out = gqa_flash(q, k, v, causal=True, use_pallas=True, bq=64, bk=64)
+    ref = gqa_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,L,hd", [
+    (2, 8, 2, 256, 64), (1, 4, 1, 128, 32), (2, 6, 3, 128, 64),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48),
+                                           (False, 0)])
+def test_flash_attention_gqa_native_kernel(B, Hq, Hkv, L, hd, causal,
+                                           window):
+    """GQA-native kernel (KV tiles staged once per group) vs expanded
+    reference."""
+    from repro.kernels.flash_attention.kernel import (
+        flash_attention_gqa_pallas)
+    from repro.kernels.flash_attention.ref import attention_reference
+    q = _arr((B, Hq, L, hd))
+    k = _arr((B, Hkv, L, hd))
+    v = _arr((B, Hkv, L, hd))
+    out = flash_attention_gqa_pallas(q, k, v, causal=causal, window=window,
+                                     bq=64, bk=64, interpret=True)
+    rep = Hq // Hkv
+    ref = attention_reference(q, jnp.repeat(k, rep, 1),
+                              jnp.repeat(v, rep, 1), causal=causal,
+                              window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# decode attention
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd", [
+    (2, 8, 2, 256, 64), (1, 4, 4, 128, 32), (2, 4, 1, 512, 64),
+])
+@pytest.mark.parametrize("window", [0, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, Hq, Hkv, S, hd, window, dtype):
+    from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_reference)
+    step = S - S // 3
+    q = _arr((B, Hq, hd), dtype)
+    k = _arr((B, Hkv, S, hd), dtype)
+    v = _arr((B, Hkv, S, hd), dtype)
+    pos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        n = min(step + 1, S)
+        ps = np.arange(step + 1 - n, step + 1)
+        pos[b, ps % S] = ps
+    pos = jnp.asarray(pos)
+    qp = jnp.full((B,), step, jnp.int32)
+    out = decode_attention_pallas(q, k, v, pos, qp, window=window, bk=64,
+                                  interpret=True)
+    ref = decode_attention_reference(q, k, v, pos, qp, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel == the model's gqa_attention on a populated cache."""
+    from repro.kernels.decode_attention.ops import cached_decode_attention
+    from repro.models.layers import gqa_attention
+    B, S, Hq, Hkv, hd = 2, 64, 4, 2, 32
+    q = _arr((B, 1, Hq, hd))
+    k_cache = _arr((B, S, Hkv, hd))
+    v_cache = _arr((B, S, Hkv, hd))
+    step = jnp.full((B,), S - 1, jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out = cached_decode_attention(q, k_cache, v_cache, pos, step,
+                                  use_pallas=True, bk=32)
+    ref = gqa_attention(q, k_cache, v_cache,
+                        q_positions=step[:, None], k_positions=pos,
+                        causal=True, k_valid=pos >= 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# SSD scan
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+    (2, 128, 4, 32, 1, 32, 32), (1, 256, 8, 64, 2, 128, 64),
+    (2, 64, 2, 16, 2, 16, 16), (1, 128, 6, 32, 3, 64, 64),
+])
+def test_ssd_scan(b, l, h, p, g, n, chunk):
+    from repro.kernels.ssd_scan.kernel import ssd_pallas
+    from repro.kernels.ssd_scan.ref import ssd_reference
+    x = _arr((b, l, h, p))
+    dt = jnp.asarray(rng.uniform(1e-3, 0.1, (b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    Bm = _arr((b, l, g, n))
+    Cm = _arr((b, l, g, n))
+    D = _arr((h,))
+    y, s = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    yr, sr = ssd_reference(x, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_decode_step_matches_scan():
+    """Recurrent decode steps reproduce the chunked scan outputs."""
+    from repro.kernels.ssd_scan.ref import ssd_decode_step, ssd_reference
+    b, l, h, p, g, n = 1, 32, 2, 16, 1, 16
+    x = _arr((b, l, h, p))
+    dt = jnp.asarray(rng.uniform(1e-3, 0.1, (b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    Bm = _arr((b, l, g, n))
+    Cm = _arr((b, l, g, n))
+    y_scan, s_scan = ssd_reference(x, dt, A, Bm, Cm, None, chunk=16)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    for t in range(l):
+        y_t, state = ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                     Bm[:, t], Cm[:, t], None)
+        np.testing.assert_allclose(np.asarray(y_t),
+                                   np.asarray(y_scan[:, t]),
+                                   rtol=1e-3, atol=1e-3,
+                                   err_msg=f"t={t}")
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_scan),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------ #
+# fused rmsnorm
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("N,d,bn", [(256, 128, 128), (128, 512, 64),
+                                    (64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rmsnorm(N, d, bn, dtype):
+    from repro.kernels.rmsnorm.ops import fused_rmsnorm
+    x = _arr((N, d), dtype)
+    r = _arr((N, d), dtype)
+    s = _arr((d,))
+    yp, rp = fused_rmsnorm(x, r, s, use_pallas=True, bn=bn)
+    yr, rr = fused_rmsnorm(x, r, s, use_pallas=False)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(yp, np.float32),
+                               np.asarray(yr, np.float32), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(rp, np.float32),
+                               np.asarray(rr, np.float32), rtol=tol,
+                               atol=tol)

@@ -1,0 +1,31 @@
+"""Stage profiler (the paper's per-node instrumentation) + metrics log."""
+import jax
+import jax.numpy as jnp
+
+import repro.core.zoo_builders as zb
+from repro.core.profile import format_profile, profile_stages
+from repro.training.metrics import MetricsLogger, read_jsonl
+
+
+def test_profile_stages_accounts_whole_pipeline():
+    clf = zb.classifier_service("pixtral-12b", n_classes=10)
+    clf = clf.with_params(clf.metadata["init_params"](jax.random.PRNGKey(0)))
+    dec = zb.label_decoder(10)
+    x = {"embeddings": jnp.ones((2, 16, 64), jnp.float32)}
+    profs = profile_stages([clf, dec], x, iters=3)
+    assert [p.stage for p in profs] == [clf.name, dec.name]
+    assert profs[0].compute_ms > 0 and profs[0].n_params == clf.n_params
+    assert profs[1].output_bytes > 0
+    txt = format_profile(profs)
+    assert "TOTAL" in txt and clf.name in txt
+
+
+def test_metrics_logger_roundtrip(tmp_path):
+    p = tmp_path / "run.jsonl"
+    with MetricsLogger(str(p), run_name="t") as log:
+        log.log("train", step=1, loss=jnp.asarray(2.5))
+        log.log("train", step=2, loss=2.25)
+    rows = read_jsonl(p)
+    assert len(rows) == 2
+    assert rows[0]["loss"] == 2.5 and rows[0]["run"] == "t"
+    assert rows[1]["step"] == 2

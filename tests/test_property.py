@@ -1,0 +1,163 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compat import unify
+from repro.core.service import TensorSpec
+from repro.data.pipeline import MarkovLM, pack_documents
+from repro.training.checkpoints import (load_pytree, save_pytree,
+                                        tree_hash)
+
+# ------------------------------------------------------------------ #
+# TensorSpec unification algebra
+# ------------------------------------------------------------------ #
+dims = st.one_of(st.just(-1), st.integers(1, 8))
+shapes = st.lists(dims, min_size=0, max_size=4).map(tuple)
+dtypes = st.sampled_from(["float32", "int32", "bfloat16"])
+specs = st.builds(TensorSpec, shapes, dtypes)
+
+
+@given(specs)
+def test_spec_matches_reflexive(s):
+    assert s.matches(s)
+
+
+@given(specs, specs)
+def test_spec_matches_symmetric(a, b):
+    assert a.matches(b) == b.matches(a)
+
+
+@given(shapes, dtypes)
+def test_wildcard_absorbs_any_concrete(shape, dtype):
+    wild = TensorSpec(tuple(-1 for _ in shape), dtype)
+    conc = TensorSpec(tuple(abs(d) for d in shape), dtype)
+    assert wild.matches(conc)
+
+
+@given(specs, specs)
+def test_unify_messages_iff_mismatch(a, b):
+    errs = unify(a, b, where="t")
+    assert (len(errs) == 0) == a.matches(b)
+
+
+# ------------------------------------------------------------------ #
+# checkpoint roundtrip on random pytrees
+# ------------------------------------------------------------------ #
+leaf_shapes = st.lists(st.integers(1, 5), min_size=0, max_size=3).map(tuple)
+
+
+@st.composite
+def pytrees(draw, depth=2):
+    if depth == 0 or draw(st.booleans()):
+        shape = draw(leaf_shapes)
+        seed = draw(st.integers(0, 2**16))
+        return np.random.default_rng(seed).normal(size=shape).astype(
+            np.float32)
+    n = draw(st.integers(1, 3))
+    return {f"k{i}": draw(pytrees(depth=depth - 1)) for i in range(n)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(tree=pytrees())
+def test_checkpoint_roundtrip_hash(tree):
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        h = save_pytree(f"{d}/ckpt", tree)
+        back = load_pytree(f"{d}/ckpt")
+        assert tree_hash(back) == h
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(a, b)
+
+
+@given(tree=pytrees())
+@settings(max_examples=25, deadline=None)
+def test_tree_hash_detects_any_leaf_change(tree):
+    leaves = jax.tree.leaves(tree)
+    if not leaves or all(l.size == 0 for l in leaves):
+        return
+    h0 = tree_hash(tree)
+    mutated = jax.tree.map(lambda x: x, tree)  # copy structure
+    flat, treedef = jax.tree.flatten(mutated)
+    idx = next(i for i, l in enumerate(flat) if l.size)
+    flat[idx] = flat[idx] + 1.0
+    assert tree_hash(jax.tree.unflatten(treedef, flat)) != h0
+
+
+# ------------------------------------------------------------------ #
+# data pipeline invariants
+# ------------------------------------------------------------------ #
+@given(st.integers(16, 256), st.integers(2, 16), st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_markov_lm_tokens_in_vocab(vocab, branching, length):
+    lm = MarkovLM(vocab, branching=branching, seed=1)
+    toks = lm.sample(np.random.default_rng(0), length)
+    assert toks.min() >= 0 and toks.max() < vocab
+    assert 0.0 < lm.entropy_bound() <= np.log(branching) + 1e-9
+
+
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=10),
+       st.integers(2, 32))
+@settings(max_examples=20, deadline=None)
+def test_pack_documents_shape_and_content(doc_lens, seq_len):
+    docs = [np.arange(n) for n in doc_lens]
+    packed = pack_documents(docs, seq_len)
+    total = sum(doc_lens)
+    assert packed.shape == (total // seq_len, seq_len)
+    flat = np.concatenate(docs)[: packed.size]
+    np.testing.assert_array_equal(packed.reshape(-1), flat)
+
+
+# ------------------------------------------------------------------ #
+# attention invariants
+# ------------------------------------------------------------------ #
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(2, 24),
+       st.sampled_from([8, 16]))
+@settings(max_examples=15, deadline=None)
+def test_attention_rows_are_convex_combinations(B, H, L, hd):
+    """Causal attention output at pos t lies in the convex hull of
+    v[:t+1] -> max |out| <= max |v|."""
+    from repro.models.layers import gqa_attention
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, L, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, H, hd)), jnp.float32)
+    out = gqa_attention(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_causal_first_position_copies_v0(L):
+    from repro.models.layers import gqa_attention
+    rng = np.random.default_rng(1)
+    B, H, hd = 1, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, L, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, H, hd)), jnp.float32)
+    out = gqa_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# MoE invariants
+# ------------------------------------------------------------------ #
+@given(st.integers(2, 4), st.integers(4, 16), st.integers(1, 2))
+@settings(max_examples=10, deadline=None)
+def test_moe_aux_loss_bounded_and_output_finite(E, T, k):
+    from repro.configs import get_arch
+    from repro.models.moe import init_moe, moe_block
+    import dataclasses
+    cfg = get_arch("qwen2-moe-a2.7b", variant="reduced")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, n_experts=E, top_k=k))
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1, T, cfg.d_model)), jnp.float32)
+    y, aux = moe_block(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # switch aux loss is >= weight (perfect balance) within fp tolerance
+    assert float(aux) >= cfg.moe.aux_loss_weight * 0.99

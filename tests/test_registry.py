@@ -1,0 +1,102 @@
+"""Zoo registry: publish / pull / verify / composed-by-reference."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.zoo_builders as zb
+from repro.core.compat import CompositionError
+from repro.core.registry import Registry
+from repro.core.service import service_from_fn
+
+
+@pytest.fixture
+def clf_dec():
+    clf = zb.classifier_service("pixtral-12b", n_classes=10)
+    clf = clf.with_params(clf.metadata["init_params"](jax.random.PRNGKey(0)))
+    dec = zb.label_decoder(10)
+    return clf, dec
+
+
+def test_publish_pull_roundtrip(tmp_path, clf_dec):
+    clf, _ = clf_dec
+    reg = Registry(tmp_path)
+    reg.publish(clf, builder="model.classifier",
+                config={"arch": "pixtral-12b", "n_classes": 10})
+    svc = reg.pull(clf.name)
+    x = {"embeddings": jnp.ones((2, 16, 64), jnp.float32)}
+    np.testing.assert_allclose(np.asarray(clf(x)), np.asarray(svc(x)),
+                               rtol=1e-6)
+
+
+def test_pull_detects_tampered_params(tmp_path, clf_dec):
+    clf, _ = clf_dec
+    reg = Registry(tmp_path)
+    m = reg.publish(clf, builder="model.classifier",
+                    config={"arch": "pixtral-12b", "n_classes": 10})
+    # tamper with the weights file
+    pdir = tmp_path / clf.name / clf.version
+    data = dict(np.load(pdir / "params.npz"))
+    key0 = sorted(data)[0]
+    data[key0] = data[key0] + 1.0
+    np.savez(pdir / "params.npz", **data)
+    with pytest.raises(IOError):
+        reg.pull(clf.name)
+
+
+def test_pull_detects_signature_drift(tmp_path, clf_dec):
+    clf, _ = clf_dec
+    reg = Registry(tmp_path)
+    reg.publish(clf, builder="model.classifier",
+                config={"arch": "pixtral-12b", "n_classes": 10})
+    mpath = tmp_path / clf.name / clf.version / "manifest.json"
+    m = json.loads(mpath.read_text())
+    m["config"]["n_classes"] = 12   # drifted config -> different signature
+    mpath.write_text(json.dumps(m))
+    with pytest.raises((CompositionError, IOError)):
+        reg.pull(clf.name)
+
+
+def test_composed_by_reference_dedups_weights(tmp_path, clf_dec):
+    clf, dec = clf_dec
+    reg = Registry(tmp_path)
+    reg.publish(clf, builder="model.classifier",
+                config={"arch": "pixtral-12b", "n_classes": 10})
+    reg.publish(dec, builder="adapter.label_decoder",
+                config={"n_classes": 10})
+    svc = clf >> dec
+    reg.publish_composed(svc, [clf, dec])
+    # no params.npz stored for the composition
+    assert not (tmp_path / svc.name / svc.version / "params.npz").exists()
+    pulled = reg.pull(svc.name)
+    x = {"embeddings": jnp.ones((2, 16, 64), jnp.float32)}
+    a = svc(x)
+    b = pulled(x)
+    np.testing.assert_allclose(np.asarray(a["confidence"]),
+                               np.asarray(b["confidence"]), rtol=1e-6)
+
+
+def test_publish_composed_requires_stages_published(tmp_path, clf_dec):
+    clf, dec = clf_dec
+    reg = Registry(tmp_path)
+    svc = clf >> dec
+    with pytest.raises(FileNotFoundError):
+        reg.publish_composed(svc, [clf, dec])
+
+
+def test_versioning_and_list(tmp_path):
+    reg = Registry(tmp_path)
+    s1 = service_from_fn("s", lambda p, x: x * 2,
+                         jax.ShapeDtypeStruct((2,), jnp.float32))
+    zb.register_builder("test.double")(
+        lambda: service_from_fn("s", lambda p, x: x * 2,
+                                jax.ShapeDtypeStruct((2,), jnp.float32)))
+    reg.publish(s1, builder="test.double", config={})
+    import dataclasses
+    s2 = dataclasses.replace(s1, version="0.2.0")
+    reg.publish(s2, builder="test.double", config={})
+    assert reg.versions("s") == ["0.1.0", "0.2.0"]
+    assert reg.pull("s").version == "0.2.0"  # latest by default
+    assert len(reg.list()) == 2

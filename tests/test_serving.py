@@ -1,0 +1,110 @@
+"""Serving engine: continuous batching, greedy determinism, deployment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.deploy import DeploymentPlan, deploy
+from repro.core.netmodel import NetworkModel
+from repro.models.model import build
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+
+def _model_params(arch="llama3.2-1b", seed=0):
+    cfg = get_arch(arch, variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def test_engine_finishes_all_mixed_length_requests():
+    cfg, model, params = _model_params()
+    eng = Engine(model, params, max_batch=3, cache_len=64,
+                 sampler=Sampler())
+    rng = np.random.default_rng(0)
+    for uid in range(7):
+        L = int(rng.integers(3, 20))
+        eng.submit(Request(uid=uid, prompt=rng.integers(0, cfg.vocab, L),
+                           max_new_tokens=8))
+    resp = eng.run()
+    assert len(resp) == 7
+    assert all(r.finished and r.n_generated == 8 for r in resp.values())
+
+
+def test_engine_greedy_matches_single_request_decode():
+    """A request served in a shared batch must produce the same greedy
+    tokens as served alone — slot isolation."""
+    cfg, model, params = _model_params(seed=3)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, 12)))
+               for _ in range(4)]
+
+    def serve(prompts, max_batch):
+        eng = Engine(model, params, max_batch=max_batch, cache_len=48,
+                     sampler=Sampler())  # greedy
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=6))
+        return {uid: r.tokens for uid, r in eng.run().items()}
+
+    together = serve(prompts, max_batch=4)
+    alone = {}
+    for uid, p in enumerate(prompts):
+        alone.update({uid: serve([p], max_batch=1)[0]})
+    for uid in range(4):
+        assert together[uid] == alone[uid], (uid, together[uid], alone[uid])
+
+
+def test_engine_eos_stops_early():
+    cfg, model, params = _model_params()
+    eng = Engine(model, params, max_batch=2, cache_len=64,
+                 sampler=Sampler())
+    # pick eos = the first greedy token so generation stops immediately
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3]),
+                       max_new_tokens=10))
+    resp = eng.run()
+    first = resp[0].tokens[0]
+    eng2 = Engine(model, params, max_batch=2, cache_len=64,
+                  sampler=Sampler())
+    eng2.submit(Request(uid=0, prompt=np.asarray([1, 2, 3]),
+                        max_new_tokens=10, eos_id=int(first)))
+    resp2 = eng2.run()
+    assert resp2[0].n_generated == 1
+
+
+def test_deployment_local_remote_same_result():
+    """Deployment placement must not change results (paper's separation of
+    functionality and deployment)."""
+    import repro.core.zoo_builders as zb
+    clf = zb.classifier_service("pixtral-12b", n_classes=10)
+    clf = clf.with_params(clf.metadata["init_params"](jax.random.PRNGKey(0)))
+    dec = zb.label_decoder(10)
+    svc = clf >> dec
+    x = {"embeddings": jnp.ones((2, 16, 64), jnp.float32)}
+    outs = []
+    for plan in [DeploymentPlan.all_local(svc),
+                 DeploymentPlan.all_remote(svc, NetworkModel(seed=1)),
+                 DeploymentPlan.split(svc, 1, NetworkModel(seed=2))]:
+        d = deploy(svc, plan, stages=[clf, dec])
+        y, tel = d.call(x)
+        outs.append(np.asarray(y["class_id"]))
+        assert tel.total_s > 0
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_remote_deployment_charges_network():
+    import repro.core.zoo_builders as zb
+    clf = zb.classifier_service("pixtral-12b", n_classes=10)
+    clf = clf.with_params(clf.metadata["init_params"](jax.random.PRNGKey(0)))
+    dec = zb.label_decoder(10)
+    svc = clf >> dec
+    x = {"embeddings": jnp.ones((2, 16, 64), jnp.float32)}
+    d_local = deploy(svc, DeploymentPlan.all_local(svc), stages=[clf, dec])
+    d_remote = deploy(svc, DeploymentPlan.all_remote(
+        svc, NetworkModel(seed=0)), stages=[clf, dec])
+    _, tl = d_local.call(x)
+    _, tr = d_remote.call(x)
+    assert tl.transfer_total_s == 0.0
+    assert tr.transfer_total_s > 0.0

@@ -1,0 +1,89 @@
+"""Transports + CLI: the paper's pull-from-repo-or-peer workflow."""
+import jax
+import numpy as np
+import pytest
+
+import repro.core.zoo_builders as zb
+from repro.core.registry import Registry
+from repro.core.transport import (PeerTransport, RepoTransport,
+                                  SyncedRegistry)
+
+
+@pytest.fixture
+def remote(tmp_path):
+    """A populated remote repository."""
+    root = tmp_path / "remote"
+    reg = Registry(root)
+    clf = zb.classifier_service("pixtral-12b", n_classes=10)
+    clf = clf.with_params(clf.metadata["init_params"](jax.random.PRNGKey(0)))
+    dec = zb.label_decoder(10)
+    reg.publish(clf, builder="model.classifier",
+                config={"arch": "pixtral-12b", "n_classes": 10})
+    reg.publish(dec, builder="adapter.label_decoder",
+                config={"n_classes": 10})
+    svc = clf >> dec
+    reg.publish_composed(svc, [clf, dec])
+    return root, svc.name
+
+
+def test_pull_through_transport_charges_bytes(remote, tmp_path):
+    root, _ = remote
+    sreg = SyncedRegistry(tmp_path / "cache",
+                          [RepoTransport(root)])
+    svc, report = sreg.pull("classify_pixtral-12b")
+    assert report is not None and report.nbytes > 0
+    assert report.seconds > 0 and report.source == "repo"
+    # second pull is a cache hit
+    _, report2 = sreg.pull("classify_pixtral-12b")
+    assert report2 is None or report2.cached
+
+
+def test_peer_preferred_over_repo(remote, tmp_path):
+    root, _ = remote
+    peer = PeerTransport(root)
+    repo = RepoTransport(root)
+    sreg = SyncedRegistry(tmp_path / "cache", [peer, repo])
+    _, report = sreg.pull("label_decoder")
+    assert report.source == "peer"
+    # peer (LAN) is modelled faster than repo (WAN) for the same bytes
+    assert peer.network.transfer_s(10_000_000) \
+        < repo.network.transfer_s(10_000_000)
+
+
+def test_composed_pull_fetches_stage_deps(remote, tmp_path):
+    root, comp_name = remote
+    sreg = SyncedRegistry(tmp_path / "cache", [RepoTransport(root)])
+    svc, _ = sreg.pull(comp_name)
+    # stages landed in the cache too
+    assert (tmp_path / "cache" / "classify_pixtral-12b").exists()
+    assert (tmp_path / "cache" / "label_decoder").exists()
+    import jax.numpy as jnp
+    out = svc({"embeddings": jnp.ones((2, 16, 64), jnp.float32)})
+    assert out["class_id"].shape == (2,)
+
+
+def test_push_to_remote(remote, tmp_path):
+    root, _ = remote
+    other = tmp_path / "other_remote"
+    sreg = SyncedRegistry(tmp_path / "cache", [RepoTransport(root)])
+    sreg.pull("label_decoder")
+    dst = RepoTransport(other)
+    report = dst.push("label_decoder", "0.1.0", tmp_path / "cache")
+    assert (other / "label_decoder/0.1.0/manifest.json").exists()
+    assert report.nbytes > 0
+
+
+def test_cli_roundtrip(tmp_path):
+    from repro.launch.zoo_cli import main
+    peer = str(tmp_path / "peer")
+    zoo = str(tmp_path / "zoo")
+    main(["--zoo", peer, "init-demo", "--n-classes", "10"])
+    main(["--zoo", zoo, "--peer", peer, "pull",
+          "--name", "classify_pixtral-12b"])
+    main(["--zoo", zoo, "--peer", peer, "compose",
+          "--stages", "classify_pixtral-12b,label_decoder",
+          "--name", "pipe"])
+    main(["--zoo", zoo, "deploy", "--name", "pipe",
+          "--placement", "local", "--batch", "2"])
+    main(["--zoo", zoo, "deploy", "--name", "pipe",
+          "--placement", "split:1", "--batch", "2"])
