@@ -1,8 +1,16 @@
 """Serving-engine throughput/latency benchmark (continuous batching) —
 the runtime behind the paper's 'predictable local service latency' claim.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] \
+      [--out BENCH_serving.json]
+
+Emits machine-readable JSON (decode p50/p99 ms, tokens/s, prefill
+jit-cache entries) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -16,12 +24,13 @@ from repro.serving.request import Request
 from repro.serving.sampler import Sampler
 
 
-def run(n_requests: int = 12, max_new: int = 16) -> List[Dict]:
+def run(n_requests: int = 12, max_new: int = 16,
+        batch_sizes=(1, 2, 4, 8)) -> List[Dict]:
     cfg = get_arch("llama3.2-1b", variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rows = []
-    for max_batch in (1, 2, 4, 8):
+    for max_batch in batch_sizes:
         eng = Engine(model, params, max_batch=max_batch, cache_len=96,
                      sampler=Sampler())
         rng = np.random.default_rng(0)
@@ -38,16 +47,43 @@ def run(n_requests: int = 12, max_new: int = 16) -> List[Dict]:
                      "tok_per_s": st["tokens_generated"] / wall,
                      "decode_ms_p50": st["decode_ms_p50"],
                      "decode_ms_p99": st["decode_ms_p99"],
+                     "ttft_ms_mean": st["ttft_ms_mean"],
+                     "prefill_jit_entries": st["prefill_jit_entries"],
+                     "decode_steps": st["decode_steps"],
                      "wall_s": wall})
     return rows
 
 
-def main():
-    print("serving engine: continuous batching throughput")
-    print(f"{'batch':>5s} {'tok/s':>10s} {'p50 ms':>8s} {'p99 ms':>8s}")
-    for r in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~30s CI mode: fewer requests, one batch size")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="JSON output path ('' to skip)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rows = run(n_requests=6, max_new=8, batch_sizes=(4,))
+    else:
+        rows = run()
+
+    print("serving engine v2: continuous batching throughput")
+    print(f"{'batch':>5s} {'tok/s':>10s} {'p50 ms':>8s} {'p99 ms':>8s} "
+          f"{'ttft ms':>8s} {'jits':>5s}")
+    for r in rows:
         print(f"{r['max_batch']:5d} {r['tok_per_s']:10.1f} "
-              f"{r['decode_ms_p50']:8.2f} {r['decode_ms_p99']:8.2f}")
+              f"{r['decode_ms_p50']:8.2f} {r['decode_ms_p99']:8.2f} "
+              f"{r['ttft_ms_mean']:8.1f} {r['prefill_jit_entries']:5d}")
+
+    if args.out:
+        payload = {"bench": "serving_engine_v2",
+                   "smoke": bool(args.smoke),
+                   "backend": jax.default_backend(),
+                   "rows": rows}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+    return rows
 
 
 if __name__ == "__main__":

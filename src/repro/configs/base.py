@@ -96,6 +96,9 @@ class ModelConfig:
     attn_block: int = 0             # >0: chunked causal attention (skip
                                     # above-diagonal blocks, flash-style)
     kv_quant: bool = False          # int8 KV cache (per-slot-head scales)
+    use_decode_kernel: bool = False  # route cached decode attention through
+                                     # kernels/decode_attention (Pallas-ready
+                                     # layout; reference path by default)
     encoder: Optional[EncoderConfig] = None
     frontend: Optional[FrontendConfig] = None
     dtype: str = "bfloat16"         # activation dtype

@@ -29,6 +29,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode steps between finished-flag polls")
+    ap.add_argument("--json", default="",
+                    help="optional path to dump latency stats as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch, variant=args.variant)
@@ -37,7 +41,7 @@ def main(argv=None):
     engine = Engine(model, params, max_batch=args.max_batch,
                     cache_len=args.cache_len,
                     sampler=Sampler(temperature=args.temperature, top_k=32),
-                    seed=args.seed)
+                    seed=args.seed, sync_every=args.sync_every)
 
     rng = np.random.default_rng(args.seed)
     fe = cfg.frontend
@@ -63,6 +67,13 @@ def main(argv=None):
           f"({stats['tokens_generated']/wall:,.1f} tok/s)")
     print(f"decode ms/step: mean={stats['decode_ms_mean']:.2f} "
           f"p50={stats['decode_ms_p50']:.2f} p99={stats['decode_ms_p99']:.2f}")
+    print(f"ttft mean={stats['ttft_ms_mean']:.1f}ms "
+          f"prefill jit entries={stats['prefill_jit_entries']}")
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"arch": cfg.name, "wall_s": wall, **stats}, f,
+                      indent=2)
     return responses, stats
 
 

@@ -107,14 +107,17 @@ def _cross_kv(lp, memory, cfg: ModelConfig):
     return k, v
 
 
-def _dec_block(lp, x, cfg: ModelConfig, *, mode, cache=None, memory=None):
-    """One decoder layer. cache: {'self': kv_cache, 'xk': ..., 'xv': ...}."""
+def _dec_block(lp, x, cfg: ModelConfig, *, mode, cache=None, memory=None,
+               length=None):
+    """One decoder layer. cache: {'self': kv_cache, 'xk': ..., 'xv': ...}.
+    ``length``: optional (B,) valid-token counts for right-padded prefill."""
     new_cache: Dict[str, Any] = {}
     h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
     if mode == "train":
         y, _ = L.attention_block(lp["self_attn"], h, cfg)
     elif mode == "prefill":
-        y, nc = L.prefill_into_cache(lp["self_attn"], h, cfg, cache["self"])
+        y, nc = L.prefill_into_cache(lp["self_attn"], h, cfg, cache["self"],
+                                     length=length)
         new_cache["self"] = nc
     else:
         y, nc = L.attention_block(lp["self_attn"], h, cfg,
@@ -154,8 +157,9 @@ def make_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int,
         lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
 
 
-def _scan_dec(params, x, cfg, *, mode, cache=None, memory=None):
-    fn = functools.partial(_dec_block, cfg=cfg, mode=mode, memory=memory)
+def _scan_dec(params, x, cfg, *, mode, cache=None, memory=None, length=None):
+    fn = functools.partial(_dec_block, cfg=cfg, mode=mode, memory=memory,
+                           length=length)
     if cfg.remat:
         fn = jax.checkpoint(fn)
     if cfg.unroll_layers:
@@ -201,13 +205,15 @@ def forward_train(params, cfg: ModelConfig, tokens, embeddings):
     return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
 
 
-def prefill(params, cfg: ModelConfig, tokens, cache, embeddings):
+def prefill(params, cfg: ModelConfig, tokens, cache, embeddings,
+            length=None):
+    from repro.models.transformer import last_valid
     memory = encode(params, cfg, embeddings)
     x = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
     x = shard_activation(x, "act_btd")
     x, new_cache = _scan_dec(params, x, cfg, mode="prefill", cache=cache,
-                             memory=memory)
-    return _logits(params, cfg, x[:, -1:]), new_cache
+                             memory=memory, length=length)
+    return _logits(params, cfg, last_valid(x, length)), new_cache
 
 
 def decode_step(params, cfg: ModelConfig, token, cache):

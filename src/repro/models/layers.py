@@ -266,10 +266,16 @@ def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
         k_read, v_read = new_k, new_v
     new_pos = cache["pos"].at[bidx, slot].set(step)
     k_valid = new_pos >= 0                     # (B, S)
-    y = gqa_attention(q, k_read, v_read,
-                      q_positions=pos,
-                      k_positions=new_pos,
-                      causal=True, window=window, k_valid=k_valid)
+    if cfg.use_decode_kernel and not quant:
+        from repro.kernels.decode_attention.ops import \
+            cached_decode_attention
+        y = cached_decode_attention(q, k_read, v_read, new_pos, step,
+                                    window=window)
+    else:
+        y = gqa_attention(q, k_read, v_read,
+                          q_positions=pos,
+                          k_positions=new_pos,
+                          causal=True, window=window, k_valid=k_valid)
     new_cache = {"k": new_k, "v": new_v, "pos": new_pos, "step": step + 1}
     if quant:
         new_cache["k_scale"] = new_ks
@@ -277,9 +283,20 @@ def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
     return linear(p["wo"], y.reshape(B, L, -1)), new_cache
 
 
-def prefill_into_cache(p, x, cfg: ModelConfig, cache, *, window=None):
+def prefill_into_cache(p, x, cfg: ModelConfig, cache, *, window=None,
+                       length=None):
     """Prefill L tokens and populate the cache (cache length >= L for full
-    attention; == window for SWA). Returns (y, cache)."""
+    attention; == window for SWA). Returns (y, cache).
+
+    ``length``: optional (B,) int32 count of *valid* tokens per row when
+    ``x`` is right-padded to a bucket length (serving engine's bucketed
+    prefill). Because padding is on the right and attention is causal, the
+    valid prefix's outputs are unaffected by padding; we only have to (a)
+    mark padded cache slots empty (``pos = -1``) and (b) set ``step`` to the
+    true length. With ``length`` given, the *entire* ``pos`` row is
+    rewritten, so a recycled batch slot carries no stale keys from the
+    previous occupant.
+    """
     B, L, _ = x.shape
     hd = cfg.hd
     window = cfg.sliding_window if window is None else window
@@ -303,15 +320,30 @@ def prefill_into_cache(p, x, cfg: ModelConfig, cache, *, window=None):
         v_store, v_sc = _quantize_kv(v)
     else:
         k_store, v_store = k, v
-    new_cache = {"step": jnp.full((B,), L, jnp.int32)}
+    if length is not None and S < L:
+        raise NotImplementedError(
+            "length-masked prefill requires cache length >= padded length "
+            f"(got S={S} < L={L}); use exact-length prefill for long "
+            "prompts under sliding-window caches")
+    if length is not None:
+        new_cache = {"step": length.astype(jnp.int32)}
+    else:
+        new_cache = {"step": jnp.full((B,), L, jnp.int32)}
     if S >= L:
         new_cache["k"] = lax.dynamic_update_slice(cache["k"], k_store,
                                                   (0, 0, 0, 0))
         new_cache["v"] = lax.dynamic_update_slice(cache["v"], v_store,
                                                   (0, 0, 0, 0))
-        row_pos = jnp.broadcast_to(positions.astype(jnp.int32), (B, L))
-        new_cache["pos"] = lax.dynamic_update_slice(cache["pos"], row_pos,
-                                                    (0, 0))
+        if length is not None:
+            # full-row rewrite: valid prefix gets its position, padding and
+            # any stale entries from a previous slot occupant get -1
+            slot_ids = jnp.arange(S, dtype=jnp.int32)[None, :]
+            new_cache["pos"] = jnp.where(slot_ids < length[:, None],
+                                         slot_ids, -1)
+        else:
+            row_pos = jnp.broadcast_to(positions.astype(jnp.int32), (B, L))
+            new_cache["pos"] = lax.dynamic_update_slice(cache["pos"],
+                                                        row_pos, (0, 0))
         if quant:
             new_cache["k_scale"] = lax.dynamic_update_slice(
                 cache["k_scale"], k_sc, (0, 0, 0))

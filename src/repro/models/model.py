@@ -26,12 +26,27 @@ def lm_loss(logits, targets, mask=None):
 
 @dataclasses.dataclass(frozen=True)
 class Model:
+    """Facade contract (what the serving engine relies on):
+
+    * ``make_cache(batch, cache_len)`` leaves are ``[blocks, batch, ...]``
+      with a *per-row* ``step`` in attention sub-caches, so slots at
+      different sequence depths share one batched cache.
+    * ``prefill(params, batch, cache)`` accepts an optional
+      ``batch["length"]`` (B,) int32 of valid text tokens when
+      ``batch["tokens"]`` is right-padded to a bucket length; the cache is
+      written only for valid positions and logits are taken at the last
+      valid position per row.
+    * ``decode_step(params, token, cache)`` advances every row by one token
+      at that row's own offset.
+    """
+
     cfg: ModelConfig
     init: Callable[[jax.Array], Any]
     train_loss: Callable[..., Any]        # (params, batch) -> (loss, metrics)
     prefill: Callable[..., Any]           # (params, batch, cache) -> (logits, cache)
     decode_step: Callable[..., Any]       # (params, token, cache) -> (logits, cache)
     make_cache: Callable[..., Any]        # (batch, cache_len) -> cache pytree
+    cache_steps: Callable[..., Any] = lambda cache: None  # cache -> (B,) depths
 
     def cache_len(self, shape: ShapeConfig) -> int:
         if self.cfg.sliding_window:
@@ -93,7 +108,13 @@ def _build_decoder(cfg: ModelConfig) -> Model:
 
     def prefill_fn(params, batch, cache):
         emb = batch.get("embeddings") if fe is not None else None
-        return T.prefill(params, cfg, batch["tokens"], cache, emb)
+        length = batch.get("length")
+        if length is not None and emb is not None and cfg.family == "vlm":
+            # length counts text tokens; the cache also holds the frontend
+            # prefix, so the total valid depth includes it
+            length = length + fe.n_tokens
+        return T.prefill(params, cfg, batch["tokens"], cache, emb,
+                         length=length)
 
     def decode_fn(params, token, cache):
         return T.decode_step(params, cfg, token, cache)
@@ -103,7 +124,8 @@ def _build_decoder(cfg: ModelConfig) -> Model:
 
     return Model(cfg=cfg, init=lambda k: T.init_transformer(k, cfg),
                  train_loss=train_loss, prefill=prefill_fn,
-                 decode_step=decode_fn, make_cache=make_cache)
+                 decode_step=decode_fn, make_cache=make_cache,
+                 cache_steps=T.cache_steps)
 
 
 def _build_encdec(cfg: ModelConfig) -> Model:
@@ -117,7 +139,7 @@ def _build_encdec(cfg: ModelConfig) -> Model:
 
     def prefill_fn(params, batch, cache):
         return ED.prefill(params, cfg, batch["tokens"], cache,
-                          batch["embeddings"])
+                          batch["embeddings"], length=batch.get("length"))
 
     def decode_fn(params, token, cache):
         return ED.decode_step(params, cfg, token, cache)
@@ -126,6 +148,10 @@ def _build_encdec(cfg: ModelConfig) -> Model:
         return ED.make_encdec_cache(cfg, batch, cache_len, fe.n_tokens,
                                     dtype)
 
+    def cache_steps(cache):
+        return cache["self"]["step"][0]
+
     return Model(cfg=cfg, init=lambda k: ED.init_encdec(k, cfg),
                  train_loss=train_loss, prefill=prefill_fn,
-                 decode_step=decode_fn, make_cache=make_cache)
+                 decode_step=decode_fn, make_cache=make_cache,
+                 cache_steps=cache_steps)

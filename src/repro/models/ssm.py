@@ -69,15 +69,25 @@ def _split_xbc(xBC, cfg: ModelConfig):
     return x, B, C
 
 
-def ssm_block(p, u, cfg: ModelConfig, *, cache=None, return_cache=False):
+def ssm_block(p, u, cfg: ModelConfig, *, cache=None, return_cache=False,
+              length=None):
     """u: (B, L, d). cache=None -> full sequence (chunked SSD); pass
     ``return_cache=True`` during prefill to also get the decode cache.
-    cache given and L==1 -> recurrent decode step. Returns (y, new_cache)."""
+    cache given and L==1 -> recurrent decode step. Returns (y, new_cache).
+
+    ``length``: optional (B,) int32 valid-token count when ``u`` is
+    right-padded (bucketed prefill). Padded positions get ``dt = 0`` —
+    decay 1, zero input — so the recurrent state after ``length`` tokens is
+    exactly the unpadded state, and the conv tail is gathered from the last
+    valid inputs rather than the padding."""
     s, d_in, nh, conv_dim = _dims(cfg)
     Bsz, L, _ = u.shape
     zxbcdt = linear(p["in_proj"], u)
     z, xBC, dt = _split_proj(zxbcdt, cfg)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if length is not None:
+        valid = jnp.arange(L)[None, :] < length[:, None]      # (B, L)
+        dt = dt * valid[..., None]
     A = -jnp.exp(p["A_log"])
 
     if cache is None:
@@ -101,10 +111,19 @@ def ssm_block(p, u, cfg: ModelConfig, *, cache=None, return_cache=False):
         y = y.reshape(Bsz, L, d_in).astype(u.dtype)
         if return_cache:
             K = s.d_conv
-            tail = xBC_raw[:, max(0, L - (K - 1)):]
-            if tail.shape[1] < K - 1:
-                tail = jnp.pad(tail,
-                               ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
+            if length is not None:
+                # last K-1 *valid* inputs per row; indices before the start
+                # of the sequence read as zeros (same as fresh-cache pad)
+                idx = length[:, None] - (K - 1) + jnp.arange(K - 1)[None, :]
+                in_range = idx >= 0                           # (B, K-1)
+                g = jnp.take_along_axis(
+                    xBC_raw, jnp.clip(idx, 0, L - 1)[..., None], axis=1)
+                tail = jnp.where(in_range[..., None], g, 0)
+            else:
+                tail = xBC_raw[:, max(0, L - (K - 1)):]
+                if tail.shape[1] < K - 1:
+                    tail = jnp.pad(
+                        tail, ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
             new_cache = {"conv": tail.astype(u.dtype), "ssm": final_state}
         else:
             new_cache = None

@@ -116,18 +116,37 @@ def _block_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
 
 
 def make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
-    """Stacked (per-block) decode cache pytree."""
+    """Stacked (per-block) decode cache pytree.
+
+    Layout contract (relied on by the serving engine): every leaf carries
+    the scanned block axis first and the batch axis second, i.e.
+    ``[n_blocks, batch, ...]``, and attention sub-caches keep a *per-row*
+    ``step`` offset — batch slot ``b`` can sit at any sequence depth
+    independently of its neighbours, so one batched cache serves requests
+    of different lengths."""
     dtype = dtype or cfg.act_dtype
     one = _block_cache(cfg, batch, cache_len, dtype)
     nb = n_blocks(cfg)
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (nb,) + x.shape), one)
 
 
+def cache_steps(cache):
+    """Per-slot sequence depth (B,) from the first attention sub-cache, or
+    None for attention-free (pure SSM) stacks whose state is positionless."""
+    for sub in cache.values():
+        if isinstance(sub, dict) and "step" in sub:
+            return sub["step"][0]
+    return None
+
+
 # --------------------------------------------------------------------- #
 # block apply
 # --------------------------------------------------------------------- #
-def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None):
-    """mode: 'train' | 'prefill' | 'decode'. Returns (x, new_cache, aux)."""
+def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
+                length=None):
+    """mode: 'train' | 'prefill' | 'decode'. Returns (x, new_cache, aux).
+    ``length``: optional (B,) valid-token counts for right-padded prefill
+    (bucketed serving prefill); forwarded to the cache writers."""
     spec = block_spec(cfg)
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
@@ -139,7 +158,8 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None):
                 y, nc = L.attention_block(sp["attn"], h, cfg)
             elif mode == "prefill":
                 y, nc = L.prefill_into_cache(sp["attn"], h, cfg,
-                                             cache[f"sub{i}"])
+                                             cache[f"sub{i}"],
+                                             length=length)
             else:
                 y, nc = L.attention_block(sp["attn"], h, cfg,
                                           cache=cache[f"sub{i}"])
@@ -147,7 +167,8 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None):
             if mode == "train":
                 y, nc = S.ssm_block(sp["ssm"], h, cfg)
             elif mode == "prefill":
-                y, nc = S.ssm_block(sp["ssm"], h, cfg, return_cache=True)
+                y, nc = S.ssm_block(sp["ssm"], h, cfg, return_cache=True,
+                                    length=length)
             else:
                 y, nc = S.ssm_block(sp["ssm"], h, cfg,
                                     cache=cache[f"sub{i}"])
@@ -170,8 +191,10 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None):
 # --------------------------------------------------------------------- #
 # full forward passes
 # --------------------------------------------------------------------- #
-def _scan_blocks(params, x, cfg: ModelConfig, *, mode: str, cache=None):
-    block_fn = functools.partial(apply_block, cfg=cfg, mode=mode)
+def _scan_blocks(params, x, cfg: ModelConfig, *, mode: str, cache=None,
+                 length=None):
+    block_fn = functools.partial(apply_block, cfg=cfg, mode=mode,
+                                 length=length)
     if cfg.remat:
         block_fn = jax.checkpoint(block_fn)
 
@@ -239,13 +262,33 @@ def forward_train(params, cfg: ModelConfig, tokens, embeddings=None):
     return logits_from(params, cfg, x), aux
 
 
-def prefill(params, cfg: ModelConfig, tokens, cache, embeddings=None):
-    """Populates cache; returns (last-position logits, cache)."""
+def last_valid(x, length):
+    """x: (B, L, d); length: (B,) valid counts -> (B, 1, d) at the last
+    valid position per row (the whole-sequence last position if None)."""
+    if length is None:
+        return x[:, -1:]
+    idx = jnp.clip(length - 1, 0, x.shape[1] - 1).astype(jnp.int32)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, embeddings=None,
+            length=None):
+    """Populates cache; returns (last-valid-position logits, cache).
+
+    ``length``: optional (B,) total valid positions (frontend tokens +
+    text) when inputs are right-padded to a bucket length. Right padding +
+    causal attention means valid positions are computed identically to an
+    unpadded call; padded cache slots are marked empty (pos = -1) and the
+    per-row ``step`` offset is set to ``length`` so decode resumes at the
+    true depth. One caveat: MoE routing shares an expert-capacity budget
+    across all (incl. padded) tokens, so padded prefill of MoE stacks is
+    only capacity-approximate — the serving engine therefore pads only
+    MoE-free models (exact for dense/ssm/hybrid-no-moe/vlm/encdec)."""
     x = embed_inputs(params, cfg, tokens, embeddings)
     x = shard_activation(x, "act_btd")
     x, new_cache, _ = _scan_blocks(params, x, cfg, mode="prefill",
-                                   cache=cache)
-    return logits_from(params, cfg, x[:, -1:]), new_cache
+                                   cache=cache, length=length)
+    return logits_from(params, cfg, last_valid(x, length)), new_cache
 
 
 def decode_step(params, cfg: ModelConfig, token, cache):

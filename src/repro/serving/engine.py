@@ -1,76 +1,166 @@
-"""Batched serving engine with continuous-batching-lite slot scheduling.
+"""Batched serving engine v2: bucketed prefill + fused on-device decode.
 
 A fixed number of batch *slots* share one batched KV/SSM cache; each slot
-runs an independent sequence at its own offset (per-row ``step`` in the
-cache). When a sequence finishes, the next queued request is prefilled
-(batch=1) and its cache written into the free slot — the decode batch never
-drains. This is the serving analogue the paper's Fig. 3 measures: stable,
-predictable per-token latency under a stream of differently-sized requests.
+runs an independent sequence at its own per-row ``step`` offset. When a
+sequence finishes, the next queued request is prefilled straight into the
+free slot and the decode batch never drains — the serving analogue the
+paper's Fig. 3 measures (stable per-token latency under a stream of
+differently-sized requests). See ``docs/serving.md`` for the lifecycle
+diagram and invariants.
+
+What v2 changes over the first engine:
+
+* **Bucketed prefill** — prompts are right-padded to power-of-two length
+  buckets, so the prefill jit cache holds O(log cache_len) entries instead
+  of one per distinct prompt length. Causality makes right padding free:
+  valid positions attend only to valid positions, the model masks padded
+  cache slots (``pos = -1``) and sets the per-row ``step`` to the true
+  length (``batch["length"]``).
+* **Slot-direct prefill** — the jitted prefill slices slot ``b`` out of the
+  batched cache, runs the model, samples the first token, and writes the
+  slot back with ``dynamic_update_slice`` — all inside one XLA program. No
+  host-side batch=1 cache materialisation, no tree-mapped copy.
+* **Fused decode step** — ``decode_step -> logits -> sample -> bookkeeping``
+  is one jitted, cache-donating program. ``remaining``/``eos``/``active``
+  live on device; steady-state decode performs **zero** host<->device token
+  transfers. Every ``sync_every`` steps the host harvests each occupied
+  slot's new token column (sliced on device, one bounded transfer per
+  slot) and detects finishes by replaying the device's stop conditions.
 """
 from __future__ import annotations
 
 import collections
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.models.model import Model
 from repro.serving.request import Request, Response
 from repro.serving.sampler import Sampler
 
+MIN_BUCKET = 8
 
-def _write_slot(batched, one, b: int):
-    """Write a batch=1 cache pytree into slot ``b`` of a batched cache.
-    All cache leaves carry batch on axis 1 (axis 0 is the scanned
-    layer/block axis)."""
-    return jax.tree.map(lambda full, x: full.at[:, b].set(x[:, 0]),
-                        batched, one)
+
+def bucket_length(n: int, cap: int, lo: int = MIN_BUCKET) -> int:
+    """Smallest power-of-two >= n (floored at ``lo``), capped at ``cap``.
+    The cap keeps the last bucket exactly the cache length even when that
+    is not a power of two (e.g. cache_len=48 -> buckets 8, 16, 32, 48)."""
+    b = max(lo, 1 << max(0, n - 1).bit_length())
+    return min(b, cap)
 
 
 class Engine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  cache_len: int = 512, sampler: Optional[Sampler] = None,
-                 seed: int = 0):
+                 seed: int = 0, sync_every: int = 8,
+                 donate: Optional[bool] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.sampler = sampler or Sampler()
-        self.key = jax.random.PRNGKey(seed)
+        self.sync_every = max(1, sync_every)
+        cfg = model.cfg
+        # actual KV ring length (make_cache caps at the sliding window)
+        self.kv_len = min(cache_len, cfg.sliding_window) \
+            if cfg.sliding_window else cache_len
+        # vlm prompts carry a frontend prefix in the same cache rows
+        self._prefix = cfg.frontend.n_tokens \
+            if (cfg.frontend is not None and cfg.family == "vlm") else 0
+        # MoE routing shares a capacity budget across the whole sequence,
+        # so padding tokens could steal capacity from valid ones: for MoE
+        # models keep the masked slot-reset prefill but pad nothing
+        # (bucket = exact length; more jit entries, exact routing)
+        self._pad_buckets = cfg.moe is None
+        # XLA ignores donation on CPU (and warns); only donate elsewhere
+        self._donate = (jax.default_backend() != "cpu") if donate is None \
+            else donate
 
+        # host-side scheduling state
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_batch
+        self.requests: Dict[int, Request] = {}
         self.responses: Dict[int, Response] = {}
-        self.remaining = np.zeros(max_batch, np.int64)
-        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
-        self.cache = model.make_cache(max_batch, cache_len)
         self.step_times: List[float] = []
 
-        self._decode = jax.jit(model.decode_step)
-        self._prefill_cache: Dict[Any, Any] = {}
+        # device-resident decode state (never read back in steady state)
+        self.key = jax.random.PRNGKey(seed)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.remaining = jnp.zeros((max_batch,), jnp.int32)
+        self.active = jnp.zeros((max_batch,), bool)
+        self.eos = jnp.full((max_batch,), -1, jnp.int32)
+        self.cache = model.make_cache(max_batch, cache_len)
 
+        # per-step sampled-token trace: device arrays, harvested lazily
+        self._trace: List[jax.Array] = []
+        self._trace_base = 0                      # global step of _trace[0]
+        self._slot_start = [0] * max_batch        # global step per slot
+        self._steps = 0
+
+        self._step_fn = self._build_step()
+        self._prefill_jits: Dict[Tuple, Any] = {}
+
+    # ------------------------------------------------------------ #
+    # jitted programs
+    # ------------------------------------------------------------ #
+    def _build_step(self):
+        """Fused decode: model step + sampling + slot bookkeeping, with the
+        cache and decode state donated so XLA updates them in place."""
+        model, sampler = self.model, self.sampler
+
+        def step(params, cache, tokens, remaining, active, eos, key):
+            logits, cache = model.decode_step(params, tokens, cache)
+            key, sk = jax.random.split(key)
+            nxt = sampler(sk, logits[:, -1].astype(jnp.float32))   # (B,)
+            done = active & ((remaining <= 1) | (nxt == eos))
+            new_active = active & ~done
+            remaining = jnp.where(active, remaining - 1, remaining)
+            return nxt[:, None], cache, remaining, new_active, key
+
+        donate = (1, 2, 3, 4) if self._donate else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    def _get_prefill(self, bucket: int, masked: bool, has_emb: bool):
+        """One compiled program per (bucket length, masked, embeddings)
+        signature — the jit cache is O(log cache_len), not O(#lengths)."""
+        kf = (bucket, masked, has_emb)
+        if kf in self._prefill_jits:
+            return self._prefill_jits[kf]
+        model, sampler = self.model, self.sampler
+
+        def prefill(params, tokens, length, emb, b, cache, key):
+            cache1 = jax.tree.map(
+                lambda t: lax.dynamic_slice_in_dim(t, b, 1, axis=1), cache)
+            batch = {"tokens": tokens}
+            if emb is not None:
+                batch["embeddings"] = emb
+            if masked:
+                batch["length"] = length
+            logits, cache1 = model.prefill(params, batch, cache1)
+            first = sampler(key, logits[:, -1].astype(jnp.float32))  # (1,)
+            cache = jax.tree.map(
+                lambda full, u: lax.dynamic_update_slice_in_dim(
+                    full, u, b, axis=1), cache, cache1)
+            return first, cache
+
+        donate = (5,) if self._donate else ()
+        fn = jax.jit(prefill, donate_argnums=donate)
+        self._prefill_jits[kf] = fn
+        return fn
+
+    # ------------------------------------------------------------ #
+    # scheduling
     # ------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         req.submitted_s = time.perf_counter()
         self.queue.append(req)
+        self.requests[req.uid] = req
         self.responses[req.uid] = Response(uid=req.uid,
                                            prompt_len=len(req.prompt))
-
-    def _prefill_one(self, req: Request):
-        L = len(req.prompt)
-        kcache = ("pf", L, req.embeddings is not None)
-        if kcache not in self._prefill_cache:
-            self._prefill_cache[kcache] = jax.jit(self.model.prefill)
-        fn = self._prefill_cache[kcache]
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-        if req.embeddings is not None:
-            batch["embeddings"] = jnp.asarray(req.embeddings)[None]
-        cache1 = self.model.make_cache(1, self.cache_len)
-        logits, cache1 = fn(self.params, batch, cache1)
-        return logits, cache1
 
     def _fill_free_slots(self) -> None:
         for b in range(self.max_batch):
@@ -78,69 +168,164 @@ class Engine:
                 continue
             req = self.queue.popleft()
             req.started_s = time.perf_counter()
-            logits, cache1 = self._prefill_one(req)
-            self.cache = _write_slot(self.cache, cache1, b)
+            L = len(req.prompt)
+            # prompts longer than the KV ring (sliding-window caches) fall
+            # back to exact-length ring prefill, which rewrites the full row
+            cap = self.kv_len - self._prefix
+            masked = L <= cap
+            Lb = bucket_length(L, cap) if (masked and self._pad_buckets) \
+                else L
+            toks = np.zeros((1, Lb), np.int32)
+            toks[0, :L] = np.asarray(req.prompt, np.int32)
+            emb = None
+            if req.embeddings is not None:
+                emb = jnp.asarray(req.embeddings)[None]
             self.key, sk = jax.random.split(self.key)
-            first = self.sampler(sk, logits[:, -1].astype(jnp.float32))
+            fn = self._get_prefill(Lb, masked, emb is not None)
+            first, self.cache = fn(self.params, jnp.asarray(toks),
+                                   jnp.asarray([L], jnp.int32), emb,
+                                   jnp.int32(b), self.cache, sk)
+            # the only per-request host sync: the first sampled token
             tok = int(first[0])
+            req.first_token_s = time.perf_counter()
             resp = self.responses[req.uid]
             resp.tokens.append(tok)
             if req.max_new_tokens <= 1 or (req.eos_id is not None
                                            and tok == req.eos_id):
                 resp.finished = True
+                resp.finish_reason = "eos" if (
+                    req.eos_id is not None and tok == req.eos_id) \
+                    else "length"
                 req.finished_s = time.perf_counter()
                 continue  # slot stays free
-            self.tokens = self.tokens.at[b, 0].set(first[0])
+            self.tokens = self.tokens.at[b, 0].set(tok)
+            self.remaining = self.remaining.at[b].set(
+                req.max_new_tokens - 1)
+            self.active = self.active.at[b].set(True)
+            self.eos = self.eos.at[b].set(
+                -1 if req.eos_id is None else int(req.eos_id))
             self.slots[b] = req
-            self.remaining[b] = req.max_new_tokens - 1
+            self._slot_start[b] = self._steps
 
     # ------------------------------------------------------------ #
+    # decode
+    # ------------------------------------------------------------ #
     def step(self) -> None:
-        """One batched decode step across all active slots."""
+        """One batched decode step. Pure device work: tokens, finish flags,
+        and counters all stay on device; nothing is transferred."""
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(self.params, self.tokens,
-                                          self.cache)
-        self.key, sk = jax.random.split(self.key)
-        nxt = self.sampler(sk, logits[:, -1].astype(jnp.float32))
-        nxt = np.asarray(nxt)
-        self.tokens = jnp.asarray(nxt[:, None])
+        (self.tokens, self.cache, self.remaining, self.active,
+         self.key) = self._step_fn(self.params, self.cache, self.tokens,
+                                   self.remaining, self.active, self.eos,
+                                   self.key)
+        self._trace.append(self.tokens[:, 0])
+        self._steps += 1
         self.step_times.append(time.perf_counter() - t0)
 
+    def _poll(self) -> None:
+        """The periodic host sync: harvest each occupied slot's new token
+        column (one bounded transfer per slot, sliced on device) and prune
+        the trace. Finish detection replays the device's own stop
+        conditions on the harvested tokens, so host and device slot state
+        agree by construction."""
+        if not self._trace:
+            return
+        jax.block_until_ready(self._trace[-1])
+        full = jnp.stack(self._trace)                      # (T, B) device
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(nxt[b])
-            resp = self.responses[req.uid]
+            start = self._slot_start[b] - self._trace_base
+            if start >= full.shape[0]:
+                continue                                   # armed post-trace
+            self._harvest(b, np.asarray(full[start:, b]))
+        # every occupied slot has now consumed the whole trace
+        keep_from = min((self._slot_start[b] for b, r
+                         in enumerate(self.slots) if r is not None),
+                        default=self._steps)
+        drop = keep_from - self._trace_base
+        if drop > 0:
+            del self._trace[:drop]
+            self._trace_base = keep_from
+
+    def _harvest(self, b: int, col: np.ndarray) -> None:
+        """Append slot ``b``'s sampled tokens host-side. The device kept
+        decoding after the slot finished (it only learns at the next poll),
+        so cut the column at the true stop condition — the same condition
+        the fused step applied on device."""
+        req = self.slots[b]
+        resp = self.responses[req.uid]
+        done = False
+        for tok in col:
+            tok = int(tok)
             resp.tokens.append(tok)
-            self.remaining[b] -= 1
-            done = self.remaining[b] <= 0 or (req.eos_id is not None
-                                              and tok == req.eos_id)
-            if done:
-                resp.finished = True
-                req.finished_s = time.perf_counter()
-                self.slots[b] = None
+            if (req.eos_id is not None and tok == req.eos_id):
+                resp.finish_reason = "eos"
+                done = True
+                break
+            if len(resp.tokens) >= req.max_new_tokens:
+                resp.finish_reason = "length"
+                done = True
+                break
+        if done:
+            resp.finished = True
+            req.finished_s = time.perf_counter()
+            self.slots[b] = None
+        else:
+            self._slot_start[b] = self._steps              # all consumed
 
     @property
-    def active(self) -> int:
+    def active_slots(self) -> int:
         return sum(s is not None for s in self.slots)
 
-    def run(self, max_steps: int = 100_000) -> Dict[int, Response]:
+    def run(self, max_steps: int = 100_000,
+            sync_every: Optional[int] = None) -> Dict[int, Response]:
+        k = self.sync_every if sync_every is None else max(1, sync_every)
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while (self.queue or self.active_slots) and steps < max_steps:
             self._fill_free_slots()
-            if self.active:
+            if not self.active_slots:
+                continue  # whole queue finished at prefill (max_new <= 1)
+            t0 = time.perf_counter()
+            n0 = len(self.step_times)
+            for _ in range(k):
+                first_ever = self._steps == 0
                 self.step()
-            steps += 1
+                steps += 1
+                if first_ever:
+                    # isolate the fused-step compile in step_times[0]
+                    # (latency_stats drops it) so burst averaging below
+                    # never smears it over steady-state entries
+                    jax.block_until_ready(self.tokens)
+                    self.step_times[-1] = time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    n0 = len(self.step_times)
+                if steps >= max_steps:
+                    break
+            jax.block_until_ready(self.tokens)
+            # burst-average: per-step dispatch time plus its share of sync
+            if len(self.step_times) > n0:
+                dt = (time.perf_counter() - t0) / (len(self.step_times)
+                                                   - n0)
+                for i in range(n0, len(self.step_times)):
+                    self.step_times[i] = dt
+            self._poll()
+        self._poll()   # partial tokens for interrupted slots
         return self.responses
 
     # ------------------------------------------------------------ #
     def latency_stats(self) -> Dict[str, float]:
         ts = np.asarray(self.step_times[1:] or [0.0])  # drop compile step
         finished = [r for r in self.responses.values() if r.finished]
+        ttft = [r.first_token_s - r.submitted_s
+                for r in self.requests.values() if r.first_token_s]
         return {
             "decode_ms_mean": float(ts.mean() * 1e3),
             "decode_ms_p50": float(np.percentile(ts, 50) * 1e3),
             "decode_ms_p99": float(np.percentile(ts, 99) * 1e3),
+            "ttft_ms_mean": float(np.mean(ttft) * 1e3) if ttft else 0.0,
             "n_finished": len(finished),
             "tokens_generated": sum(r.n_generated for r in finished),
+            "prefill_jit_entries": len(self._prefill_jits),
+            "decode_steps": self._steps,
         }

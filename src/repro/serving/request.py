@@ -17,7 +17,8 @@ class Request:
     embeddings: Optional[np.ndarray] = None  # vlm/audio frontend output
 
     submitted_s: float = 0.0
-    started_s: float = 0.0
+    started_s: float = 0.0          # prefill dispatched
+    first_token_s: float = 0.0      # first token available on host
     finished_s: float = 0.0
 
 
@@ -27,6 +28,7 @@ class Response:
     tokens: List[int] = field(default_factory=list)
     finished: bool = False
     prompt_len: int = 0
+    finish_reason: str = ""         # "eos" | "length" | "" (still running)
 
     @property
     def n_generated(self) -> int:

@@ -1,4 +1,10 @@
-"""Token samplers: greedy / temperature / top-k, jit-friendly."""
+"""Token samplers: greedy / temperature / top-k / top-p.
+
+The sampler is a frozen dataclass of *static* knobs so the serving engine
+can close over it inside ``jax.jit`` — the whole ``decode_step -> logits ->
+next token`` chain compiles into one XLA program and sampled tokens never
+leave the device (engine v2's fused decode step).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -6,20 +12,39 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+NEG_INF = -1e30
+
 
 @dataclass(frozen=True)
 class Sampler:
     temperature: float = 0.0   # 0 = greedy
     top_k: int = 0             # 0 = full distribution
+    top_p: float = 1.0         # 1 = no nucleus truncation
 
     def __call__(self, key, logits):
-        """logits: (B, V) f32 -> token ids (B,) int32."""
+        """logits: (B, V) f32 -> token ids (B,) int32. ``key`` is unused
+        (but accepted) for greedy decoding so call sites are uniform."""
         if self.temperature == 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         logits = logits / self.temperature
+        if self.top_p < 1.0:
+            logits = self._nucleus(logits)
         if self.top_k:
             vals, idx = jax.lax.top_k(logits, self.top_k)
             choice = jax.random.categorical(key, vals)
             return jnp.take_along_axis(idx, choice[:, None],
                                        axis=-1)[:, 0].astype(jnp.int32)
         return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    def _nucleus(self, logits):
+        """Mask logits outside the smallest set with cumulative prob >=
+        top_p (the highest-probability token always survives)."""
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep tokens whose *preceding* cumulative mass is < top_p; the
+        # top token is kept unconditionally (top_p <= 0 = top-1)
+        keep_sorted = ((cum - probs) < self.top_p).at[:, 0].set(True)
+        cutoff = jnp.min(jnp.where(keep_sorted, sorted_logits, jnp.inf),
+                         axis=-1, keepdims=True)
+        return jnp.where(logits >= cutoff, logits, NEG_INF)

@@ -3,7 +3,11 @@ must all finish with exactly the requested token counts, regardless of
 batch size, prompt lengths, or arrival order."""
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; "
+                    "pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_arch
 from repro.models.model import build

@@ -46,8 +46,10 @@ def test_microbatch_equals_full_batch_grads():
                                float(m_micro["loss"]), rtol=1e-5)
     for a, b in zip(jax.tree.leaves(s_full["params"]),
                     jax.tree.leaves(s_micro["params"])):
+        # accumulation reassociates the batch-mean sum; allow a few ulps
+        # of f32 slack on top of the optimizer-step magnitude
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=1e-4, atol=1e-5)
+                                   rtol=1e-4, atol=5e-5)
 
 
 def test_loss_decreases_end_to_end():
