@@ -1,8 +1,16 @@
 """Microbenchmarks: jnp reference paths on CPU (wall time) — honest CPU
 numbers; TPU performance is analysed structurally via the dry-run
-roofline, not measured here."""
+roofline, not measured here.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels [--out BENCH_kernels.json]
+
+Emits the same machine-readable JSON shape as bench_serving so CI can
+archive one unified perf artifact across benches.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -74,12 +82,40 @@ def run() -> List[Dict]:
     t = _bench(fn, pmoe, xm)
     rows.append({"name": "moe_block_512tok", "us_per_call": t * 1e6,
                  "derived": f"{512/t:,.0f}tok/s"})
+
+    # fused dequantize-matmul (weight-only quantized decode projection)
+    from repro.kernels.quant_matmul.ops import quant_matmul
+    from repro.quant import qtensor_nbytes, quantize_tensor
+    M, K, N = 8, 1024, 4096
+    xq = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    for bits, tag in ((8, "int8"), (4, "int4")):
+        qt = quantize_tensor(w, bits=bits, group_size=64)
+        fn = jax.jit(lambda x, q=qt: quant_matmul(x, q))
+        t = _bench(fn, xq)
+        wbytes = qtensor_nbytes(qt)
+        rows.append({"name": f"quant_matmul_{tag}_1kx4k",
+                     "us_per_call": t * 1e6,
+                     "derived": f"{wbytes/t/1e9:.1f}GB/s"})
     return rows
 
 
-def main():
-    for r in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="",
+                    help="JSON output path ('' = CSV to stdout only)")
+    args = ap.parse_args(argv)
+
+    rows = run()
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.out:
+        payload = {"bench": "kernels", "backend": jax.default_backend(),
+                   "rows": rows}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+    return rows
 
 
 if __name__ == "__main__":

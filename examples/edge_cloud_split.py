@@ -26,6 +26,11 @@ plans = {
     "all-remote (cloud API)": DeploymentPlan.all_remote(service, net),
     "split (backbone edge, decode cloud)":
         DeploymentPlan.split(service, 1, net),
+    # precision is an endpoint property: int4 backbone on the edge
+    # device, fp decode in the cloud — structure still unchanged
+    "edge-split (int4 backbone edge, decode cloud)":
+        DeploymentPlan.edge_split(service, 1, quantize="int4",
+                                  network=net),
 }
 
 for name, plan in plans.items():
@@ -34,6 +39,7 @@ for name, plan in plans.items():
     print(f"\n{name}")
     for s in tel.stages:
         print(f"  stage {s.stage:45s} @{s.endpoint:6s} "
+              f"[{s.precision:4s} {s.param_bytes/1e6:6.1f}MB] "
               f"compute={s.compute_s*1e3:8.2f}ms "
               f"network={s.transfer_s*1e3:8.2f}ms")
     print(f"  TOTAL {tel.total_s*1e3:8.2f}ms  "

@@ -23,17 +23,25 @@ ARCHS = {c.name: c for c in [
 
 
 def get_arch(name: str, *, variant: str = "") -> ModelConfig:
-    """Resolve an architecture id, optionally with a variant suffix.
+    """Resolve an architecture id, optionally with "+"-composable variant
+    suffixes (applied left to right).
 
     variants: "swa" -> sliding-window attention (window 4096) for
     sub-quadratic long-context decode on dense archs; "reduced" -> smoke
-    config.
+    config; "edge" -> the edge-deployment profile (int4 weight-only
+    quantization + int8 KV cache — what fits a memory-bound local
+    device), e.g. ``get_arch("llama3.2-1b", variant="edge")`` or
+    ``"reduced+edge"`` for the smoke-sized edge model.
     """
     cfg = ARCHS.get(name) or EXTRA_ARCHS[name]
-    if variant == "swa":
-        cfg = cfg.replace(name=cfg.name + "-swa", sliding_window=4096)
-    elif variant == "reduced":
-        cfg = cfg.reduced()
-    elif variant:
-        raise ValueError(f"unknown variant {variant!r}")
+    for v in filter(None, variant.split("+")):
+        if v == "swa":
+            cfg = cfg.replace(name=cfg.name + "-swa", sliding_window=4096)
+        elif v == "reduced":
+            cfg = cfg.reduced()
+        elif v == "edge":
+            cfg = cfg.replace(name=cfg.name + "-edge", quant="int4",
+                              kv_quant=True)
+        else:
+            raise ValueError(f"unknown variant {v!r}")
     return cfg

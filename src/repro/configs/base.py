@@ -96,6 +96,10 @@ class ModelConfig:
     attn_block: int = 0             # >0: chunked causal attention (skip
                                     # above-diagonal blocks, flash-style)
     kv_quant: bool = False          # int8 KV cache (per-slot-head scales)
+    quant: str = ""                 # weight-only PTQ: "" | "int8" | "int4"
+                                    # (the single knob quantize_for_cfg and
+                                    # the edge variant key off)
+    quant_group: int = 32           # int4 group size along d_in
     use_decode_kernel: bool = False  # route cached decode attention through
                                      # kernels/decode_attention (Pallas-ready
                                      # layout; reference path by default)

@@ -16,6 +16,7 @@ the intermediate pytree bytes.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -33,6 +34,12 @@ class Endpoint:
     kind: str = "local"                      # local | mesh | remote
     mesh: Optional[Any] = None
     network: Optional[NetworkModel] = None   # for remote
+    quantize: str = ""                       # "" | "int8" | "int4": stages
+                                             # placed here hold weight-
+                                             # quantized params (edge
+                                             # memory profile); dequant
+                                             # runs inside the stage's
+                                             # jitted program
 
 
 @dataclass
@@ -41,6 +48,8 @@ class StageTelemetry:
     endpoint: str
     compute_s: float
     transfer_s: float
+    precision: str = "fp"                    # endpoint's quantize profile
+    param_bytes: int = 0                     # stage params as stored
 
 
 @dataclass
@@ -65,14 +74,16 @@ class DeploymentPlan:
 
     @classmethod
     def all_local(cls, service: Service) -> "DeploymentPlan":
-        stages = service.metadata.get("stages", [service.name])
+        # map the composite's own name too: non-seq combinators
+        # (ensemble/route/parallel) deploy as a single stage under it
+        stages = service.metadata.get("stages", []) + [service.name]
         return cls(endpoints={"local": Endpoint("local")},
                    assignments={s: "local" for s in stages})
 
     @classmethod
     def all_remote(cls, service: Service,
                    network: Optional[NetworkModel] = None) -> "DeploymentPlan":
-        stages = service.metadata.get("stages", [service.name])
+        stages = service.metadata.get("stages", []) + [service.name]
         ep = Endpoint("cloud", kind="remote",
                       network=network or NetworkModel())
         return cls(endpoints={"cloud": ep},
@@ -83,12 +94,33 @@ class DeploymentPlan:
               network: Optional[NetworkModel] = None) -> "DeploymentPlan":
         """First ``split_at`` stages local, rest remote (Neurosurgeon-style
         hybrid the paper cites)."""
-        stages = service.metadata.get("stages", [service.name])
+        stages = service.metadata.get("stages") or [service.name]
         eps = {"local": Endpoint("local"),
                "cloud": Endpoint("cloud", kind="remote",
                                  network=network or NetworkModel())}
         asg = {s: ("local" if i < split_at else "cloud")
                for i, s in enumerate(stages)}
+        # a non-seq combinator deploys as ONE stage under its own name
+        asg.setdefault(service.name, "local" if split_at > 0 else "cloud")
+        return cls(endpoints=eps, assignments=asg)
+
+    @classmethod
+    def edge_split(cls, service: Service, split_at: int,
+                   quantize: str = "int4",
+                   network: Optional[NetworkModel] = None
+                   ) -> "DeploymentPlan":
+        """The paper's step-3 property under a memory budget: the first
+        ``split_at`` stages run on a local *edge* endpoint with
+        weight-quantized params (int4 by default), the rest run remote in
+        full precision — placement and precision change, the composed
+        service's structure doesn't."""
+        stages = service.metadata.get("stages") or [service.name]
+        eps = {"edge": Endpoint("edge", kind="local", quantize=quantize),
+               "cloud": Endpoint("cloud", kind="remote",
+                                 network=network or NetworkModel())}
+        asg = {s: ("edge" if i < split_at else "cloud")
+               for i, s in enumerate(stages)}
+        asg.setdefault(service.name, "edge" if split_at > 0 else "cloud")
         return cls(endpoints=eps, assignments=asg)
 
 
@@ -114,8 +146,20 @@ class DeployedService:
     def _group(self) -> List[Tuple[Endpoint, List[Service]]]:
         groups: List[Tuple[Endpoint, List[Service]]] = []
         for s in self.stages:
-            ep_name = self.plan.assignments.get(s.name, "local")
-            ep = self.plan.endpoints[ep_name]
+            ep_name = self.plan.assignments.get(s.name)
+            if ep_name is not None:
+                # explicit assignment: a missing endpoint is a plan bug
+                ep = self.plan.endpoints[ep_name]
+            elif "local" in self.plan.endpoints:
+                ep = self.plan.endpoints["local"]      # historical default
+            elif len(self.plan.endpoints) == 1:
+                # unassigned stage, sole endpoint: unambiguous
+                ep = next(iter(self.plan.endpoints.values()))
+            else:
+                raise KeyError(
+                    f"stage {s.name!r} has no endpoint assignment and the "
+                    f"plan has no 'local' endpoint to default to "
+                    f"(endpoints: {sorted(self.plan.endpoints)})")
             if groups and groups[-1][0].name == ep.name:
                 groups[-1][1].append(s)
             else:
@@ -126,8 +170,21 @@ class DeployedService:
         if gi not in self._compiled:
             ep, stages = self._groups[gi]
             svc = stages[0] if len(stages) == 1 else seq(*stages)
+            if ep.quantize and svc.params is not None:
+                # store the stage's params quantized (the endpoint's
+                # memory budget is what the profile models) and
+                # dequantize inside the jitted program — generic over any
+                # service fn, and XLA fuses the dequant into consumers
+                from repro.quant import dequantize_params, quantize_params
+                bits = {"int8": 8, "int4": 4}[ep.quantize]
+                raw_fn = svc.fn
+                svc = dataclasses.replace(
+                    svc, params=quantize_params(svc.params, bits=bits),
+                    fn=lambda p, x, _f=raw_fn: _f(dequantize_params(p), x))
             fn = jax.jit(svc.fn)
-            self._compiled[gi] = (svc, fn)
+            nbytes = tree_nbytes(svc.params) if svc.params is not None \
+                else 0
+            self._compiled[gi] = (svc, fn, nbytes)
         return self._compiled[gi]
 
     # -------------------------------------------------------------- #
@@ -136,7 +193,7 @@ class DeployedService:
         telemetry = Telemetry()
         x = inputs
         for gi, (ep, stages) in enumerate(self._groups):
-            svc, fn = self._fn_for(gi)
+            svc, fn, param_bytes = self._fn_for(gi)
             payload = tree_nbytes(x)
 
             def run():
@@ -161,7 +218,9 @@ class DeployedService:
                 compute_s = 0.0
             telemetry.stages.append(StageTelemetry(
                 stage="+".join(s.name for s in stages), endpoint=ep.name,
-                compute_s=compute_s, transfer_s=transfer_s))
+                compute_s=compute_s, transfer_s=transfer_s,
+                precision=ep.quantize or "fp",
+                param_bytes=param_bytes))
             x = y
         return x, telemetry
 

@@ -1,0 +1,41 @@
+"""Dispatch wrapper: QTensor-aware matmul over arbitrary-rank inputs.
+
+``quant_matmul(x, qt)`` is what ``models.layers.linear`` routes through
+when a projection weight is quantized. The reference path is the default
+(interpret-safe everywhere, identical math); ``use_pallas=True`` runs
+the fused Pallas kernel, which requires tile-divisible shapes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul import ref as _ref
+from repro.kernels.quant_matmul.kernel import (quant_matmul_int4_pallas,
+                                               quant_matmul_int8_pallas)
+
+
+def quant_matmul(x, qt, *, use_pallas=False, interpret=True, bm=128,
+                 bn=128):
+    """x: (..., K) activations; qt: QTensor dict for a (K, N) weight.
+    Returns (..., N) in x.dtype."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    scale = jnp.asarray(qt["scale"])
+    if "q" in qt:
+        q = jnp.asarray(qt["q"])
+        if use_pallas:
+            y = quant_matmul_int8_pallas(x2, q, scale, bm=bm, bn=bn,
+                                         interpret=interpret)
+        else:
+            y = _ref.quant_matmul_int8_reference(x2, q, scale)
+        N = q.shape[1]
+    else:
+        q4 = jnp.asarray(qt["q4"])
+        if use_pallas:
+            y = quant_matmul_int4_pallas(x2, q4, scale, bm=bm, bn=bn,
+                                         interpret=interpret)
+        else:
+            y = _ref.quant_matmul_int4_reference(x2, q4, scale)
+        N = q4.shape[1]
+    return y.reshape(lead + (N,))

@@ -1,0 +1,33 @@
+"""Oracle for the fused dequantize-matmul.
+
+int8 per-channel exploits the scale algebra: ``x @ (q * s[None, :]) ==
+(x @ q) * s[None, :]``, so dequantization is a free epilogue on the
+accumulator. int4 group-wise needs the per-group contraction before the
+scale can be applied: ``y = sum_g (x_g @ q_g) * s_g``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.qtensor import unpack_int4
+
+
+def quant_matmul_int8_reference(x, q, scale):
+    """x: (M, K) float; q: (K, N) int8; scale: (N,) f32 -> (M, N)."""
+    acc = jnp.dot(x.astype(jnp.float32), q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc * scale[None, :].astype(jnp.float32)).astype(x.dtype)
+
+
+def quant_matmul_int4_reference(x, q4, scale):
+    """x: (M, K) float; q4: (K//2, N) packed int8; scale: (ng, N) f32."""
+    qf = unpack_int4(q4).astype(jnp.float32)          # (K, N)
+    K, N = qf.shape
+    ng = scale.shape[0]
+    gs = K // ng
+    xg = x.astype(jnp.float32).reshape(-1, ng, gs)
+    qg = qf.reshape(ng, gs, N)
+    partial = jnp.einsum("mgk,gkn->mgn", xg, qg,
+                         preferred_element_type=jnp.float32)
+    y = jnp.sum(partial * scale[None].astype(jnp.float32), axis=1)
+    return y.astype(x.dtype)

@@ -31,17 +31,32 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sync-every", type=int, default=8,
                     help="decode steps between finished-flag polls")
+    ap.add_argument("--quant", choices=["", "none", "int8", "int4"],
+                    default="",
+                    help="weight-only PTQ of the served params: int8/int4 "
+                         "override the config's cfg.quant knob, 'none' "
+                         "forces full precision even for quantized "
+                         "variants (e.g. edge), '' keeps the config's "
+                         "setting")
+    ap.add_argument("--kv-cache-dtype", choices=["", "int8"], default="",
+                    help="int8 = quantized KV cache (edge memory profile)")
     ap.add_argument("--json", default="",
                     help="optional path to dump latency stats as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch, variant=args.variant)
+    if args.quant:
+        cfg = cfg.replace(quant="" if args.quant == "none" else args.quant)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    if cfg.quant:
+        from repro.quant import quantize_for_cfg
+        params = quantize_for_cfg(params, cfg)
     engine = Engine(model, params, max_batch=args.max_batch,
                     cache_len=args.cache_len,
                     sampler=Sampler(temperature=args.temperature, top_k=32),
-                    seed=args.seed, sync_every=args.sync_every)
+                    seed=args.seed, sync_every=args.sync_every,
+                    kv_cache_dtype=args.kv_cache_dtype)
 
     rng = np.random.default_rng(args.seed)
     fe = cfg.frontend

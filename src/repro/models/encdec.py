@@ -146,10 +146,13 @@ def _dec_block(lp, x, cfg: ModelConfig, *, mode, cache=None, memory=None,
 
 def make_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int,
                       src_len: int, dtype=None):
+    """``cfg.kv_quant`` stores the growing self-attention KV ring as int8;
+    the cross-attention memory keys (xk/xv, written once at prefill and
+    bounded by src_len) stay in model dtype."""
     dtype = dtype or cfg.act_dtype
     one = {
         "self": L.make_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.hd,
-                                dtype),
+                                dtype, quant=cfg.kv_quant),
         "xk": jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.hd), dtype),
         "xv": jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.hd), dtype),
     }

@@ -33,7 +33,18 @@ def init_linear(key, d_in, d_out, dtype, bias=False):
 
 
 def linear(p, x):
-    y = x @ p["w"]
+    """Dense or quantized projection. Quantization is structural: when
+    ``quant.quantize_params`` has replaced ``p["w"]`` with a QTensor dict
+    (``{"q"|"q4", "scale"}``), the matmul routes through the fused
+    dequantize-matmul op — the dict-key check is static under tracing, so
+    every stack (attention, MLP, SSM projections, enc-dec, frontend, LM
+    head) works quantized with no caller changes."""
+    w = p["w"]
+    if isinstance(w, dict):
+        from repro.kernels.quant_matmul.ops import quant_matmul
+        y = quant_matmul(x, w)
+    else:
+        y = x @ w
     if "b" in p:
         y = y + p["b"]
     return y

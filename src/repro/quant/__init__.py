@@ -1,0 +1,34 @@
+"""Post-training quantization subsystem (edge deployment).
+
+The paper's follow-up (arXiv:1805.05995) makes model compression an
+explicit step of deploying composed services on edge devices; this
+package provides the repo's weight + KV-cache quantization:
+
+* ``qtensor``  — the on-device quantized tensor format (``QTensor`` dict
+  pytrees: symmetric per-channel int8, group-wise packed int4) with
+  pack/unpack and quantize/dequantize primitives.
+* ``params``   — whole-param-tree quantization (walks the nested-dict
+  param trees produced by ``models/``), save/load round-trip through the
+  existing npz checkpointing, and byte accounting.
+
+Quantized projections route through ``kernels/quant_matmul`` via
+``models.layers.linear`` (structural dispatch: a ``{"q"| "q4", "scale"}``
+dict where a weight array used to be), so every stack — transformer,
+SSM, MoE, enc-dec — works quantized without model changes. The int8
+KV-cache lives in ``models.layers.make_kv_cache(quant=True)`` and is
+switched from serving via ``Engine(kv_cache_dtype="int8")``.
+"""
+from repro.quant.qtensor import (QTENSOR_KEYS, dequantize_tensor,
+                                 is_qtensor, pack_int4, qtensor_bits,
+                                 qtensor_nbytes, quantize_tensor,
+                                 unpack_int4)
+from repro.quant.params import (dequantize_params, load_quantized,
+                                quantize_for_cfg, quantize_params,
+                                quantized_stats, save_quantized)
+
+__all__ = [
+    "QTENSOR_KEYS", "dequantize_tensor", "is_qtensor", "pack_int4",
+    "qtensor_bits", "qtensor_nbytes", "quantize_tensor", "unpack_int4",
+    "dequantize_params", "load_quantized", "quantize_for_cfg",
+    "quantize_params", "quantized_stats", "save_quantized",
+]

@@ -1,0 +1,136 @@
+"""Param-tree quantization: walk the nested-dict param trees and replace
+eligible projection weights with QTensor dicts.
+
+Eligibility is structural: every ``init_linear`` weight sits at key
+``"w"`` inside its own sub-dict, so quantizing ``{"w": array}`` leaves
+covers q/k/v/o projections, MLP and shared-expert projections, SSM
+in/out projections, enc-dec cross-attention, the frontend projector and
+the LM head — across every stack — while leaving norms, biases, conv
+kernels, embeddings (``"table"``, a lookup not a matmul) and the stacked
+MoE expert einsum weights (``wi``/``wg``/``wo`` arrays, routed through
+einsum not ``linear``) in full precision. Router weights are skipped by
+default: a flipped top-k there changes *which* expert runs, a much
+larger error than quantizing the expert itself.
+
+Because stacked block params carry a leading scan axis, quantization
+treats the last two dims as ``(d_in, d_out)`` and broadcasts over the
+rest; ``lax.scan`` then slices ``q``/``scale`` per block exactly like it
+sliced the dense weight.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.quant.qtensor import (dequantize_tensor, is_qtensor,
+                                 qtensor_nbytes, quantize_tensor)
+
+SKIP_KEYS = ("router",)
+
+
+def _eligible(val, min_size: int) -> bool:
+    return hasattr(val, "shape") and hasattr(val, "dtype") \
+        and jnp.issubdtype(jnp.asarray(val).dtype, jnp.floating) \
+        and val.ndim >= 2 and int(np.prod(val.shape[-2:])) >= min_size
+
+
+def quantize_params(params, bits: int = 8, group_size: int = 32,
+                    min_size: int = 0, skip: Tuple[str, ...] = SKIP_KEYS):
+    """Replace eligible ``{"w": array}`` leaves with QTensor dicts.
+
+    ``bits``: 8 (per-channel) or 4 (group-wise packed; odd d_in leaves
+    fall back to int8). ``min_size``: smallest (d_in * d_out) worth
+    quantizing. ``skip``: sub-tree keys left untouched.
+    """
+    if bits not in (8, 4):
+        raise ValueError(f"bits must be 8 or 4, got {bits}")
+
+    def walk(node):
+        if not isinstance(node, dict) or is_qtensor(node):
+            return node
+        out = {}
+        for k, v in node.items():
+            if k in skip:
+                out[k] = v
+            elif k == "w" and _eligible(v, min_size):
+                b = bits if (bits == 8 or v.shape[-2] % 2 == 0) else 8
+                out[k] = quantize_tensor(v, bits=b, group_size=group_size)
+            elif isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = v
+        return out
+
+    return walk(params)
+
+
+def dequantize_params(params, dtype=None):
+    """Inverse walk: QTensor leaves -> dense arrays (jit-safe, so it can
+    run inside a compiled program — dequantize-on-the-fly deployment)."""
+    def walk(node):
+        if is_qtensor(node):
+            return dequantize_tensor(node, dtype or jnp.float32)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+    return walk(params)
+
+
+def quantize_for_cfg(params, cfg):
+    """The single ``cfg.quant`` knob: '' -> identity, 'int8'/'int4' ->
+    quantized tree with ``cfg.quant_group`` group size."""
+    if not cfg.quant:
+        return params
+    bits = {"int8": 8, "int4": 4}[cfg.quant]
+    return quantize_params(params, bits=bits, group_size=cfg.quant_group)
+
+
+# --------------------------------------------------------------------- #
+# accounting
+# --------------------------------------------------------------------- #
+def quantized_stats(params) -> Dict[str, int]:
+    """Bytes of the projection ("w") weights — dense or quantized — plus
+    leaf counts and the whole-tree total, for the bench's bytes report."""
+    import jax
+    stats = {"weight_bytes": 0, "n_quantized": 0, "n_dense": 0,
+             "total_bytes": sum(
+                 int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+                 for x in jax.tree.leaves(params))}
+
+    def walk(node):
+        if is_qtensor(node):
+            stats["weight_bytes"] += qtensor_nbytes(node)
+            stats["n_quantized"] += 1
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "w" and not isinstance(v, dict) \
+                        and hasattr(v, "shape"):
+                    stats["weight_bytes"] += int(np.prod(v.shape)) \
+                        * np.dtype(v.dtype).itemsize
+                    stats["n_dense"] += 1
+                elif isinstance(v, dict):
+                    walk(v)
+
+    walk(params)
+    return stats
+
+
+# --------------------------------------------------------------------- #
+# save / load (npz round-trip through the existing checkpointing)
+# --------------------------------------------------------------------- #
+def save_quantized(path, qparams, extra: Optional[dict] = None) -> str:
+    """QTensor trees are plain nested dicts, so the content-addressed npz
+    checkpoint handles them as-is; tag the manifest for tooling."""
+    from repro.training.checkpoints import save_pytree
+    meta = {"format": "qtensor"}
+    meta.update(extra or {})
+    return save_pytree(path, qparams, extra=meta)
+
+
+def load_quantized(path, verify: bool = True):
+    from repro.training.checkpoints import load_pytree
+    return load_pytree(path, verify=verify)

@@ -1,0 +1,116 @@
+"""QTensor: the quantized-weight leaf format.
+
+A QTensor is a plain dict pytree (so it flows through jit, scan over
+stacked block params, and the npz checkpointing unchanged):
+
+* int8, symmetric per-channel::
+
+      {"q":  int8 (..., K, N),        # round(w / scale)
+       "scale": f32 (..., N)}         # max|w| over K, per output column
+
+* int4, symmetric group-wise along K, two values packed per byte::
+
+      {"q4": int8 (..., K//2, N),     # row 2i in the low nibble of
+                                      # byte i, row 2i+1 in the high
+       "scale": f32 (..., n_groups, N)}
+
+The precision is encoded **structurally** (key ``q`` vs ``q4``), never as
+an array, so dispatch is a Python dict-key check that stays static under
+tracing. Leading axes (the scanned block axis of stacked layer params)
+are carried through: quantization is always over the last two dims
+``(K, N) = (d_in, d_out)``.
+
+int4 uses the symmetric range [-7, 7] (not -8) so dequantization is an
+exact ``q * scale`` with no zero-point.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+QTENSOR_KEYS = ("q", "q4")
+_EPS = 1e-8
+
+
+def is_qtensor(x) -> bool:
+    return isinstance(x, dict) and "scale" in x \
+        and any(k in x for k in QTENSOR_KEYS)
+
+
+def qtensor_bits(qt) -> int:
+    return 4 if "q4" in qt else 8
+
+
+# --------------------------------------------------------------------- #
+# int4 packing: two signed nibbles per int8 byte, paired along K
+# --------------------------------------------------------------------- #
+def pack_int4(q):
+    """q: int (..., K, N) with values in [-8, 7], K even ->
+    int8 (..., K//2, N); row 2i in the low nibble, row 2i+1 in the high."""
+    K = q.shape[-2]
+    assert K % 2 == 0, f"int4 packing needs even K, got {K}"
+    pairs = q.astype(jnp.int32).reshape(q.shape[:-2] + (K // 2, 2,
+                                                        q.shape[-1]))
+    lo, hi = pairs[..., 0, :], pairs[..., 1, :]
+    byte = ((hi & 0xF) << 4) | (lo & 0xF)
+    return jnp.where(byte >= 128, byte - 256, byte).astype(jnp.int8)
+
+
+def unpack_int4(packed):
+    """int8 (..., K//2, N) -> int32 (..., K, N), sign-extended nibbles."""
+    p32 = packed.astype(jnp.int32)
+    lo = (p32 << 28) >> 28
+    hi = (p32 << 24) >> 28
+    Kp, N = packed.shape[-2], packed.shape[-1]
+    both = jnp.stack([lo, hi], axis=-2)            # (..., K//2, 2, N)
+    return both.reshape(packed.shape[:-2] + (2 * Kp, N))
+
+
+# --------------------------------------------------------------------- #
+# quantize / dequantize one weight
+# --------------------------------------------------------------------- #
+def quantize_tensor(w, bits: int = 8, group_size: int = 32):
+    """w: float (..., K, N) -> QTensor dict.
+
+    int8: per-(output-)channel scale over the full K axis.
+    int4: group-wise scale over ``group_size`` rows of K (clamped to a
+    divisor of K; falls back to one group if nothing divides).
+    """
+    wf = jnp.asarray(w, jnp.float32)
+    K = wf.shape[-2]
+    if bits == 8:
+        scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=-2) / 127.0, _EPS)
+        q = jnp.clip(jnp.round(wf / scale[..., None, :]), -127, 127)
+        return {"q": q.astype(jnp.int8), "scale": scale}
+    if bits == 4:
+        assert K % 2 == 0, f"int4 needs even d_in, got {K}"
+        gs = group_size
+        while K % gs:
+            gs -= 1                                 # largest divisor <= gs
+        ng = K // gs
+        wg = wf.reshape(wf.shape[:-2] + (ng, gs, wf.shape[-1]))
+        scale = jnp.maximum(jnp.max(jnp.abs(wg), axis=-2) / 7.0, _EPS)
+        q = jnp.clip(jnp.round(wg / scale[..., None, :]), -7, 7)
+        q = q.reshape(wf.shape).astype(jnp.int32)
+        return {"q4": pack_int4(q), "scale": scale}
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def dequantize_tensor(qt, dtype=jnp.float32):
+    """QTensor dict -> dense float array (..., K, N)."""
+    scale = jnp.asarray(qt["scale"], jnp.float32)
+    if "q" in qt:
+        w = jnp.asarray(qt["q"]).astype(jnp.float32) * scale[..., None, :]
+        return w.astype(dtype)
+    q = unpack_int4(jnp.asarray(qt["q4"])).astype(jnp.float32)
+    ng, gs = scale.shape[-2], q.shape[-2] // scale.shape[-2]
+    wg = q.reshape(q.shape[:-2] + (ng, gs, q.shape[-1]))
+    w = (wg * scale[..., None, :]).reshape(q.shape)
+    return w.astype(dtype)
+
+
+def qtensor_nbytes(qt) -> int:
+    """Stored bytes (values + scales)."""
+    return sum(int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+               for v in qt.values())

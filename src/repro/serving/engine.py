@@ -57,9 +57,27 @@ class Engine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  cache_len: int = 512, sampler: Optional[Sampler] = None,
                  seed: int = 0, sync_every: int = 8,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 kv_cache_dtype: str = ""):
+        """``params`` may be a quantized tree (``quant.quantize_params``):
+        projections route through the fused dequantize-matmul inside the
+        same jitted prefill/decode programs, nothing else changes.
+
+        ``kv_cache_dtype="int8"`` stores K/V as int8 with per-(slot, head)
+        scales — quantize-on-write in the cache update, dequantize-in-
+        attention on read — halving KV bytes per decode step (the
+        memory-roofline cost at long cache lengths). "" keeps the model's
+        own setting (``cfg.kv_quant``)."""
+        if kv_cache_dtype not in ("", "int8"):
+            raise ValueError(f"unsupported kv_cache_dtype "
+                             f"{kv_cache_dtype!r} (use '' or 'int8')")
+        if kv_cache_dtype == "int8" and not model.cfg.kv_quant:
+            from repro.models.model import build
+            model = build(model.cfg.replace(kv_quant=True))
         self.model = model
         self.params = params
+        self.kv_cache_dtype = "int8" if model.cfg.kv_quant else \
+            model.cfg.dtype
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.sampler = sampler or Sampler()

@@ -2,8 +2,10 @@ import os
 import sys
 from pathlib import Path
 
-# src layout import without install
+# src layout import without install; repo root for the benchmarks package
+# (tests share helpers with the CI bench smokes, e.g. bench_quant)
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(1, str(Path(__file__).resolve().parents[1]))
 
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device. Multi-device dry-run tests spawn their own

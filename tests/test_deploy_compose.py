@@ -1,0 +1,150 @@
+"""Compose combinators under deployment (the paper's step-3 property):
+``route``/``ensemble`` services deployed through endpoints produce the
+same outputs as the undeployed service and record per-stage telemetry;
+quantized edge endpoints change precision and bytes, not structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compose import ensemble, route, seq
+from repro.core.deploy import (DeploymentPlan, Endpoint, deploy)
+from repro.core.netmodel import NetworkModel, tree_nbytes
+from repro.core.service import Service, Signature, TensorSpec, \
+    service_from_fn
+
+
+def _linear_service(name, d_in, d_out, key=0):
+    k = jax.random.PRNGKey(key)
+    params = {"w": jax.random.normal(k, (d_in, d_out)) * 0.1}
+    return service_from_fn(
+        name, lambda p, x: x @ p["w"],
+        jax.ShapeDtypeStruct((4, d_in), jnp.float32), params=params)
+
+
+def _quiet_net():
+    return NetworkModel(jitter_frac=0.0, seed=0)
+
+
+# ------------------------------------------------------------------ #
+# ensemble / route under deployment
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("plan_kind", ["local", "remote"])
+def test_deployed_ensemble_matches_undeployed(plan_kind):
+    members = [_linear_service(f"m{i}", 8, 4, i) for i in range(3)]
+    ens = ensemble(members, combine="mean")
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (4, 8)),
+                    jnp.float32)
+    expect = ens(x)
+
+    plan = DeploymentPlan.all_local(ens) if plan_kind == "local" else \
+        DeploymentPlan.all_remote(ens, network=_quiet_net())
+    out, tel = deploy(ens, plan).call(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-6)
+    # per-stage telemetry is recorded with the endpoint it ran on
+    assert len(tel.stages) == 1
+    st = tel.stages[0]
+    assert st.endpoint == ("local" if plan_kind == "local" else "cloud")
+    if plan_kind == "remote":
+        assert st.transfer_s > 0 and st.compute_s == 0.0
+    else:
+        assert st.compute_s > 0 and st.transfer_s == 0.0
+    assert st.param_bytes == tree_nbytes(ens.params)
+
+
+@pytest.mark.parametrize("plan_kind", ["local", "remote"])
+def test_deployed_route_matches_undeployed(plan_kind):
+    small = _linear_service("small", 8, 4, 0)
+    big = _linear_service("big", 8, 4, 1)
+    sel = Service(name="sel",
+                  fn=lambda p, x: (jnp.mean(x) > 0).astype(jnp.int32),
+                  signature=Signature(small.signature.inputs,
+                                      TensorSpec((), "int32")))
+    r = route(sel, [small, big])
+    plan = DeploymentPlan.all_local(r) if plan_kind == "local" else \
+        DeploymentPlan.all_remote(r, network=_quiet_net())
+    dep = deploy(r, plan)
+    for sign in (+1.0, -1.0):                  # exercise both branches
+        x = sign * jnp.ones((4, 8))
+        out, tel = dep.call(x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r(x)),
+                                   rtol=1e-6)
+        assert len(tel.stages) == 1 and tel.total_s > 0
+
+
+def test_deployed_seq_split_per_stage_telemetry():
+    a = _linear_service("a", 8, 16, 0)
+    b = _linear_service("b", 16, 4, 1)
+    pipe = a >> b
+    plan = DeploymentPlan.split(pipe, split_at=1, network=_quiet_net())
+    x = jnp.ones((4, 8))
+    out, tel = deploy(pipe, plan, stages=[a, b]).call(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pipe(x)),
+                               rtol=1e-6)
+    assert [(s.stage, s.endpoint) for s in tel.stages] == \
+        [("a", "local"), ("b", "cloud")]
+    assert tel.transfer_total_s > 0
+
+
+# ------------------------------------------------------------------ #
+# quantized edge endpoints (precision changes, structure doesn't)
+# ------------------------------------------------------------------ #
+def test_edge_split_quantizes_edge_stage_only():
+    a = _linear_service("a", 64, 64, 0)
+    b = _linear_service("b", 64, 8, 1)
+    pipe = a >> b
+    plan = DeploymentPlan.edge_split(pipe, split_at=1, quantize="int4",
+                                     network=_quiet_net())
+    dep = deploy(pipe, plan, stages=[a, b])
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (4, 64)),
+                    jnp.float32)
+    out, tel = dep.call(x)
+    # structure unchanged: same stages, same output shape, close output
+    assert [(s.stage, s.endpoint, s.precision) for s in tel.stages] == \
+        [("a", "edge", "int4"), ("b", "cloud", "fp")]
+    expect = np.asarray(pipe(x))
+    got = np.asarray(out)
+    assert got.shape == expect.shape
+    rel = np.max(np.abs(got - expect)) / (np.max(np.abs(expect)) + 1e-9)
+    assert rel < 0.25, f"int4 edge stage drifted {rel:.3f}"
+    # the edge stage's stored params really shrank (int4-packed + scales)
+    assert tel.stages[0].param_bytes < tree_nbytes(a.params) / 3
+    assert tel.stages[1].param_bytes == tree_nbytes(b.params)
+
+
+def test_edge_split_on_non_seq_combinator_quantizes():
+    """A non-seq combinator deploys as ONE stage under its own name; the
+    edge_split plan must still route (and quantize) it, not fall through
+    to an implicit fp endpoint."""
+    members = [_linear_service(f"m{i}", 64, 16, i) for i in range(2)]
+    ens = ensemble(members, combine="mean")
+    plan = DeploymentPlan.edge_split(ens, split_at=1, quantize="int4",
+                                     network=_quiet_net())
+    out, tel = deploy(ens, plan).call(jnp.ones((4, 64)))
+    assert tel.stages[0].endpoint == "edge"
+    assert tel.stages[0].precision == "int4"
+    assert tel.stages[0].param_bytes < tree_nbytes(ens.params) / 3
+
+
+def test_assignment_to_missing_endpoint_raises():
+    a = _linear_service("a", 8, 4, 0)
+    plan = DeploymentPlan(
+        endpoints={"cloud": Endpoint("cloud", kind="remote",
+                                     network=_quiet_net()),
+                   "edge": Endpoint("edge")},
+        assignments={"a": "cloudd"})              # typo'd endpoint
+    with pytest.raises(KeyError):
+        deploy(a, plan)
+
+
+def test_quantized_endpoint_ensemble_runs():
+    members = [_linear_service(f"m{i}", 64, 16, i) for i in range(2)]
+    ens = ensemble(members, combine="mean")
+    plan = DeploymentPlan(
+        endpoints={"edge": Endpoint("edge", quantize="int8")},
+        assignments={ens.name: "edge"})
+    out, tel = deploy(ens, plan).call(jnp.ones((4, 64)))
+    rel = np.max(np.abs(np.asarray(out) - np.asarray(ens(jnp.ones((4, 64))))))
+    assert rel < 0.05
+    assert tel.stages[0].precision == "int8"

@@ -169,6 +169,73 @@ def test_ssd_decode_step_matches_scan():
 
 
 # ------------------------------------------------------------------ #
+# fused dequantize-matmul
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("M,K,N,bm,bn", [
+    (128, 256, 128, 64, 64), (64, 128, 256, 64, 128), (128, 64, 128, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_int8_kernel(M, K, N, bm, bn, dtype):
+    from repro.kernels.quant_matmul.kernel import quant_matmul_int8_pallas
+    from repro.kernels.quant_matmul.ref import quant_matmul_int8_reference
+    from repro.quant import quantize_tensor
+    x = _arr((M, K), dtype, scale=0.5)
+    qt = quantize_tensor(_arr((K, N), scale=0.05), bits=8)
+    out = quant_matmul_int8_pallas(x, qt["q"], qt["scale"], bm=bm, bn=bn,
+                                   interpret=True)
+    ref = quant_matmul_int8_reference(x, qt["q"], qt["scale"])
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("M,K,N,gs", [
+    (64, 128, 128, 32), (128, 256, 64, 64), (64, 64, 128, 16),
+])
+def test_quant_matmul_int4_kernel(M, K, N, gs):
+    from repro.kernels.quant_matmul.kernel import quant_matmul_int4_pallas
+    from repro.kernels.quant_matmul.ref import quant_matmul_int4_reference
+    from repro.quant import quantize_tensor
+    x = _arr((M, K), scale=0.5)
+    qt = quantize_tensor(_arr((K, N), scale=0.05), bits=4, group_size=gs)
+    out = quant_matmul_int4_pallas(x, qt["q4"], qt["scale"], bm=64, bn=64,
+                                   interpret=True)
+    ref = quant_matmul_int4_reference(x, qt["q4"], qt["scale"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_matches_dense_dequant():
+    """The fused op == dense matmul against the dequantized weight — the
+    dispatch path models/layers.linear takes for quantized projections."""
+    from repro.kernels.quant_matmul.ops import quant_matmul
+    from repro.quant import dequantize_tensor, quantize_tensor
+    x = _arr((2, 16, 96), scale=0.5)                  # rank-3 activations
+    for bits in (8, 4):
+        qt = quantize_tensor(_arr((96, 64), scale=0.05), bits=bits,
+                             group_size=32)
+        out = quant_matmul(x, qt)
+        ref = x @ dequantize_tensor(qt)
+        assert out.shape == (2, 16, 64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_pallas_path_matches_ref():
+    from repro.kernels.quant_matmul.ops import quant_matmul
+    from repro.quant import quantize_tensor
+    x = _arr((128, 128), scale=0.5)
+    for bits in (8, 4):
+        qt = quantize_tensor(_arr((128, 128), scale=0.05), bits=bits,
+                             group_size=32)
+        out_p = quant_matmul(x, qt, use_pallas=True, interpret=True)
+        out_r = quant_matmul(x, qt, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
 # fused rmsnorm
 # ------------------------------------------------------------------ #
 @pytest.mark.parametrize("N,d,bn", [(256, 128, 128), (128, 512, 64),
