@@ -1,0 +1,164 @@
+"""Speculative-decoding benchmark: fused draft–verify vs plain decode.
+
+  PYTHONPATH=src python -m benchmarks.bench_spec [--smoke] \
+      [--out BENCH_spec.json]
+
+Runs the same greedy request stream through the non-speculative engine
+and through speculative engines (weight-sharing self-draft variants,
+gamma sweep) at batch 1 — the paper's single-user edge-latency setting —
+asserts token-identical greedy output, and reports acceptance rate and
+decode tokens/s (decode phase only, prefill excluded; engines are warmed
+first so XLA compilation never lands in the timed wall). Each config is
+measured ``--trials`` times and the median reported, since per-token
+wall times at smoke scale are at the mercy of machine noise. Emits
+machine-readable JSON so the per-token-latency trajectory (the paper's
+user-facing response-time metric) is tracked across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+
+def _one_run(model, params, cfg, n_requests, max_new, **kw):
+    """Warm an engine (compile the fused step + every prefill bucket the
+    timed stream hits), then run the timed stream. Returns the timed
+    responses, decode-phase seconds, and the engine's stats."""
+    eng = Engine(model, params, max_batch=1, cache_len=96,
+                 sampler=Sampler(), **kw)
+    rngw = np.random.default_rng(99)
+    for i, L in enumerate((5, 12, 20)):
+        eng.submit(Request(uid=-1 - i,
+                           prompt=rngw.integers(0, cfg.vocab, L),
+                           max_new_tokens=4))
+    eng.run()
+    warm_t, warm_steps = sum(eng.step_times), eng._steps
+
+    rng = np.random.default_rng(0)
+    for uid in range(n_requests):
+        L = int(rng.integers(4, 24))
+        eng.submit(Request(uid=uid, prompt=rng.integers(0, cfg.vocab, L),
+                           max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    resp = eng.run()
+    wall = time.perf_counter() - t0
+    decode_s = sum(eng.step_times) - warm_t
+    timed = {u: list(r.tokens) for u, r in resp.items() if u >= 0}
+    st = eng.latency_stats()
+    st["decode_s"] = decode_s
+    st["steps"] = eng._steps - warm_steps
+    st["wall_s"] = wall
+    return timed, st
+
+
+def run(n_requests: int = 12, max_new: int = 16, trials: int = 3,
+        gammas=(2, 4), drafts=("int8@1",), extra=("fp@1",)) -> List[Dict]:
+    cfg = get_arch("llama3.2-1b", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rows = []
+    baseline_tokens = None
+
+    def bench(label, **kw):
+        nonlocal baseline_tokens
+        runs = []
+        for _ in range(trials):
+            timed, st = _one_run(model, params, cfg, n_requests, max_new,
+                                 **kw)
+            n_tok = sum(len(t) for t in timed.values())
+            runs.append((n_tok / st["decode_s"], st))
+            if baseline_tokens is None:
+                baseline_tokens = timed
+            else:
+                # greedy speculative output must be token-identical
+                assert timed == baseline_tokens, \
+                    f"greedy output diverged for {label}"
+        runs.sort(key=lambda r: r[0])
+        tok_s, st = runs[len(runs) // 2]               # median trial
+        rows.append({
+            "config": label,
+            "spec_gamma": st.get("spec_gamma", 0),
+            "decode_tok_per_s": tok_s,
+            "decode_tok_per_s_runs": [round(r[0], 1) for r in runs],
+            "decode_ms_p50": st["decode_ms_p50"],
+            "decode_ms_p99": st["decode_ms_p99"],
+            "decode_steps": st["steps"],
+            "acceptance_rate": st.get("spec_acceptance_rate", 1.0),
+            "tokens_per_step": st.get("spec_tokens_per_step", 1.0),
+            "greedy_match": True,
+        })
+
+    bench("baseline")
+    for d in drafts:
+        for g in gammas:
+            bench(f"spec draft={d} gamma={g}", draft=d, spec_gamma=g)
+    for d in extra:
+        bench(f"spec draft={d} gamma=4", draft=d, spec_gamma=4)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~90s CI mode: fewer requests/trials, one gamma")
+    ap.add_argument("--out", default="BENCH_spec.json",
+                    help="JSON output path ('' to skip)")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="assert the gamma=4 self-draft decode tok/s >= "
+                         "this multiple of baseline (0 = report only)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rows = run(n_requests=4, max_new=12, trials=1, gammas=(2,),
+                   extra=())
+    else:
+        rows = run()
+
+    print("speculative decoding: fused draft-verify vs plain decode "
+          "(batch=1, greedy)")
+    print(f"{'config':>28s} {'tok/s':>9s} {'p50 ms':>8s} {'p99 ms':>8s} "
+          f"{'accept':>7s} {'tok/step':>8s} {'steps':>6s}")
+    base = rows[0]["decode_tok_per_s"]
+    for r in rows:
+        print(f"{r['config']:>28s} {r['decode_tok_per_s']:9.1f} "
+              f"{r['decode_ms_p50']:8.2f} {r['decode_ms_p99']:8.2f} "
+              f"{r['acceptance_rate']:7.2f} {r['tokens_per_step']:8.2f} "
+              f"{r['decode_steps']:6d}")
+        r["speedup_vs_baseline"] = r["decode_tok_per_s"] / base
+    for r in rows[1:]:
+        print(f"  {r['config']}: {r['speedup_vs_baseline']:.2f}x baseline "
+              f"decode tokens/s")
+    if args.min_speedup:
+        target = [r for r in rows[1:] if r["spec_gamma"] == 4]
+        assert target, "no gamma=4 row to check --min-speedup against"
+        got = max(r["speedup_vs_baseline"] for r in target)
+        assert got >= args.min_speedup, \
+            f"gamma=4 speedup {got:.2f}x < required {args.min_speedup}x"
+
+    if args.out:
+        payload = {"bench": "speculative_decoding",
+                   "smoke": bool(args.smoke),
+                   "backend": jax.default_backend(),
+                   "arch": "llama3.2-1b-reduced",
+                   "greedy": True,
+                   "max_batch": 1,
+                   "rows": rows}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,10 @@ def get_arch(name: str, *, variant: str = "") -> ModelConfig:
     config; "edge" -> the edge-deployment profile (int4 weight-only
     quantization + int8 KV cache — what fits a memory-bound local
     device), e.g. ``get_arch("llama3.2-1b", variant="edge")`` or
-    ``"reduced+edge"`` for the smoke-sized edge model.
+    ``"reduced+edge"`` for the smoke-sized edge model; "spec" ->
+    speculative decoding with an int8 half-depth self-draft at
+    gamma=4 (``cfg.draft`` / ``cfg.spec_gamma``), e.g.
+    ``"reduced+spec"`` for the smoke-sized speculative server.
     """
     cfg = ARCHS.get(name) or EXTRA_ARCHS[name]
     for v in filter(None, variant.split("+")):
@@ -42,6 +45,13 @@ def get_arch(name: str, *, variant: str = "") -> ModelConfig:
         elif v == "edge":
             cfg = cfg.replace(name=cfg.name + "-edge", quant="int4",
                               kv_quant=True)
+        elif v == "spec":
+            # half-depth int8 self-draft: weight-sharing, no second
+            # checkpoint — the edge-deployment speculative profile
+            from repro.models.transformer import n_blocks
+            nb = max(1, n_blocks(cfg) // 2)
+            cfg = cfg.replace(name=cfg.name + "-spec",
+                              draft=f"int8@{nb}", spec_gamma=4)
         else:
             raise ValueError(f"unknown variant {v!r}")
     return cfg

@@ -103,6 +103,14 @@ class ModelConfig:
     use_decode_kernel: bool = False  # route cached decode attention through
                                      # kernels/decode_attention (Pallas-ready
                                      # layout; reference path by default)
+    draft: str = ""                 # speculative-decoding draft spec:
+                                    # "" = off; "<prec>[@<blocks>]" builds a
+                                    # weight-sharing self-draft from the
+                                    # target's own params, prec in
+                                    # fp|int8|int4, @k = first k scan blocks
+                                    # (e.g. "int8@1"); see quant.self_draft
+    spec_gamma: int = 0             # draft tokens proposed per spec step
+                                    # (0 = no speculative decoding)
     encoder: Optional[EncoderConfig] = None
     frontend: Optional[FrontendConfig] = None
     dtype: str = "bfloat16"         # activation dtype

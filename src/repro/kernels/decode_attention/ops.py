@@ -3,15 +3,18 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.decode_attention import ref as _ref
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 
 
 def cached_decode_attention(q, k_cache, v_cache, pos, step, *, window=0,
-                            use_pallas=False, interpret=True, bk=128):
+                            use_pallas=None, interpret=None, bk=128):
     """Model layout: q (B, 1, Hq, hd); k/v cache (B, S, Hkv, hd);
     pos (B, S); step (B,) = query absolute position. Returns (B, 1, Hq, hd).
+    ``use_pallas=None`` defers to ``kernels.dispatch``.
     """
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     qh = q[:, 0]                                     # (B, Hq, hd)
     kh = jnp.transpose(k_cache, (0, 2, 1, 3))        # (B, Hkv, S, hd)
     vh = jnp.transpose(v_cache, (0, 2, 1, 3))

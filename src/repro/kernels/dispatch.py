@@ -1,0 +1,68 @@
+"""Central Pallas-vs-reference dispatch for every kernel op.
+
+Each ``kernels/*/ops.py`` wrapper used to hard-code
+``use_pallas=False, interpret=True`` defaults; this module is now the
+single place that decides which implementation runs:
+
+* explicit ``use_pallas=True/False`` at a call site always wins;
+* ``REPRO_FORCE_REF=1`` in the environment forces the jnp reference
+  everywhere (debugging / bisecting a kernel regression);
+* ``REPRO_FORCE_PALLAS=1`` forces the Pallas path (in interpret mode
+  off-TPU, so it still runs — the kernel-validation CI mode);
+* otherwise the backend decides: Pallas compiled on TPU, reference
+  elsewhere (Pallas CPU lowering is interpret-only and not
+  representative of TPU codegen, so it is never the silent default).
+
+``interpret`` follows the same rule: compiled on TPU, interpret mode
+everywhere else, unless the caller pins it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+
+_FORCE_REF_ENV = "REPRO_FORCE_REF"
+_FORCE_PALLAS_ENV = "REPRO_FORCE_PALLAS"
+
+
+def _env_true(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() not in ("", "0", "false")
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+def use_pallas_default() -> bool:
+    """The implementation choice when the call site does not pin one."""
+    if _env_true(_FORCE_REF_ENV):
+        return False
+    if _env_true(_FORCE_PALLAS_ENV):
+        return True
+    return backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode: real codegen on TPU, interpreter elsewhere."""
+    return backend() != "tpu"
+
+
+def resolve(use_pallas: Optional[bool] = None,
+            interpret: Optional[bool] = None) -> Tuple[bool, bool]:
+    """Resolve the (use_pallas, interpret) pair for one op call.
+
+    ``None`` means "let the backend decide"; explicit booleans are
+    honoured as-is (except ``REPRO_FORCE_REF``, which overrides even an
+    explicit ``use_pallas=True`` — it exists to bisect kernel bugs
+    without touching call sites).
+    """
+    if _env_true(_FORCE_REF_ENV):
+        up = False
+    elif use_pallas is None:
+        up = use_pallas_default()
+    else:
+        up = bool(use_pallas)
+    it = interpret_default() if interpret is None else bool(interpret)
+    return up, it

@@ -4,15 +4,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention.kernel import (
     flash_attention_gqa_pallas, flash_attention_pallas)
 
 
-def mha_attention(q, k, v, *, causal=True, window=0, use_pallas=False,
-                  interpret=True, bq=128, bk=128):
+def mha_attention(q, k, v, *, causal=True, window=0, use_pallas=None,
+                  interpret=None, bq=128, bk=128):
     """q, k, v: (B, H/Hkv, L, hd) per-head layout. The Pallas path is
-    GQA-native (no head expansion — KV tiles staged once per group)."""
+    GQA-native (no head expansion — KV tiles staged once per group).
+    ``use_pallas=None`` defers to ``kernels.dispatch`` (backend +
+    REPRO_FORCE_REF)."""
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     Hq, Hkv = q.shape[1], k.shape[1]
     if use_pallas:
         if Hkv != Hq:

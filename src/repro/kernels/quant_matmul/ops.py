@@ -1,23 +1,26 @@
 """Dispatch wrapper: QTensor-aware matmul over arbitrary-rank inputs.
 
 ``quant_matmul(x, qt)`` is what ``models.layers.linear`` routes through
-when a projection weight is quantized. The reference path is the default
-(interpret-safe everywhere, identical math); ``use_pallas=True`` runs
-the fused Pallas kernel, which requires tile-divisible shapes.
+when a projection weight is quantized. Implementation choice defers to
+``kernels.dispatch`` (reference off-TPU — interpret-safe everywhere,
+identical math; fused Pallas kernel on TPU, which requires
+tile-divisible shapes).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.quant_matmul import ref as _ref
 from repro.kernels.quant_matmul.kernel import (quant_matmul_int4_pallas,
                                                quant_matmul_int8_pallas)
 
 
-def quant_matmul(x, qt, *, use_pallas=False, interpret=True, bm=128,
+def quant_matmul(x, qt, *, use_pallas=None, interpret=None, bm=128,
                  bn=128):
     """x: (..., K) activations; qt: QTensor dict for a (K, N) weight.
     Returns (..., N) in x.dtype."""
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)

@@ -1,12 +1,14 @@
 """jit'd wrapper for fused residual + RMSNorm."""
 from __future__ import annotations
 
+from repro.kernels import dispatch
 from repro.kernels.rmsnorm import ref as _ref
 from repro.kernels.rmsnorm.kernel import fused_rmsnorm_pallas
 
 
-def fused_rmsnorm(x, residual, scale, *, eps=1e-5, use_pallas=False,
-                  interpret=True, bn=128):
+def fused_rmsnorm(x, residual, scale, *, eps=1e-5, use_pallas=None,
+                  interpret=None, bn=128):
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     if use_pallas:
         return fused_rmsnorm_pallas(x, residual, scale, eps=eps, bn=bn,
                                     interpret=interpret)

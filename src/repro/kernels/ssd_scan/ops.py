@@ -1,7 +1,8 @@
 """Public entry points for the SSD scan.
 
-``ssd``/``ssd_step`` dispatch to the Pallas TPU kernel when requested (and
-validated via interpret mode in tests) or to the pure-jnp oracle — which is
+``ssd``/``ssd_step`` dispatch to the Pallas TPU kernel or to the
+pure-jnp oracle via ``kernels.dispatch`` (backend default +
+``REPRO_FORCE_REF``/``REPRO_FORCE_PALLAS`` env overrides); the oracle is
 also what multi-pod dry-runs lower, since Pallas CPU lowering is not
 representative of TPU codegen.
 """
@@ -9,23 +10,30 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.ssd_scan import ref as _ref
 
-_USE_PALLAS = False  # toggled by repro.kernels.set_backend
+_SSD_OVERRIDE = None   # module-scoped legacy toggle; None = defer to dispatch
 
 
 def set_use_pallas(flag: bool) -> None:
-    global _USE_PALLAS
-    _USE_PALLAS = flag
+    """Legacy ssd-only toggle: pins this module's implementation choice
+    without touching the process-wide dispatch (REPRO_FORCE_REF still
+    wins — it exists to bisect kernel bugs)."""
+    global _SSD_OVERRIDE
+    _SSD_OVERRIDE = bool(flag)
 
 
 def ssd(x, dt, A, B, C, D=None, *, chunk=64, initial_state=None,
         use_pallas=None):
-    use = _USE_PALLAS if use_pallas is None else use_pallas
+    if use_pallas is None:
+        use_pallas = _SSD_OVERRIDE
+    use, interpret = dispatch.resolve(use_pallas)
     if use:
         from repro.kernels.ssd_scan import kernel as _k
         return _k.ssd_pallas(x, dt, A, B, C, D, chunk=chunk,
-                             initial_state=initial_state, interpret=True)
+                             initial_state=initial_state,
+                             interpret=interpret)
     return _ref.ssd_reference(x, dt, A, B, C, D, chunk=chunk,
                               initial_state=initial_state)
 

@@ -40,6 +40,17 @@ def main(argv=None):
                          "setting")
     ap.add_argument("--kv-cache-dtype", choices=["", "int8"], default="",
                     help="int8 = quantized KV cache (edge memory profile)")
+    ap.add_argument("--draft", default="",
+                    help="speculative-decoding draft spec "
+                         "'<prec>[@<blocks>]' (fp|int8|int4, e.g. "
+                         "'int8@1' = first block, int8-quantized "
+                         "self-draft); 'none' disables a config-set "
+                         "draft (e.g. the spec variant); '' keeps the "
+                         "config's cfg.draft")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="draft tokens proposed per speculative step "
+                         "(0 keeps cfg.spec_gamma; needs --draft or a "
+                         "spec-variant config)")
     ap.add_argument("--json", default="",
                     help="optional path to dump latency stats as JSON")
     args = ap.parse_args(argv)
@@ -47,6 +58,12 @@ def main(argv=None):
     cfg = get_arch(args.arch, variant=args.variant)
     if args.quant:
         cfg = cfg.replace(quant="" if args.quant == "none" else args.quant)
+    if args.draft == "none":
+        cfg = cfg.replace(draft="", spec_gamma=0)  # speculation fully off
+    elif args.draft:
+        cfg = cfg.replace(draft=args.draft)
+    if args.spec_gamma:
+        cfg = cfg.replace(spec_gamma=args.spec_gamma)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     if cfg.quant:
@@ -84,6 +101,10 @@ def main(argv=None):
           f"p50={stats['decode_ms_p50']:.2f} p99={stats['decode_ms_p99']:.2f}")
     print(f"ttft mean={stats['ttft_ms_mean']:.1f}ms "
           f"prefill jit entries={stats['prefill_jit_entries']}")
+    if engine.spec_gamma:
+        print(f"speculative: gamma={stats['spec_gamma']} "
+              f"accept={stats['spec_acceptance_rate']:.2f} "
+              f"tokens/step={stats['spec_tokens_per_step']:.2f}")
     if args.json:
         import json
         with open(args.json, "w") as f:

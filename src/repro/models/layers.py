@@ -294,6 +294,63 @@ def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
     return linear(p["wo"], y.reshape(B, L, -1)), new_cache
 
 
+def verify_into_cache(p, x, cfg: ModelConfig, cache, *, window=None):
+    """Masked multi-token cached decode — the speculative-decoding verify
+    forward. x: (B, T, d) embeds of [pending token, draft tokens]; every
+    row sits at its own ``step`` offset. All T keys/values are written at
+    ring slots ``(step + t) % S`` in one scatter, then attention runs with
+    per-row query positions ``step + t`` against the updated cache (the
+    same position/validity masking the bucketed prefill uses).
+
+    Rollback contract: the caller may later reduce ``step`` to
+    ``step + accepted`` without touching ``pos`` — entries beyond the new
+    depth carry positions larger than any future query's until the exact
+    decode step that overwrites their slot (same absolute position ->
+    same ring slot), so causal masking alone keeps them invisible.
+    Returns (y, new_cache with step += T).
+    """
+    B, T, d = x.shape
+    hd = cfg.hd
+    window = cfg.sliding_window if window is None else window
+    step = cache["step"]                                   # (B,)
+    pos = step[:, None] + jnp.arange(T, dtype=step.dtype)[None]   # (B, T)
+    q = linear(p["wq"], x).reshape(B, T, -1, hd)
+    k = linear(p["wk"], x).reshape(B, T, -1, hd)
+    v = linear(p["wv"], x).reshape(B, T, -1, hd)
+    if cfg.rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    if T > S:
+        raise ValueError(f"verify window T={T} exceeds cache length S={S}")
+    slots = jnp.mod(pos, S)                                # (B, T) distinct
+    bidx = jnp.arange(B)[:, None]
+    quant = "k_scale" in cache
+    if quant:
+        kq, ksc = _quantize_kv(k)
+        vq, vsc = _quantize_kv(v)
+        new_k = cache["k"].at[bidx, slots].set(kq)
+        new_v = cache["v"].at[bidx, slots].set(vq)
+        new_ks = cache["k_scale"].at[bidx, slots].set(ksc)
+        new_vs = cache["v_scale"].at[bidx, slots].set(vsc)
+        k_read = _dequantize_kv(new_k, new_ks, q.dtype)
+        v_read = _dequantize_kv(new_v, new_vs, q.dtype)
+    else:
+        new_k = cache["k"].at[bidx, slots].set(k)
+        new_v = cache["v"].at[bidx, slots].set(v)
+        k_read, v_read = new_k, new_v
+    new_pos = cache["pos"].at[bidx, slots].set(pos.astype(jnp.int32))
+    k_valid = new_pos >= 0                                 # (B, S)
+    y = gqa_attention(q, k_read, v_read, q_positions=pos,
+                      k_positions=new_pos, causal=True, window=window,
+                      k_valid=k_valid)
+    new_cache = {"k": new_k, "v": new_v, "pos": new_pos, "step": step + T}
+    if quant:
+        new_cache["k_scale"] = new_ks
+        new_cache["v_scale"] = new_vs
+    return linear(p["wo"], y.reshape(B, T, -1)), new_cache
+
+
 def prefill_into_cache(p, x, cfg: ModelConfig, cache, *, window=None,
                        length=None):
     """Prefill L tokens and populate the cache (cache length >= L for full

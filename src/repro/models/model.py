@@ -38,6 +38,12 @@ class Model:
       valid position per row.
     * ``decode_step(params, token, cache)`` advances every row by one token
       at that row's own offset.
+    * ``verify_step(params, tokens, cache)`` (attention-backed stacks
+      only; None otherwise) scores T tokens per row in one masked
+      multi-token forward — the speculative-decoding verify pass — and
+      ``rollback(cache, steps)`` rewinds every per-row ``step`` to the
+      accepted depth without touching stored keys (causal masking hides
+      the speculated tail until its slots are rewritten).
     """
 
     cfg: ModelConfig
@@ -47,6 +53,12 @@ class Model:
     decode_step: Callable[..., Any]       # (params, token, cache) -> (logits, cache)
     make_cache: Callable[..., Any]        # (batch, cache_len) -> cache pytree
     cache_steps: Callable[..., Any] = lambda cache: None  # cache -> (B,) depths
+    verify_step: Optional[Callable[..., Any]] = None  # (params, tokens (B,T), cache)
+    rollback: Optional[Callable[..., Any]] = None     # (cache, steps (B,)) -> cache
+
+    @property
+    def supports_speculative(self) -> bool:
+        return self.verify_step is not None
 
     def cache_len(self, shape: ShapeConfig) -> int:
         if self.cfg.sliding_window:
@@ -122,10 +134,19 @@ def _build_decoder(cfg: ModelConfig) -> Model:
     def make_cache(batch, cache_len, dtype=None):
         return T.make_cache(cfg, batch, cache_len, dtype)
 
+    # speculative verify needs per-position rollback, which only
+    # attention caches support (SSM recurrent state is positionless)
+    spec_ok = all(m == "attn" for m, _ in T.block_spec(cfg))
+
+    def verify_fn(params, tokens, cache):
+        return T.verify_step(params, cfg, tokens, cache)
+
     return Model(cfg=cfg, init=lambda k: T.init_transformer(k, cfg),
                  train_loss=train_loss, prefill=prefill_fn,
                  decode_step=decode_fn, make_cache=make_cache,
-                 cache_steps=T.cache_steps)
+                 cache_steps=T.cache_steps,
+                 verify_step=verify_fn if spec_ok else None,
+                 rollback=T.set_cache_steps if spec_ok else None)
 
 
 def _build_encdec(cfg: ModelConfig) -> Model:

@@ -144,9 +144,12 @@ def cache_steps(cache):
 # --------------------------------------------------------------------- #
 def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
                 length=None):
-    """mode: 'train' | 'prefill' | 'decode'. Returns (x, new_cache, aux).
-    ``length``: optional (B,) valid-token counts for right-padded prefill
-    (bucketed serving prefill); forwarded to the cache writers."""
+    """mode: 'train' | 'prefill' | 'decode' | 'verify'. Returns
+    (x, new_cache, aux). ``length``: optional (B,) valid-token counts for
+    right-padded prefill (bucketed serving prefill); forwarded to the
+    cache writers. 'verify' is the speculative-decoding multi-token
+    cached decode — attention-only (SSM recurrent state has no positional
+    rollback)."""
     spec = block_spec(cfg)
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
@@ -160,10 +163,18 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
                 y, nc = L.prefill_into_cache(sp["attn"], h, cfg,
                                              cache[f"sub{i}"],
                                              length=length)
+            elif mode == "verify":
+                y, nc = L.verify_into_cache(sp["attn"], h, cfg,
+                                            cache[f"sub{i}"])
             else:
                 y, nc = L.attention_block(sp["attn"], h, cfg,
                                           cache=cache[f"sub{i}"])
         else:
+            if mode == "verify":
+                raise NotImplementedError(
+                    "speculative verify requires attention-backed caches; "
+                    f"family {cfg.family!r} has SSM mixers whose recurrent "
+                    "state cannot be rolled back per position")
             if mode == "train":
                 y, nc = S.ssm_block(sp["ssm"], h, cfg)
             elif mode == "prefill":
@@ -297,3 +308,37 @@ def decode_step(params, cfg: ModelConfig, token, cache):
     x, new_cache, _ = _scan_blocks(params, x, cfg, mode="decode",
                                    cache=cache)
     return logits_from(params, cfg, x), new_cache
+
+
+def verify_step(params, cfg: ModelConfig, tokens, cache):
+    """Speculative-decoding verify: score T tokens per row in one masked
+    multi-token forward at each row's own cache offset. tokens: (B, T)
+    ids — [pending token, draft proposals]. Returns (logits (B, T, V),
+    new_cache with step += T); ``logits[:, i]`` is the target
+    distribution after consuming tokens[:, :i+1]."""
+    x = embed_inputs(params, cfg, tokens)
+    x, new_cache, _ = _scan_blocks(params, x, cfg, mode="verify",
+                                   cache=cache)
+    return logits_from(params, cfg, x), new_cache
+
+
+def set_cache_steps(cache, steps):
+    """Per-row cache rollback/advance: rewrite every attention sub-cache's
+    ``step`` (leaves are (n_blocks, B)) to ``steps`` (B,). ``pos`` entries
+    beyond the new depth are left in place — causal masking keeps them
+    invisible until the decode step that overwrites their ring slot (see
+    ``layers.verify_into_cache``)."""
+    steps = steps.astype(jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "step":
+                    out[k] = jnp.broadcast_to(steps[None, :], v.shape)
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+
+    return walk(cache)

@@ -10,6 +10,9 @@ package provides the repo's weight + KV-cache quantization:
 * ``params``   — whole-param-tree quantization (walks the nested-dict
   param trees produced by ``models/``), save/load round-trip through the
   existing npz checkpointing, and byte accounting.
+* ``self_draft`` — weight-sharing speculative-decoding drafts derived
+  from the target's own params (precision via PTQ, depth via slicing
+  the stacked scan blocks); consumed by ``serving.Engine(draft=...)``.
 
 Quantized projections route through ``kernels/quant_matmul`` via
 ``models.layers.linear`` (structural dispatch: a ``{"q"| "q4", "scale"}``
@@ -25,10 +28,12 @@ from repro.quant.qtensor import (QTENSOR_KEYS, dequantize_tensor,
 from repro.quant.params import (dequantize_params, load_quantized,
                                 quantize_for_cfg, quantize_params,
                                 quantized_stats, save_quantized)
+from repro.quant.self_draft import make_self_draft, parse_draft_spec
 
 __all__ = [
     "QTENSOR_KEYS", "dequantize_tensor", "is_qtensor", "pack_int4",
     "qtensor_bits", "qtensor_nbytes", "quantize_tensor", "unpack_int4",
     "dequantize_params", "load_quantized", "quantize_for_cfg",
     "quantize_params", "quantized_stats", "save_quantized",
+    "make_self_draft", "parse_draft_spec",
 ]

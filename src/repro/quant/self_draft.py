@@ -1,0 +1,91 @@
+"""Weight-sharing self-draft construction for speculative decoding.
+
+The edge-deployment story (PAPER.md / arXiv:1805.05995) rules out
+shipping a second draft checkpoint to the device; instead the draft is
+*derived* from the target's own parameters:
+
+* **precision**: ``int8`` / ``int4`` reuse PR 2's post-training
+  quantization — the draft streams a fraction of the target's weight
+  bytes per proposed token (the memory-roofline cost of decode);
+  ``fp`` keeps the target's own precision (layer-skip-only draft).
+* **depth**: ``@k`` keeps only the first ``k`` scan blocks of the
+  stacked block params (plus the shared embed/ln_f/lm_head) — the
+  stacked-scan layout makes this a single ``t[:k]`` tree-map, no
+  re-initialisation. A truncated stack is a classic self-speculative
+  draft (Draft&Verify / LayerSkip): early blocks already concentrate
+  most next-token information, and whatever they get wrong the verify
+  pass rejects, so output quality is untouched.
+
+Spec grammar (``cfg.draft`` / ``Engine(draft=...)`` / ``--draft``):
+``"<prec>[@<blocks>]"`` with prec in {fp, int8, int4}, e.g. ``"int8"``
+(full depth, quantized) or ``"int8@1"`` (first block only, quantized —
+what the "spec" config variant uses at half depth).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.quant.params import quantize_params
+
+_PRECISIONS = ("fp", "int8", "int4")
+
+
+def parse_draft_spec(spec: str) -> Tuple[str, Optional[int]]:
+    """"int8@1" -> ("int8", 1); "fp" -> ("fp", None = full depth)."""
+    prec, _, blocks = spec.partition("@")
+    if prec not in _PRECISIONS:
+        raise ValueError(f"draft precision {prec!r} not in {_PRECISIONS} "
+                         f"(spec {spec!r})")
+    nb = None
+    if blocks:
+        nb = int(blocks)
+        if nb < 1:
+            raise ValueError(f"draft depth must be >= 1, got {spec!r}")
+    return prec, nb
+
+
+def make_self_draft(model, params, spec: str = ""):
+    """Derive (draft_model, draft_params) from the target model + params.
+
+    ``spec`` defaults to ``model.cfg.draft``. The draft params *share*
+    every leaf they can with the target (embeddings, norms, and — for
+    full-depth fp drafts — everything): quantized leaves are new int
+    buffers by construction, but no float weight is ever copied.
+    Already-quantized targets (served with ``cfg.quant``) pass through
+    unchanged — ``quantize_params`` skips QTensor leaves — so an int8
+    target with an ``int8`` draft spec shares the quantized tree too.
+    """
+    from repro.models.model import build
+    from repro.models.transformer import block_spec, n_blocks
+
+    cfg = model.cfg
+    spec = spec or cfg.draft
+    if not spec:
+        raise ValueError("empty draft spec (set cfg.draft or pass spec=)")
+    prec, nb = parse_draft_spec(spec)
+    nb_total = n_blocks(cfg)
+    nb = nb_total if nb is None else min(nb, nb_total)
+
+    if nb < nb_total:
+        # unroll the (shallow) draft stack: for a 1-2 block draft the
+        # lax.scan loop/slicing machinery costs more per decode than the
+        # blocks themselves on small configs; same math either way
+        dcfg = cfg.replace(name=f"{cfg.name}-draft-{spec}",
+                           n_layers=nb * len(block_spec(cfg)),
+                           draft="", spec_gamma=0,
+                           unroll_layers=nb <= 2 or cfg.unroll_layers)
+        dmodel = build(dcfg)
+        dparams = dict(params)
+        dparams["blocks"] = jax.tree.map(lambda t: t[:nb],
+                                         params["blocks"])
+    else:
+        dmodel = build(cfg.replace(draft="", spec_gamma=0))
+        dparams = params
+
+    if prec in ("int8", "int4"):
+        bits = 8 if prec == "int8" else 4
+        dparams = quantize_params(dparams, bits=bits,
+                                  group_size=cfg.quant_group)
+    return dmodel, dparams

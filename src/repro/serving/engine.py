@@ -1,4 +1,5 @@
-"""Batched serving engine v2: bucketed prefill + fused on-device decode.
+"""Batched serving engine v2: bucketed prefill + fused on-device decode,
+with optional speculative decoding (fused draft–verify step).
 
 A fixed number of batch *slots* share one batched KV/SSM cache; each slot
 runs an independent sequence at its own per-row ``step`` offset. When a
@@ -26,6 +27,16 @@ What v2 changes over the first engine:
   transfers. Every ``sync_every`` steps the host harvests each occupied
   slot's new token column (sliced on device, one bounded transfer per
   slot) and detects finishes by replaying the device's stop conditions.
+* **Speculative decoding** (``Engine(draft=..., spec_gamma=...)``) — each
+  decode step becomes one fused draft–verify program: the draft proposes
+  γ tokens autoregressively, the target scores all γ+1 positions in a
+  single masked multi-token forward (``Model.verify_step``), and
+  rejection sampling accepts a prefix + resamples the first rejection on
+  device. Both caches roll back to the accepted depth via the per-row
+  ``step`` offsets (``Model.rollback``). The step emits a *variable*
+  number of tokens but stays static-shaped: a fixed (B, γ+1) token block
+  plus a per-slot accepted-count, so the zero-host-sync invariant and the
+  ``_poll``/``_harvest`` contract are unchanged.
 """
 from __future__ import annotations
 
@@ -58,7 +69,8 @@ class Engine:
                  cache_len: int = 512, sampler: Optional[Sampler] = None,
                  seed: int = 0, sync_every: int = 8,
                  donate: Optional[bool] = None,
-                 kv_cache_dtype: str = ""):
+                 kv_cache_dtype: str = "",
+                 draft: Any = None, spec_gamma: int = 0):
         """``params`` may be a quantized tree (``quant.quantize_params``):
         projections route through the fused dequantize-matmul inside the
         same jitted prefill/decode programs, nothing else changes.
@@ -67,7 +79,15 @@ class Engine:
         scales — quantize-on-write in the cache update, dequantize-in-
         attention on read — halving KV bytes per decode step (the
         memory-roofline cost at long cache lengths). "" keeps the model's
-        own setting (``cfg.kv_quant``)."""
+        own setting (``cfg.kv_quant``).
+
+        ``draft`` enables speculative decoding: a self-draft spec string
+        (``"int8@1"`` — see ``quant.self_draft``), an explicit
+        ``(draft_model, draft_params)`` pair, or None to follow
+        ``cfg.draft``. ``spec_gamma`` is the number of draft tokens
+        proposed per step (0 follows ``cfg.spec_gamma``, defaulting to 4
+        once a draft is configured). Requires attention-backed caches
+        (``Model.supports_speculative``) on both models."""
         if kv_cache_dtype not in ("", "int8"):
             raise ValueError(f"unsupported kv_cache_dtype "
                              f"{kv_cache_dtype!r} (use '' or 'int8')")
@@ -108,18 +128,65 @@ class Engine:
         # device-resident decode state (never read back in steady state)
         self.key = jax.random.PRNGKey(seed)
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.prev = jnp.zeros((max_batch, 1), jnp.int32)   # spec: token
+        # preceding the pending one (the draft cache lags by one position)
         self.remaining = jnp.zeros((max_batch,), jnp.int32)
         self.active = jnp.zeros((max_batch,), bool)
         self.eos = jnp.full((max_batch,), -1, jnp.int32)
         self.cache = model.make_cache(max_batch, cache_len)
 
-        # per-step sampled-token trace: device arrays, harvested lazily
-        self._trace: List[jax.Array] = []
+        # per-step sampled-token trace: device arrays, harvested lazily.
+        # Plain decode appends (B,) token vectors; speculative decode
+        # appends ((B, gamma+1) block, (B,) emit-count) pairs.
+        self._trace: List[Any] = []
         self._trace_base = 0                      # global step of _trace[0]
         self._slot_start = [0] * max_batch        # global step per slot
         self._steps = 0
 
-        self._step_fn = self._build_step()
+        # --- speculative decoding ------------------------------------- #
+        draft_src = draft if draft is not None else (cfg.draft or None)
+        gamma = spec_gamma or cfg.spec_gamma
+        if draft_src is not None and gamma == 0:
+            gamma = 4
+        if gamma and draft_src is None:
+            raise ValueError("spec_gamma set but no draft configured "
+                             "(pass draft=... or set cfg.draft)")
+        self.spec_gamma = gamma if draft_src is not None else 0
+        self._draft_model: Optional[Model] = None
+        self._draft_params = None
+        self.draft_cache = None
+        self._spec_emitted = 0         # harvested tokens over spec steps
+        self._spec_active_steps = 0    # (step, active slot) pairs harvested
+        if self.spec_gamma:
+            if not model.supports_speculative:
+                raise ValueError(
+                    "speculative decoding requires attention-backed "
+                    f"caches; target family {cfg.family!r} has none")
+            if isinstance(draft_src, str):
+                from repro.quant.self_draft import make_self_draft
+                dmodel, dparams = make_self_draft(model, params, draft_src)
+            else:
+                dmodel, dparams = draft_src
+            if not dmodel.supports_speculative:
+                raise ValueError(
+                    "draft model must support per-row cache rollback "
+                    f"(attention-backed); family {dmodel.cfg.family!r}")
+            if self.spec_gamma + 1 > self.kv_len:
+                raise ValueError(
+                    f"spec_gamma={self.spec_gamma} needs a verify window "
+                    f"of {self.spec_gamma + 1} <= kv ring {self.kv_len}")
+            self._draft_model = dmodel
+            self._draft_params = dparams
+            self.draft_cache = dmodel.make_cache(max_batch, cache_len)
+            # a spec step emits up to gamma+1 tokens per slot, so polls
+            # must come ~(gamma+1)x as often to keep the post-finish
+            # overshoot (device decoding an already-finished slot until
+            # the next poll) the same number of *tokens* as plain decode
+            self.sync_every = max(1, self.sync_every
+                                  // (self.spec_gamma + 1))
+
+        self._step_fn = self._build_spec_step() if self.spec_gamma \
+            else self._build_step()
         self._prefill_jits: Dict[Tuple, Any] = {}
 
     # ------------------------------------------------------------ #
@@ -142,13 +209,114 @@ class Engine:
         donate = (1, 2, 3, 4) if self._donate else ()
         return jax.jit(step, donate_argnums=donate)
 
-    def _get_prefill(self, bucket: int, masked: bool, has_emb: bool):
-        """One compiled program per (bucket length, masked, embeddings)
-        signature — the jit cache is O(log cache_len), not O(#lengths)."""
-        kf = (bucket, masked, has_emb)
+    def _build_spec_step(self):
+        """One fused draft–verify–accept program (static shapes):
+
+        1. the draft proposes gamma tokens autoregressively. Its cache
+           *lags the committed depth by one position* (see below), so the
+           first proposal comes from a 2-token verify window
+           ``[prev, pending]`` and the remaining gamma-1 from single-token
+           decodes — gamma draft forwards total, and the draft cache
+           never develops holes on full acceptance;
+        2. the target scores all gamma+1 positions in one masked
+           multi-token forward (``verify_step``) at each row's own offset;
+        3. ``sampler.speculative`` accepts a per-row prefix and resamples
+           the first rejection (greedy: emitted prefix == target argmax,
+           so output is token-identical to non-speculative decode);
+        4. both caches roll their per-row ``step`` back via
+           ``Model.rollback`` — target to the committed depth, draft to
+           committed-1 — and stored keys beyond it stay causally
+           invisible;
+        5. slot bookkeeping mirrors the plain step with a variable emit
+           count ``n_emit in [1, gamma+1]`` per row.
+
+        Lag invariant: entering a step with committed depth C, the target
+        cache holds positions < C and the draft cache positions < C-1;
+        ``prev`` is the token at C-1 and ``tokens`` the pending one at C.
+        The draft's verify window rewrites C-1 and C, decodes write
+        C+1..C+gamma-1, and the last proposal is *never* written — its
+        position is re-consumed by the next step's verify window, so full
+        acceptance leaves no hole.
+        """
+        model, sampler = self.model, self.sampler
+        draft, gamma = self._draft_model, self.spec_gamma
+
+        def spec(params, dparams, cache, dcache, tokens, prev, remaining,
+                 active, eos, key):
+            B = tokens.shape[0]
+            # 1) draft proposals (and their full logit rows, for the
+            #    stochastic accept ratio p/q)
+            window = jnp.concatenate([prev, tokens], axis=1)   # (B, 2)
+            dl, dcache = draft.verify_step(dparams, window, dcache)
+            d_toks, d_logits = [], []
+            cur_logits = dl[:, -1].astype(jnp.float32)
+            for i in range(gamma):
+                key, sk = jax.random.split(key)
+                t = sampler(sk, cur_logits)
+                d_toks.append(t)
+                d_logits.append(cur_logits)
+                if i + 1 < gamma:
+                    dl, dcache = draft.decode_step(dparams, t[:, None],
+                                                   dcache)
+                    cur_logits = dl[:, -1].astype(jnp.float32)
+            draft_tokens = jnp.stack(d_toks, axis=1)          # (B, g)
+            draft_logits = jnp.stack(d_logits, axis=1)        # (B, g, V)
+
+            # 2) one masked multi-token target forward over
+            #    [pending, draft_0..draft_{g-1}]
+            seq = jnp.concatenate([tokens, draft_tokens], axis=1)
+            t_logits, cache = model.verify_step(params, seq, cache)
+
+            # 3) accept prefix + resample first rejection (on device)
+            key, sk = jax.random.split(key)
+            block, n_acc = sampler.speculative(
+                sk, draft_tokens, draft_logits,
+                t_logits.astype(jnp.float32))
+            n_emit = jnp.where(active, n_acc + 1, 0)          # (B,)
+
+            # 4) per-row rollback to the accepted depth. verify advanced
+            #    the target by gamma+1; the committed depth is
+            #    old_step + 1 + n_acc (pending + accepted drafts), i.e.
+            #    current - gamma + n_acc. The draft sits at committed-1.
+            steps_now = model.cache_steps(cache)              # (B,)
+            committed = steps_now - gamma + n_acc
+            cache = model.rollback(cache, committed)
+            dcache = draft.rollback(dcache, committed - 1)
+
+            # 5) bookkeeping (same stop conditions as the plain step,
+            #    with a variable emit count)
+            idx = jnp.arange(gamma + 1)[None, :]
+            emitted = idx < n_emit[:, None]
+            eos_hit = jnp.any(emitted & (block == eos[:, None]), axis=1)
+            done = active & ((remaining <= n_emit) | eos_hit)
+            new_active = active & ~done
+            remaining = jnp.where(
+                active, jnp.maximum(remaining - n_emit, 0), remaining)
+            bidx = jnp.arange(B)
+            last = block[bidx, jnp.maximum(n_emit, 1) - 1]
+            nxt = jnp.where(active, last, tokens[:, 0])
+            # token preceding the new pending one: the last accepted
+            # draft, or the old pending token when nothing was accepted
+            new_prev = jnp.where(
+                n_acc > 0, block[bidx, jnp.maximum(n_acc, 1) - 1],
+                tokens[:, 0])
+            new_prev = jnp.where(active, new_prev, prev[:, 0])
+            return (nxt[:, None], new_prev[:, None], block, n_emit,
+                    cache, dcache, remaining, new_active, key)
+
+        donate = (2, 3, 4, 5, 6, 7) if self._donate else ()
+        return jax.jit(spec, donate_argnums=donate)
+
+    def _get_prefill(self, bucket: int, masked: bool, has_emb: bool,
+                     for_draft: bool = False):
+        """One compiled program per (bucket length, masked, embeddings,
+        target-or-draft) signature — the jit cache is O(log cache_len),
+        not O(#lengths)."""
+        kf = (bucket, masked, has_emb, for_draft)
         if kf in self._prefill_jits:
             return self._prefill_jits[kf]
-        model, sampler = self.model, self.sampler
+        model = self._draft_model if for_draft else self.model
+        sampler = self.sampler
 
         def prefill(params, tokens, length, emb, b, cache, key):
             cache1 = jax.tree.map(
@@ -216,6 +384,25 @@ class Engine:
                     else "length"
                 req.finished_s = time.perf_counter()
                 continue  # slot stays free
+            if self.spec_gamma:
+                # the draft needs the prompt context too: same bucketed
+                # prefill into the draft's own batched cache, but only up
+                # to L-1 tokens — the draft cache lags the committed
+                # depth by one (the last prompt token becomes ``prev``
+                # and is re-consumed by the first draft verify window).
+                # Its sampled token is discarded.
+                self.key, sk = jax.random.split(self.key)
+                if masked:
+                    dtoks, dlen, dLb = toks, L - 1, Lb
+                else:  # exact-length ring fallback (L-1 >= kv ring)
+                    dtoks, dlen, dLb = toks[:, :L - 1], L - 1, L - 1
+                dfn = self._get_prefill(dLb, masked, emb is not None,
+                                        for_draft=True)
+                _, self.draft_cache = dfn(
+                    self._draft_params, jnp.asarray(dtoks),
+                    jnp.asarray([dlen], jnp.int32), emb, jnp.int32(b),
+                    self.draft_cache, sk)
+                self.prev = self.prev.at[b, 0].set(int(req.prompt[-1]))
             self.tokens = self.tokens.at[b, 0].set(tok)
             self.remaining = self.remaining.at[b].set(
                 req.max_new_tokens - 1)
@@ -229,34 +416,69 @@ class Engine:
     # decode
     # ------------------------------------------------------------ #
     def step(self) -> None:
-        """One batched decode step. Pure device work: tokens, finish flags,
-        and counters all stay on device; nothing is transferred."""
+        """One batched decode step (plain or speculative). Pure device
+        work: tokens, finish flags, and counters all stay on device;
+        nothing is transferred."""
         t0 = time.perf_counter()
-        (self.tokens, self.cache, self.remaining, self.active,
-         self.key) = self._step_fn(self.params, self.cache, self.tokens,
-                                   self.remaining, self.active, self.eos,
-                                   self.key)
-        self._trace.append(self.tokens[:, 0])
+        if self.spec_gamma:
+            (self.tokens, self.prev, block, n_emit, self.cache,
+             self.draft_cache, self.remaining, self.active,
+             self.key) = self._step_fn(
+                self.params, self._draft_params, self.cache,
+                self.draft_cache, self.tokens, self.prev, self.remaining,
+                self.active, self.eos, self.key)
+            self._trace.append((block, n_emit))
+        else:
+            (self.tokens, self.cache, self.remaining, self.active,
+             self.key) = self._step_fn(self.params, self.cache,
+                                       self.tokens, self.remaining,
+                                       self.active, self.eos, self.key)
+            self._trace.append(self.tokens[:, 0])
         self._steps += 1
         self.step_times.append(time.perf_counter() - t0)
 
     def _poll(self) -> None:
         """The periodic host sync: harvest each occupied slot's new token
-        column (one bounded transfer per slot, sliced on device) and prune
-        the trace. Finish detection replays the device's own stop
-        conditions on the harvested tokens, so host and device slot state
-        agree by construction."""
+        block (one bounded transfer per slot, sliced on device) and prune
+        the trace. Only the unconsumed suffix of the trace is ever
+        stacked, so poll cost is bounded by the tokens produced since the
+        previous poll — it does not grow with trace (or sequence) length.
+        Finish detection replays the device's own stop conditions on the
+        harvested tokens, so host and device slot state agree by
+        construction."""
         if not self._trace:
             return
-        jax.block_until_ready(self._trace[-1])
-        full = jnp.stack(self._trace)                      # (T, B) device
-        for b, req in enumerate(self.slots):
-            if req is None:
-                continue
-            start = self._slot_start[b] - self._trace_base
-            if start >= full.shape[0]:
-                continue                                   # armed post-trace
-            self._harvest(b, np.asarray(full[start:, b]))
+        occupied = [(b, self._slot_start[b] - self._trace_base)
+                    for b, r in enumerate(self.slots) if r is not None]
+        starts = [s for _, s in occupied if s < len(self._trace)]
+        if starts:
+            lo = min(starts)
+            suffix = self._trace[lo:]
+            jax.block_until_ready(suffix[-1])
+            # host-side stacking: each entry is a bounded (B,)/(B, g+1)
+            # transfer. A device-side jnp.stack here would trigger one
+            # XLA compile per distinct suffix length — a recurring
+            # ~100ms latency spike that dwarfed the transfers it saved.
+            if self.spec_gamma:
+                blocks = np.stack([np.asarray(t) for t, _ in suffix])
+                counts = np.stack([np.asarray(c) for _, c in suffix])
+            else:
+                blocks = np.stack([np.asarray(t) for t in suffix])[..., None]
+                counts = None
+            for b, start in occupied:
+                s = start - lo
+                if s >= blocks.shape[0]:
+                    continue                               # armed post-trace
+                blk = blocks[s:, b]                        # (T', W)
+                if counts is None:
+                    col = [int(t) for t in blk[:, 0]]
+                else:
+                    cnt = counts[s:, b]                    # (T',)
+                    self._spec_emitted += int(cnt.sum())
+                    self._spec_active_steps += int((cnt > 0).sum())
+                    col = [int(t) for row, c in zip(blk, cnt)
+                           for t in row[:c]]
+                self._harvest(b, col)
         # every occupied slot has now consumed the whole trace
         keep_from = min((self._slot_start[b] for b, r
                          in enumerate(self.slots) if r is not None),
@@ -266,7 +488,7 @@ class Engine:
             del self._trace[:drop]
             self._trace_base = keep_from
 
-    def _harvest(self, b: int, col: np.ndarray) -> None:
+    def _harvest(self, b: int, col: List[int]) -> None:
         """Append slot ``b``'s sampled tokens host-side. The device kept
         decoding after the slot finished (it only learns at the next poll),
         so cut the column at the true stop condition — the same condition
@@ -337,7 +559,7 @@ class Engine:
         finished = [r for r in self.responses.values() if r.finished]
         ttft = [r.first_token_s - r.submitted_s
                 for r in self.requests.values() if r.first_token_s]
-        return {
+        stats = {
             "decode_ms_mean": float(ts.mean() * 1e3),
             "decode_ms_p50": float(np.percentile(ts, 50) * 1e3),
             "decode_ms_p99": float(np.percentile(ts, 99) * 1e3),
@@ -347,3 +569,13 @@ class Engine:
             "prefill_jit_entries": len(self._prefill_jits),
             "decode_steps": self._steps,
         }
+        if self.spec_gamma:
+            # every harvested (step, active slot) pair emitted 1 + n_acc
+            # tokens; acceptance rate = mean(n_acc) / gamma
+            n = max(self._spec_active_steps, 1)
+            stats["spec_gamma"] = self.spec_gamma
+            stats["spec_tokens_per_step"] = self._spec_emitted / n
+            stats["spec_acceptance_rate"] = \
+                (self._spec_emitted - self._spec_active_steps) \
+                / (self.spec_gamma * n)
+        return stats

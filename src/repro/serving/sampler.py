@@ -1,9 +1,12 @@
-"""Token samplers: greedy / temperature / top-k / top-p.
+"""Token samplers: greedy / temperature / top-k / top-p, plus the
+speculative-decoding accept/resample rule.
 
 The sampler is a frozen dataclass of *static* knobs so the serving engine
 can close over it inside ``jax.jit`` — the whole ``decode_step -> logits ->
 next token`` chain compiles into one XLA program and sampled tokens never
-leave the device (engine v2's fused decode step).
+leave the device (engine v2's fused decode step). ``speculative`` extends
+that contract to the fused draft–verify step: acceptance, the first-
+rejection resample and the bonus token are all computed on device.
 """
 from __future__ import annotations
 
@@ -35,6 +38,79 @@ class Sampler:
             return jnp.take_along_axis(idx, choice[:, None],
                                        axis=-1)[:, 0].astype(jnp.int32)
         return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    def filtered_logits(self, logits):
+        """The post-knob logits over the *full* vocab: temperature scaling
+        then nucleus then top-k masking (masked entries at NEG_INF), so
+        ``softmax(filtered_logits(l))`` is exactly the distribution
+        ``__call__`` samples from. Accepts any leading shape (..., V).
+        Greedy (temperature 0) has no finite-temperature distribution;
+        callers special-case it."""
+        assert self.temperature != 0.0
+        lead = logits.shape[:-1]
+        logits = logits.reshape(-1, logits.shape[-1]) / self.temperature
+        if self.top_p < 1.0:
+            logits = self._nucleus(logits)
+        if self.top_k:
+            kth = jax.lax.top_k(logits, self.top_k)[0][:, -1:]
+            logits = jnp.where(logits >= kth, logits, NEG_INF)
+        return logits.reshape(lead + (-1,))
+
+    def speculative(self, key, draft_tokens, draft_logits, target_logits):
+        """Speculative-decoding accept/resample (Leviathan et al. 2023),
+        vectorised over the batch and fully on device.
+
+        draft_tokens: (B, G) int32 proposals sampled from the draft;
+        draft_logits: (B, G, V) the draft logits those were sampled from;
+        target_logits: (B, G+1, V) target logits at the same positions
+        (position G is the bonus position after all G proposals).
+
+        Returns ``(block, n_acc)``: ``block`` (B, G+1) int32 where the
+        first ``n_acc[b] + 1`` entries of row b are the tokens to emit —
+        the accepted draft prefix followed by the resampled first
+        rejection (or the bonus token when everything was accepted).
+
+        Greedy: accept while the draft matches the target argmax, so the
+        emitted prefix is *exactly* the target's greedy continuation —
+        speculative greedy output is token-identical to the baseline.
+        Stochastic: accept token x with prob min(1, p(x)/q(x)); resample
+        the first rejection from norm(max(p - q, 0)), which makes every
+        emitted token an exact sample from the target distribution.
+        """
+        B, G = draft_tokens.shape
+        if self.temperature == 0.0:
+            block = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
+            acc = draft_tokens == block[:, :G]                   # (B, G)
+            n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1),
+                            axis=1)                              # (B,)
+            return block, n_acc
+
+        p = jax.nn.softmax(self.filtered_logits(target_logits), axis=-1)
+        q = jax.nn.softmax(self.filtered_logits(draft_logits), axis=-1)
+        ku, kr = jax.random.split(key)
+        p_d = jnp.take_along_axis(p[:, :G], draft_tokens[..., None],
+                                  axis=-1)[..., 0]               # (B, G)
+        q_d = jnp.take_along_axis(q, draft_tokens[..., None],
+                                  axis=-1)[..., 0]
+        u = jax.random.uniform(ku, (B, G))
+        acc = u * q_d < p_d          # u < p/q without dividing by q=0
+        n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+        # residual distribution per position: norm(max(p - q, 0)); the
+        # bonus position (no draft) resamples from p itself (q := 0).
+        q_pad = jnp.concatenate([q, jnp.zeros_like(p[:, :1])], axis=1)
+        resid = jnp.maximum(p - q_pad, 0.0)
+        # p == q exactly (or numerically) -> residual is empty; any
+        # token from p is then a valid "resample"
+        empty = jnp.sum(resid, axis=-1, keepdims=True) <= 0.0
+        resid = jnp.where(empty, p, resid)
+        r = jax.random.categorical(
+            kr, jnp.log(jnp.maximum(resid, 1e-30)))              # (B, G+1)
+        d_pad = jnp.concatenate(
+            [draft_tokens, jnp.zeros((B, 1), jnp.int32)], axis=1)
+        idx = jnp.arange(G + 1)[None, :]
+        block = jnp.where(idx < n_acc[:, None], d_pad,
+                          r.astype(jnp.int32))
+        return block, n_acc
 
     def _nucleus(self, logits):
         """Mask logits outside the smallest set with cumulative prob >=

@@ -1,0 +1,51 @@
+"""Central kernel dispatch: backend defaults + REPRO_FORCE_* overrides."""
+import numpy as np
+
+from repro.kernels import dispatch
+
+
+def test_defaults_off_tpu(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    monkeypatch.setattr(dispatch, "backend", lambda: "cpu")
+    assert dispatch.resolve() == (False, True)
+    assert dispatch.resolve(use_pallas=True) == (True, True)
+    assert dispatch.resolve(use_pallas=True, interpret=False) == \
+        (True, False)
+
+
+def test_defaults_on_tpu(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    monkeypatch.setattr(dispatch, "backend", lambda: "tpu")
+    assert dispatch.resolve() == (True, False)
+    assert dispatch.resolve(use_pallas=False) == (False, False)
+
+
+def test_force_ref_overrides_everything(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    monkeypatch.setattr(dispatch, "backend", lambda: "tpu")
+    assert dispatch.resolve() == (False, False)
+    assert dispatch.resolve(use_pallas=True)[0] is False
+
+
+def test_force_pallas(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    monkeypatch.setattr(dispatch, "backend", lambda: "cpu")
+    assert dispatch.resolve() == (True, True)  # interpret off-TPU
+
+
+def test_ops_route_through_dispatch(monkeypatch):
+    """With the env forcing the reference path, an op called with
+    defaults must match an explicit use_pallas=False call bit-for-bit."""
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    from repro.kernels.rmsnorm.ops import fused_rmsnorm
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (4, 32)).astype(np.float32)
+    r = rng.normal(0, 1, (4, 32)).astype(np.float32)
+    s = rng.normal(0, 1, (32,)).astype(np.float32)
+    ya, ra = fused_rmsnorm(x, r, s)
+    yb, rb = fused_rmsnorm(x, r, s, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+    np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))

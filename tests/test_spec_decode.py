@@ -1,0 +1,218 @@
+"""Speculative-decoding correctness: greedy spec output must be
+token-identical to the non-speculative engine across the acceptance path,
+the rejection-resample path, eos inside the draft window, and
+max_new_tokens landing mid-window — for fp and quantized self-drafts.
+Plus model-level verify/rollback invariants and the accept-rule math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.quant.self_draft import make_self_draft, parse_draft_spec
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+_CFG = get_arch("llama3.2-1b", variant="reduced")
+_MODEL = build(_CFG)
+_PARAMS = _MODEL.init(jax.random.PRNGKey(0))
+
+_RNG = np.random.default_rng(11)
+# prompt lengths exercise the L=1 draft-prefill edge case and several
+# buckets; max_new=10 with gamma=4 makes the final window land mid-draft
+_PROMPTS = [_RNG.integers(0, _CFG.vocab, L) for L in (1, 3, 9, 17)]
+
+
+def _run(max_new=10, prompts=_PROMPTS, sampler=None, **kw):
+    eng = Engine(_MODEL, _PARAMS, max_batch=2, cache_len=64,
+                 sampler=sampler or Sampler(), **kw)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    resp = eng.run()
+    return {u: r.tokens for u, r in resp.items()}, eng
+
+
+# ------------------------------------------------------------------ #
+# greedy token-identity (the speculative-decoding contract)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("draft", ["fp@1", "int8@1", "int8"])
+def test_greedy_identity(draft):
+    base, _ = _run()
+    out, eng = _run(draft=draft, spec_gamma=4)
+    assert out == base
+    st = eng.latency_stats()
+    assert st["spec_gamma"] == 4
+    # speculation actually happened: fewer fused steps than tokens
+    assert st["decode_steps"] < sum(len(t) - 1 for t in base.values())
+
+
+def test_rejection_resample_path_is_exercised():
+    """A truncated (half-depth) draft disagrees with the target on this
+    stream, so both the accept and the reject-resample paths run — and
+    the output is still exactly the greedy baseline."""
+    base, _ = _run(max_new=24)
+    out, eng = _run(max_new=24, draft="fp@1", spec_gamma=4)
+    assert out == base
+    acc = eng.latency_stats()["spec_acceptance_rate"]
+    assert 0.0 < acc < 1.0, f"need both paths exercised, got {acc}"
+
+
+def test_eos_inside_draft_window():
+    """eos produced mid-window must cut generation exactly there, even
+    though the fused step speculates past it."""
+    base, _ = _run(max_new=12, prompts=_PROMPTS[:1])
+    first = base[0]
+    idx = next((i for i, t in enumerate(first)
+                if i >= 1 and t not in first[:i]), None)
+    if idx is None:
+        pytest.skip("greedy trajectory collapsed to a single token")
+    eos = int(first[idx])
+    outs = {}
+    for spec in ({}, {"draft": "int8@1", "spec_gamma": 4}):
+        eng = Engine(_MODEL, _PARAMS, max_batch=2, cache_len=64,
+                     sampler=Sampler(), **spec)
+        eng.submit(Request(uid=0, prompt=_PROMPTS[0], max_new_tokens=12,
+                           eos_id=eos))
+        r = eng.run()[0]
+        assert r.n_generated == idx + 1 and r.finish_reason == "eos"
+        outs[bool(spec)] = r.tokens
+    assert outs[True] == outs[False]
+
+
+def test_max_new_tokens_lands_mid_window():
+    """max_new that is not a multiple of the per-step emit count must be
+    honoured exactly (the device overshoots; harvest truncates)."""
+    for mn in (2, 3, 6, 7):
+        base, _ = _run(max_new=mn, prompts=_PROMPTS[:2])
+        out, _ = _run(max_new=mn, prompts=_PROMPTS[:2], draft="int8@1",
+                      spec_gamma=4)
+        assert out == base
+        assert all(len(t) == mn for t in out.values())
+
+
+def test_spec_with_int8_kv_cache():
+    """Speculative decoding composes with the quantized KV cache (verify
+    writes quantize-on-write like prefill/decode)."""
+    base, _ = _run(kv_cache_dtype="int8")
+    out, _ = _run(kv_cache_dtype="int8", draft="int8@1", spec_gamma=4)
+    assert out == base
+
+
+def test_stochastic_spec_completes():
+    """Sampled (non-greedy) speculative decoding: every emitted token is
+    an exact target-distribution sample by the accept/resample rule, so
+    here we check the serving contract — full-length, finished output."""
+    out, eng = _run(sampler=Sampler(temperature=0.9, top_k=16),
+                    draft="int8@1", spec_gamma=3)
+    assert all(len(t) == 10 for t in out.values())
+    assert all(r.finished for r in eng.responses.values())
+
+
+# ------------------------------------------------------------------ #
+# engine gating
+# ------------------------------------------------------------------ #
+def test_spec_requires_attention_backed_caches():
+    cfg = get_arch("mamba2-780m", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert not model.supports_speculative
+    with pytest.raises(ValueError, match="attention-backed"):
+        Engine(model, params, max_batch=1, cache_len=32,
+               draft="fp@1", spec_gamma=2)
+
+
+def test_gamma_without_draft_raises():
+    with pytest.raises(ValueError, match="no draft"):
+        Engine(_MODEL, _PARAMS, max_batch=1, cache_len=32, spec_gamma=2)
+
+
+def test_spec_variant_and_draft_spec_parsing():
+    cfg = get_arch("llama3.2-1b", variant="reduced+spec")
+    assert cfg.spec_gamma == 4 and cfg.draft == "int8@1"
+    assert parse_draft_spec("int4@2") == ("int4", 2)
+    assert parse_draft_spec("fp") == ("fp", None)
+    with pytest.raises(ValueError):
+        parse_draft_spec("int2@1")
+
+
+def test_self_draft_shares_weights():
+    dm, dp = make_self_draft(_MODEL, _PARAMS, "fp@1")
+    assert dp["embed"]["table"] is _PARAMS["embed"]["table"]
+    nb = jax.tree.leaves(dp["blocks"])[0].shape[0]
+    assert nb == 1 < jax.tree.leaves(_PARAMS["blocks"])[0].shape[0]
+
+
+# ------------------------------------------------------------------ #
+# model-level verify / rollback invariants
+# ------------------------------------------------------------------ #
+def test_verify_step_matches_sequential_decode():
+    """One masked multi-token verify forward produces the same logits as
+    token-by-token decode, and advances each row's step by T."""
+    toks = jnp.asarray(_RNG.integers(0, _CFG.vocab, (1, 8)), jnp.int32)
+    seq = jnp.asarray(_RNG.integers(0, _CFG.vocab, (1, 4)), jnp.int32)
+
+    cache_a = _MODEL.make_cache(1, 32)
+    _, cache_a = jax.jit(_MODEL.prefill)(_PARAMS, {"tokens": toks}, cache_a)
+    lo_v, cache_a = jax.jit(_MODEL.verify_step)(_PARAMS, seq, cache_a)
+
+    cache_b = _MODEL.make_cache(1, 32)
+    _, cache_b = jax.jit(_MODEL.prefill)(_PARAMS, {"tokens": toks}, cache_b)
+    step = jax.jit(_MODEL.decode_step)
+    for i in range(4):
+        lo_i, cache_b = step(_PARAMS, seq[:, i:i + 1], cache_b)
+        np.testing.assert_allclose(np.asarray(lo_v[:, i]),
+                                   np.asarray(lo_i[:, 0]),
+                                   rtol=2e-5, atol=2e-5)
+    assert int(_MODEL.cache_steps(cache_a)[0]) == 12
+
+
+def test_rollback_then_decode_matches_clean_cache():
+    """After rolling the per-row step back past speculated writes, decode
+    behaves exactly as if the speculated tokens were never written (stale
+    entries stay causally invisible and are overwritten in place)."""
+    toks = jnp.asarray(_RNG.integers(0, _CFG.vocab, (1, 8)), jnp.int32)
+    junk = jnp.asarray(_RNG.integers(0, _CFG.vocab, (1, 5)), jnp.int32)
+    nxt = jnp.asarray([[3]], jnp.int32)
+
+    cache_a = _MODEL.make_cache(1, 32)
+    _, cache_a = jax.jit(_MODEL.prefill)(_PARAMS, {"tokens": toks}, cache_a)
+    _, cache_spec = jax.jit(_MODEL.verify_step)(_PARAMS, junk, cache_a)
+    cache_rb = _MODEL.rollback(cache_spec, jnp.asarray([8], jnp.int32))
+    lo_rb, _ = jax.jit(_MODEL.decode_step)(_PARAMS, nxt, cache_rb)
+
+    cache_c = _MODEL.make_cache(1, 32)
+    _, cache_c = jax.jit(_MODEL.prefill)(_PARAMS, {"tokens": toks}, cache_c)
+    lo_clean, _ = jax.jit(_MODEL.decode_step)(_PARAMS, nxt, cache_c)
+    np.testing.assert_allclose(np.asarray(lo_rb), np.asarray(lo_clean),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# accept/resample rule
+# ------------------------------------------------------------------ #
+def test_speculative_accept_greedy_rule():
+    s = Sampler()
+    V = 8
+    tgt = np.full((1, 4, V), -10.0, np.float32)
+    for i, t in enumerate((2, 5, 1, 6)):       # target argmax per position
+        tgt[0, i, t] = 10.0
+    draft = jnp.asarray([[2, 5, 3]])           # diverges at position 2
+    block, n_acc = s.speculative(jax.random.PRNGKey(0), draft,
+                                 jnp.zeros((1, 3, V)), jnp.asarray(tgt))
+    assert int(n_acc[0]) == 2
+    assert list(np.asarray(block[0])) == [2, 5, 1, 6]
+
+
+def test_speculative_accept_identical_dists_accepts_all():
+    """Stochastic rule: draft distribution == target distribution =>
+    p/q = 1 and every proposal is accepted, bonus token appended."""
+    s = Sampler(temperature=1.0)
+    logits = jnp.asarray(
+        np.random.default_rng(0).normal(0, 1, (2, 4, 16)), jnp.float32)
+    draft_logits = logits[:, :3]
+    draft = jnp.argmax(draft_logits, axis=-1).astype(jnp.int32)
+    _, n_acc = s.speculative(jax.random.PRNGKey(1), draft, draft_logits,
+                             logits)
+    assert np.all(np.asarray(n_acc) == 3)
