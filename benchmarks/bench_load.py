@@ -1,0 +1,307 @@
+"""Poisson-arrival load benchmark: tail latency under concurrent
+long-prompt arrivals — the failure mode continuous batching removes.
+
+  PYTHONPATH=src python -m benchmarks.bench_load [--smoke] \
+      [--out BENCH_load.json]
+
+An open-loop Poisson request stream (mixed prompt lengths: mostly short
+chats plus a fraction of long documents, optionally sharing a system-
+prompt head) is driven through the engine with ``Engine.tick`` in three
+modes over the *same* arrival schedule:
+
+* ``stall``          — monolithic prefill (``prefill_chunk=0``): a long
+                       prompt monopolises the engine while every active
+                       decode slot waits, so p99 inter-token latency
+                       (ITL) spikes exactly when load arrives;
+* ``chunked``        — the fused mixed step (Sarathi-style chunked
+                       prefill): decode never stalls, prompts advance
+                       ``prefill_chunk`` tokens per step;
+* ``chunked+prefix`` — chunked plus shared-prefix KV reuse: prompts
+                       sharing the system head skip its recomputation.
+
+Greedy outputs are asserted token-identical across all modes (continuous
+batching is a scheduling change, not a model change). Engines are warmed
+through every program/bucket the timed stream hits, then
+``Engine.reset_stats()`` isolates the measured phase. Reported: p50/p99
+TTFT and ITL plus decode tokens/s, in the unified artifact schema
+(``benchmarks/schema.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from benchmarks import schema
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+
+def make_workload(cfg, n_requests: int, seed: int, long_frac: float,
+                  short_len=(4, 16), long_len=(96, 160),
+                  shared_head: int = 64, shared_frac: float = 0.5,
+                  rate_hz: float = 6.0, max_new: int = 24):
+    """Arrival times (Poisson) + prompts (mixed lengths; ``shared_frac``
+    of them start with one common ``shared_head``-token system prompt)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    head = rng.integers(0, cfg.vocab, shared_head)
+    prompts = []
+    for i in range(n_requests):
+        if rng.random() < long_frac:
+            L = int(rng.integers(*long_len))
+        else:
+            L = int(rng.integers(*short_len))
+        body = rng.integers(0, cfg.vocab, L)
+        if L > shared_head and rng.random() < shared_frac:
+            body = np.concatenate([head, body[shared_head:]])
+        prompts.append(body)
+    return arrivals, prompts, max_new
+
+
+def serve_stream(eng: Engine, arrivals, prompts, max_new: int) -> Dict:
+    """Open-loop driver: submit each request at its arrival time, advance
+    the engine with ``tick`` in between. Wall clock is real — queueing
+    delay lands in TTFT exactly as a user would see it."""
+    t0 = time.perf_counter()
+    i, n = 0, len(prompts)
+    while i < n or eng.has_work:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            eng.submit(Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=max_new))
+            i += 1
+        if not eng.has_work:
+            time.sleep(min(0.002, max(0.0, arrivals[i] - now)))
+            continue
+        eng.tick()
+    wall = time.perf_counter() - t0
+    st = eng.latency_stats()
+    st["wall_s"] = wall
+    decode_s = sum(eng.step_times)
+    st["decode_tok_per_s"] = st["tokens_generated"] / decode_s \
+        if decode_s else 0.0
+    st["wall_tok_per_s"] = st["tokens_generated"] / wall if wall else 0.0
+    return st
+
+
+def _warm(eng: Engine, cfg, long_len, shared_head: int,
+          max_new: int) -> None:
+    """Compile every program the timed stream can hit: all prefill
+    buckets (stall mode), the plain fused step, the mixed step + slot
+    reset (chunked), and — in prefix mode — extract at every entry
+    bucket plus materialize and the partial-hit slice at the shared-head
+    bucket. Anything left cold would land its compile spike in the
+    measured ITL tail."""
+    rng = np.random.default_rng(123)
+    uid = -1
+    donors = []
+    for L in (4, 12, long_len[0] + 8, long_len[1] - 1):
+        prompt = rng.integers(0, cfg.vocab, L)
+        donors.append(prompt)
+        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=max_new))
+        uid -= 1
+    eng.run()
+    if eng.prefix_cache is not None:
+        # hit path: prompts sharing a bit more than the head bucket with
+        # each stored donor warm materialize + the entry slice per bucket
+        Q = eng.prefix_cache.bucket(shared_head)
+        for donor in donors:
+            if len(donor) <= Q + 8:
+                continue
+            var = np.concatenate([donor[:Q + 8],
+                                  rng.integers(0, cfg.vocab, 8)])
+            eng.submit(Request(uid=uid, prompt=var, max_new_tokens=4))
+            uid -= 1
+            eng.run()
+    eng.reset_stats()
+
+
+def steady_decode(model, params, cfg, chunk: int, trials: int = 3) -> Dict:
+    """Closed-loop check on ``bench_serving``'s exact configuration
+    (batch 4, cache 96, same request stream) but with chunked admission
+    enabled: decode tok/s must match BENCH_serving's, proving continuous
+    batching does not slow steady decode (the plain-step program is the
+    same jitted function; ``step_kinds`` isolates its p50). Median of
+    ``trials`` runs — single-shot per-step medians are at the mercy of
+    machine noise at smoke scale. ``sync_every=1`` times every step
+    individually: burst averaging would smear an admission step's cost
+    over the plain entries sharing its burst."""
+    from benchmarks.bench_serving import warm_engine
+    eng = Engine(model, params, max_batch=4, cache_len=96,
+                 sampler=Sampler(), sync_every=1, prefill_chunk=chunk)
+    warm_engine(eng, cfg)
+    p50s, incl, admissions = [], [], 0
+    for t in range(trials):
+        eng.reset_stats()
+        rng = np.random.default_rng(0)
+        for uid in range(12):
+            L = int(rng.integers(4, 24))
+            eng.submit(Request(uid=uid + 100 * t,
+                               prompt=rng.integers(0, cfg.vocab, L),
+                               max_new_tokens=16))
+        eng.run()
+        st = eng.latency_stats()
+        decode_s = sum(eng.step_times)
+        plain = [tt for tt, k in zip(eng.step_times, eng.step_kinds)
+                 if k == "plain"]
+        if plain:
+            p50s.append(float(np.percentile(plain, 50)))
+        if decode_s:
+            incl.append(st["tokens_generated"] / decode_s)
+        admissions += st["chunked_admissions"]
+    p50 = float(np.median(p50s)) if p50s else 0.0
+    return {
+        # full-batch tokens over the plain-step p50: same basis as
+        # BENCH_serving's decode_ms_p50 -> tok/s at batch 4
+        "steady_decode_tok_per_s": 4 / p50 if p50 else 0.0,
+        "plain_step_ms_p50": p50 * 1e3,
+        "plain_step_ms_p50_trials": [round(x * 1e3, 2) for x in p50s],
+        # informational: includes the admission (chunk) steps' time,
+        # which the stall engine keeps outside step_times
+        "decode_tok_per_s_incl_admission":
+            float(np.median(incl)) if incl else 0.0,
+        "chunked_admissions": admissions}
+
+
+def run(n_requests: int = 48, long_frac: float = 0.3,
+        rate_hz: float = 5.0, max_new: int = 24, chunk: int = 32,
+        prefix_tokens: int = 4096, max_batch: int = 4,
+        cache_len: int = 384, seed: int = 0) -> Dict:
+    cfg = get_arch("llama3.2-1b", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    long_len = (160, min(320, cache_len - max_new - 1))
+    arrivals, prompts, max_new = make_workload(
+        cfg, n_requests, seed, long_frac, long_len=long_len,
+        rate_hz=rate_hz, max_new=max_new)
+
+    modes = [("stall", dict(prefill_chunk=0)),
+             ("chunked", dict(prefill_chunk=chunk)),
+             ("chunked+prefix", dict(prefill_chunk=chunk,
+                                     prefix_cache_tokens=prefix_tokens))]
+    rows: List[Dict] = []
+    outputs: Dict[str, Dict[int, List[int]]] = {}
+    for name, kw in modes:
+        eng = Engine(model, params, max_batch=max_batch,
+                     cache_len=cache_len, sampler=Sampler(),
+                     sync_every=4, **kw)
+        _warm(eng, cfg, long_len, 64, max_new)
+        st = serve_stream(eng, arrivals, prompts, max_new)
+        outputs[name] = {u: list(r.tokens)
+                         for u, r in eng.responses.items() if u >= 0}
+        row = {"mode": name, **{k: st[k] for k in (
+            "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
+            "itl_ms_mean", "itl_ms_p50", "itl_ms_p95", "itl_ms_p99",
+            "decode_ms_p50", "decode_ms_p99", "decode_tok_per_s",
+            "wall_tok_per_s", "tokens_generated", "n_finished",
+            "decode_steps", "wall_s", "chunked_admissions")}}
+        for k in ("prefix_hits", "prefix_hit_tokens", "prefix_entries",
+                  "prefix_tokens"):
+            if k in st:
+                row[k] = st[k]
+        rows.append(row)
+    # like-for-like steady A/B in one process: the chunked engine's plain
+    # decode step vs the stall engine's, on bench_serving's config
+    steady = steady_decode(model, params, cfg, chunk)
+    steady_stall = steady_decode(model, params, cfg, 0)
+    steady["plain_step_ratio_vs_stall"] = (
+        steady["plain_step_ms_p50"] / steady_stall["plain_step_ms_p50"]
+        if steady_stall["plain_step_ms_p50"] else 0.0)
+    steady["stall_plain_step_ms_p50"] = steady_stall["plain_step_ms_p50"]
+
+    # continuous batching is a scheduling change, not a model change:
+    # greedy outputs must be token-identical in every mode
+    for name in ("chunked", "chunked+prefix"):
+        assert outputs[name] == outputs["stall"], \
+            f"greedy output diverged in mode {name!r}"
+    for row in rows:
+        row["greedy_match"] = True
+    return {
+        "workload": {"n_requests": n_requests, "rate_hz": rate_hz,
+                     "long_frac": long_frac, "long_len": list(long_len),
+                     "max_new": max_new, "max_batch": max_batch,
+                     "cache_len": cache_len, "prefill_chunk": chunk,
+                     "prefix_cache_tokens": prefix_tokens, "seed": seed},
+        "rows": rows,
+        "steady": steady,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 2 arrivals, tiny stream")
+    ap.add_argument("--out", default="BENCH_load.json",
+                    help="JSON output path ('' to skip)")
+    ap.add_argument("--min-itl-p99-improvement", type=float, default=0.0,
+                    help="assert chunked p99 ITL is at least this factor "
+                         "below the stall baseline (0 = report only)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        data = run(n_requests=2, long_frac=1.0, rate_hz=20.0, max_new=6)
+    else:
+        data = run()
+
+    print("load benchmark: Poisson arrivals, mixed prompt lengths "
+          "(stall vs chunked prefill)")
+    print(f"{'mode':>15s} {'ttft p50':>9s} {'ttft p99':>9s} "
+          f"{'itl p50':>8s} {'itl p99':>8s} {'dec tok/s':>10s} "
+          f"{'hits':>5s}")
+    for r in data["rows"]:
+        print(f"{r['mode']:>15s} {r['ttft_ms_p50']:9.1f} "
+              f"{r['ttft_ms_p99']:9.1f} {r['itl_ms_p50']:8.2f} "
+              f"{r['itl_ms_p99']:8.2f} {r['decode_tok_per_s']:10.1f} "
+              f"{r.get('prefix_hits', 0):5d}")
+    by = {r["mode"]: r for r in data["rows"]}
+    imp = by["stall"]["itl_ms_p99"] / max(by["chunked"]["itl_ms_p99"],
+                                          1e-9)
+    print(f"  p99 ITL improvement (stall -> chunked): {imp:.2f}x")
+    print(f"  steady decode (serving config, chunk on): "
+          f"{data['steady']['steady_decode_tok_per_s']:.1f} tok/s "
+          f"(plain-step p50 {data['steady']['plain_step_ms_p50']:.2f}ms, "
+          f"{data['steady']['plain_step_ratio_vs_stall']:.3f}x the stall "
+          f"engine's) — compare BENCH_serving decode tok/s at batch 4")
+    if args.min_itl_p99_improvement:
+        assert imp >= args.min_itl_p99_improvement, \
+            f"p99 ITL improvement {imp:.2f}x < " \
+            f"required {args.min_itl_p99_improvement}x"
+
+    if args.out:
+        metrics = [schema.metric("itl_ms_p99_stall", "ms",
+                                 by["stall"]["itl_ms_p99"]),
+                   schema.metric("itl_ms_p99_chunked", "ms",
+                                 by["chunked"]["itl_ms_p99"]),
+                   schema.metric("itl_p99_improvement", "x", imp),
+                   schema.metric("ttft_ms_p99_chunked", "ms",
+                                 by["chunked"]["ttft_ms_p99"]),
+                   schema.metric("decode_tok_per_s_chunked", "tok/s",
+                                 by["chunked"]["decode_tok_per_s"]),
+                   schema.metric("steady_decode_tok_per_s_chunked",
+                                 "tok/s",
+                                 data["steady"]["steady_decode_tok_per_s"],
+                                 trials=data["steady"]
+                                 ["plain_step_ms_p50_trials"]),
+                   schema.metric("steady_plain_step_ratio_vs_stall", "x",
+                                 data["steady"]
+                                 ["plain_step_ratio_vs_stall"]),
+                   schema.metric(
+                       "prefix_hit_tokens", "tokens",
+                       by["chunked+prefix"].get("prefix_hit_tokens", 0))]
+        schema.write(args.out, schema.payload(
+            "load", run=schema.run_meta(smoke=args.smoke,
+                                        arch="llama3.2-1b-reduced",
+                                        greedy=True),
+            metrics=metrics, data=data))
+    return data
+
+
+if __name__ == "__main__":
+    main()

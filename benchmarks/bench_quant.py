@@ -12,13 +12,13 @@ Reports, for the tiny test config (llama3.2-1b reduced):
   for int8 weights + int8 KV (asserted — this doubles as the CI quant
   smoke: quantize -> decode -> bounded error).
 
-Emits machine-readable JSON like bench_serving/bench_kernels so CI can
-archive one unified perf artifact.
+Emits machine-readable JSON in the unified artifact schema
+(``benchmarks/schema.py``) so CI can archive one comparable perf
+artifact per bench.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from typing import Dict, List
 
@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import schema
 from repro.configs import get_arch
 from repro.models.model import build
 from repro.quant import quantize_params, quantized_stats
@@ -136,9 +137,7 @@ def run(n_requests: int = 8, max_new: int = 16) -> Dict:
         })
 
     return {
-        "bench": "quantization",
         "arch": cfg.name,
-        "backend": jax.default_backend(),
         "weight_bytes": {"fp": s_fp["weight_bytes"],
                          "int8": s_8["weight_bytes"],
                          "int4": s_4["weight_bytes"],
@@ -184,9 +183,21 @@ def main(argv=None):
               f"{r['tok_per_s']:10.1f} {r['weight_bytes']:9d}")
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {args.out}")
+        metrics = [schema.metric("weight_bytes_reduction_int8", "x",
+                                 wb["reduction_int8"]),
+                   schema.metric("weight_bytes_reduction_int4", "x",
+                                 wb["reduction_int4"]),
+                   schema.metric("kv_bytes_reduction_int8", "x",
+                                 kv["fp_bytes"] / kv["int8_bytes"]),
+                   schema.metric("max_abs_logit_err_int8", "logit",
+                                 err["int8"]),
+                   schema.metric("greedy_match_33_int8_int8kv", "tokens",
+                                 gm["int8_int8kv"])]
+        schema.write(args.out, schema.payload(
+            "quantization",
+            run=schema.run_meta(smoke=args.smoke,
+                                arch=payload["arch"]),
+            metrics=metrics, data=payload))
     return payload
 
 

@@ -5,23 +5,39 @@ the runtime behind the paper's 'predictable local service latency' claim.
       [--out BENCH_serving.json]
 
 Emits machine-readable JSON (decode p50/p99 ms, tokens/s, prefill
-jit-cache entries) so the perf trajectory is tracked across PRs.
+jit-cache entries) in the unified artifact schema
+(``benchmarks/schema.py``) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from typing import Dict, List
 
 import jax
 import numpy as np
 
+from benchmarks import schema
 from repro.configs import get_arch
 from repro.models.model import build
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 from repro.serving.sampler import Sampler
+
+
+def warm_engine(eng: Engine, cfg) -> None:
+    """Compile the fused step and every prefill bucket the timed stream
+    hits, then reset stats (compile time used to land in the wall — and
+    in ttft_ms — making rows incomparable across machines and PRs).
+    Shared with ``bench_load.steady_decode``, whose cross-artifact
+    comparison depends on warming the exact same configuration."""
+    rngw = np.random.default_rng(99)
+    for i, L in enumerate((5, 12, 20)):
+        eng.submit(Request(uid=-1 - i,
+                           prompt=rngw.integers(0, cfg.vocab, L),
+                           max_new_tokens=4))
+    eng.run()
+    eng.reset_stats()
 
 
 def run(n_requests: int = 12, max_new: int = 16,
@@ -33,6 +49,7 @@ def run(n_requests: int = 12, max_new: int = 16,
     for max_batch in batch_sizes:
         eng = Engine(model, params, max_batch=max_batch, cache_len=96,
                      sampler=Sampler())
+        warm_engine(eng, cfg)
         rng = np.random.default_rng(0)
         t0 = time.perf_counter()
         for uid in range(n_requests):
@@ -43,11 +60,16 @@ def run(n_requests: int = 12, max_new: int = 16,
         eng.run()
         wall = time.perf_counter() - t0
         st = eng.latency_stats()
+        decode_s = sum(eng.step_times)
         rows.append({"max_batch": max_batch,
                      "tok_per_s": st["tokens_generated"] / wall,
+                     "decode_tok_per_s": st["tokens_generated"] / decode_s
+                     if decode_s else 0.0,
                      "decode_ms_p50": st["decode_ms_p50"],
                      "decode_ms_p99": st["decode_ms_p99"],
                      "ttft_ms_mean": st["ttft_ms_mean"],
+                     "itl_ms_p50": st["itl_ms_p50"],
+                     "itl_ms_p99": st["itl_ms_p99"],
                      "prefill_jit_entries": st["prefill_jit_entries"],
                      "decode_steps": st["decode_steps"],
                      "wall_s": wall})
@@ -76,13 +98,21 @@ def main(argv=None):
               f"{r['ttft_ms_mean']:8.1f} {r['prefill_jit_entries']:5d}")
 
     if args.out:
-        payload = {"bench": "serving_engine_v2",
-                   "smoke": bool(args.smoke),
-                   "backend": jax.default_backend(),
-                   "rows": rows}
-        with open(args.out, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {args.out}")
+        best = max(rows, key=lambda r: r["tok_per_s"])
+        metrics = [schema.metric("tok_per_s_best", "tok/s",
+                                 best["tok_per_s"]),
+                   schema.metric("decode_tok_per_s_best", "tok/s",
+                                 best["decode_tok_per_s"]),
+                   schema.metric("decode_ms_p50_best_batch", "ms",
+                                 best["decode_ms_p50"]),
+                   schema.metric("decode_ms_p99_best_batch", "ms",
+                                 best["decode_ms_p99"]),
+                   schema.metric("ttft_ms_mean_best_batch", "ms",
+                                 best["ttft_ms_mean"])]
+        schema.write(args.out, schema.payload(
+            "serving_engine", run=schema.run_meta(
+                smoke=args.smoke, arch="llama3.2-1b-reduced"),
+            metrics=metrics, data={"rows": rows}))
     return rows
 
 

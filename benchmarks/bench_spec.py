@@ -11,19 +11,20 @@ decode tokens/s (decode phase only, prefill excluded; engines are warmed
 first so XLA compilation never lands in the timed wall). Each config is
 measured ``--trials`` times and the median reported, since per-token
 wall times at smoke scale are at the mercy of machine noise. Emits
-machine-readable JSON so the per-token-latency trajectory (the paper's
-user-facing response-time metric) is tracked across PRs.
+machine-readable JSON in the unified artifact schema
+(``benchmarks/schema.py``) so the per-token-latency trajectory (the
+paper's user-facing response-time metric) is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from typing import Dict, List
 
 import jax
 import numpy as np
 
+from benchmarks import schema
 from repro.configs import get_arch
 from repro.models.model import build
 from repro.serving.engine import Engine
@@ -147,16 +148,24 @@ def main(argv=None):
             f"gamma=4 speedup {got:.2f}x < required {args.min_speedup}x"
 
     if args.out:
-        payload = {"bench": "speculative_decoding",
-                   "smoke": bool(args.smoke),
-                   "backend": jax.default_backend(),
-                   "arch": "llama3.2-1b-reduced",
-                   "greedy": True,
-                   "max_batch": 1,
-                   "rows": rows}
-        with open(args.out, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {args.out}")
+        best = max(rows[1:], key=lambda r: r["speedup_vs_baseline"],
+                   default=rows[0])
+        metrics = [schema.metric("decode_tok_per_s_baseline", "tok/s",
+                                 rows[0]["decode_tok_per_s"],
+                                 trials=rows[0]["decode_tok_per_s_runs"]),
+                   schema.metric("decode_tok_per_s_best", "tok/s",
+                                 best["decode_tok_per_s"],
+                                 trials=best["decode_tok_per_s_runs"]),
+                   schema.metric("speedup_vs_baseline_best", "x",
+                                 best["speedup_vs_baseline"]),
+                   schema.metric("acceptance_rate_best", "ratio",
+                                 best["acceptance_rate"])]
+        schema.write(args.out, schema.payload(
+            "speculative_decoding",
+            run=schema.run_meta(smoke=args.smoke,
+                                arch="llama3.2-1b-reduced", greedy=True,
+                                max_batch=1),
+            metrics=metrics, data={"rows": rows}))
     return rows
 
 

@@ -1,0 +1,70 @@
+"""Unified `BENCH_*.json` artifact schema.
+
+Every benchmark in this repo emits the same envelope so the perf
+trajectory is machine-comparable across PRs without per-bench parsing:
+
+```json
+{
+  "bench": "<name>",              // load / serving_engine / quantization / ...
+  "schema_version": 1,
+  "run": {                        // where/when/how the numbers were made
+    "timestamp": "...Z", "backend": "cpu", "jax": "...",
+    "python": "3.11", "smoke": false, "trials": 3, ...
+  },
+  "metrics": [                    // headline numbers, one unit each
+    {"name": "decode_tok_per_s", "unit": "tok/s", "value": 394.1,
+     "trials": [361.8, 394.1, 407.9]},   // per-trial values when repeated
+    ...
+  ],
+  "data": { ... }                 // bench-specific detail (rows, sweeps)
+}
+```
+
+`metrics` is the cross-PR comparison surface: a dashboard (or the next
+PR's reviewer) can diff `BENCH_x.json["metrics"]` without knowing the
+bench. `data` keeps each bench's full row-level output.
+"""
+from __future__ import annotations
+
+import datetime
+import platform
+import sys
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+
+def run_meta(smoke: bool = False, **extra) -> Dict[str, Any]:
+    import jax
+    meta = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "smoke": bool(smoke),
+    }
+    meta.update(extra)
+    return meta
+
+
+def metric(name: str, unit: str, value,
+           trials: Optional[List] = None) -> Dict[str, Any]:
+    m: Dict[str, Any] = {"name": name, "unit": unit, "value": value}
+    if trials is not None:
+        m["trials"] = list(trials)
+    return m
+
+
+def payload(bench: str, *, run: Dict[str, Any],
+            metrics: List[Dict[str, Any]],
+            data: Dict[str, Any]) -> Dict[str, Any]:
+    return {"bench": bench, "schema_version": SCHEMA_VERSION,
+            "run": run, "metrics": metrics, "data": data}
+
+
+def write(path: str, pl: Dict[str, Any]) -> None:
+    import json
+    with open(path, "w") as f:
+        json.dump(pl, f, indent=2)
+    print(f"wrote {path}")

@@ -34,7 +34,12 @@ def get_arch(name: str, *, variant: str = "") -> ModelConfig:
     ``"reduced+edge"`` for the smoke-sized edge model; "spec" ->
     speculative decoding with an int8 half-depth self-draft at
     gamma=4 (``cfg.draft`` / ``cfg.spec_gamma``), e.g.
-    ``"reduced+spec"`` for the smoke-sized speculative server.
+    ``"reduced+spec"`` for the smoke-sized speculative server;
+    "continuous" -> continuous batching (chunked prefill fused into the
+    decode step, ``prefill_chunk=64``, plus an 8k-token shared-prefix KV
+    reuse budget), e.g. ``"reduced+continuous"`` or ``"edge+continuous"``
+    for the edge profile that also never stalls decode behind a long
+    prompt.
     """
     cfg = ARCHS.get(name) or EXTRA_ARCHS[name]
     for v in filter(None, variant.split("+")):
@@ -45,6 +50,11 @@ def get_arch(name: str, *, variant: str = "") -> ModelConfig:
         elif v == "edge":
             cfg = cfg.replace(name=cfg.name + "-edge", quant="int4",
                               kv_quant=True)
+        elif v == "continuous":
+            cfg = cfg.replace(name=cfg.name + "-cont",
+                              prefill_chunk=cfg.prefill_chunk or 64,
+                              prefix_cache_tokens=cfg.prefix_cache_tokens
+                              or 8192)
         elif v == "spec":
             # half-depth int8 self-draft: weight-sharing, no second
             # checkpoint — the edge-deployment speculative profile

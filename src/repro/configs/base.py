@@ -103,6 +103,17 @@ class ModelConfig:
     use_decode_kernel: bool = False  # route cached decode attention through
                                      # kernels/decode_attention (Pallas-ready
                                      # layout; reference path by default)
+    prefill_chunk: int = 0          # continuous batching: fuse at most
+                                    # this many prompt tokens of one
+                                    # admitting request into every decode
+                                    # step (Sarathi-style chunked prefill;
+                                    # 0 = monolithic prefill that stalls
+                                    # decode). Engine knob mirror:
+                                    # Engine(prefill_chunk=...)
+    prefix_cache_tokens: int = 0    # shared-prefix KV reuse budget in
+                                    # tokens (LRU trie of chunk-aligned
+                                    # prompt prefixes; 0 = off). Requires
+                                    # prefill_chunk > 0
     draft: str = ""                 # speculative-decoding draft spec:
                                     # "" = off; "<prec>[@<blocks>]" builds a
                                     # weight-sharing self-draft from the

@@ -1,13 +1,19 @@
 """Pallas TPU decode-attention kernel (flash-decoding style).
 
-One query token attends over a long KV cache. TPU adaptation:
+One (or a few) query tokens attend over a long KV cache. TPU adaptation:
 * The KV sequence is the sequential grid dimension; each step stages one
   (bk, hd) K/V tile into VMEM and updates the online-softmax state held in
   VMEM scratch — the cache itself never leaves HBM more than once.
 * GQA is exploited: all G query heads of a KV group are processed together
-  as the (G, hd) "matrix" side of the MXU matmuls, so the arithmetic
-  intensity per KV byte is G× that of per-head decode — this kernel is the
+  as the "matrix" side of the MXU matmuls, so the arithmetic intensity per
+  KV byte is G× that of per-head decode — this kernel is the
   memory-roofline workhorse for ``decode_32k``/``long_500k``.
+* Multi-query rows (speculative verify / chunked-prefill extend): the T
+  query tokens of a row share the same KV region, so they fold into the
+  MXU row dimension alongside the G group heads — R = T·G rows per KV
+  group, each with its own absolute position for masking. Arithmetic
+  intensity per KV byte grows another T×, which is what makes a prefill
+  chunk nearly free next to the decode it is fused with.
 * Ring-buffer validity (slot position array) and the sliding window are
   applied as masks from a position tile, so the same kernel serves full
   and windowed caches.
@@ -27,7 +33,7 @@ _LANES = 128
 
 def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                   bk: int, G: int):
+                   bk: int, R: int):
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -37,18 +43,18 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+    q = q_ref[0].astype(jnp.float32)                  # (R, hd)
     k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
     v = v_ref[0, 0].astype(jnp.float32)
     pos = pos_ref[0]                                  # (bk,)
-    q_pos = qpos_ref[0]                               # scalar
+    q_pos = qpos_ref[0]                               # (R,) per-row position
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    valid = (pos >= 0) & (pos <= q_pos)
+    valid = (pos[None, :] >= 0) & (pos[None, :] <= q_pos[:, None])
     if window:
-        valid &= pos > (q_pos - window)
-    s = jnp.where(valid[None, :], s, NEG_INF)         # (G, bk)
+        valid &= pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(valid, s, NEG_INF)                  # (R, bk)
 
     m_prev = m_scr[:, 0:1]
     l_prev = l_scr[:, 0:1]
@@ -72,39 +78,49 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
 
 def decode_attention_pallas(q, k, v, pos, q_pos, *, window=0, bk=128,
                             interpret=False):
-    """q: (B, Hq, hd); k, v: (B, Hkv, S, hd); pos: (B, S); q_pos: (B,)."""
-    B, Hq, hd = q.shape
+    """q: (B, Hq, hd) single-query or (B, T, Hq, hd) multi-query rows;
+    k, v: (B, Hkv, S, hd); pos: (B, S); q_pos: (B,) or (B, T) matching q."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q, q_pos = q[:, None], q_pos[:, None]
+    B, T, Hq, hd = q.shape
     Hkv, S = k.shape[1], k.shape[2]
     G = Hq // Hkv
+    R = T * G
     bk = min(bk, S)
     assert S % bk == 0, (S, bk)
-    # regroup q to (B*Hkv, G, hd) so one grid step covers a KV group
-    qg = q.reshape(B, Hkv, G, hd).reshape(B * Hkv, G, hd)
+    # regroup q to (B*Hkv, T*G, hd) so one grid step covers a KV group:
+    # row r of a group is query token r // G, group head r % G
+    qg = q.reshape(B, T, Hkv, G, hd).transpose(0, 2, 1, 3, 4) \
+          .reshape(B * Hkv, R, hd)
     kg = k.reshape(B * Hkv, 1, S, hd)
     vg = v.reshape(B * Hkv, 1, S, hd)
     posg = jnp.repeat(pos, Hkv, axis=0)               # (B*Hkv, S)
-    qposg = jnp.repeat(q_pos, Hkv, axis=0)            # (B*Hkv,)
+    qpos_r = jnp.repeat(q_pos.astype(jnp.int32), G, axis=1)   # (B, R)
+    qposg = jnp.repeat(qpos_r, Hkv, axis=0)           # (B*Hkv, R)
 
     grid = (B * Hkv, 1, S // bk)
     kernel = functools.partial(_decode_kernel, scale=1.0 / (hd ** 0.5),
-                               window=window, bk=bk, G=G)
+                               window=window, bk=bk, R=R)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, G, hd), lambda b, h, j: (b, 0, 0)),
+            pl.BlockSpec((1, R, hd), lambda b, h, j: (b, 0, 0)),
             pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h, j, 0)),
             pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h, j, 0)),
             pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
-            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, R), lambda b, h, j: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, G, hd), lambda b, h, j: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, R, hd), lambda b, h, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, R, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((G, _LANES), jnp.float32),
-            pltpu.VMEM((G, _LANES), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((R, _LANES), jnp.float32),
+            pltpu.VMEM((R, _LANES), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
         ],
         interpret=interpret,
     )(qg, kg, vg, posg, qposg)
-    return out.reshape(B, Hq, hd)
+    out = out.reshape(B, Hkv, T, G, hd).transpose(0, 2, 1, 3, 4) \
+             .reshape(B, T, Hq, hd)
+    return out[:, 0] if squeeze else out

@@ -8,20 +8,25 @@ from repro.kernels.decode_attention import ref as _ref
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 
 
-def cached_decode_attention(q, k_cache, v_cache, pos, step, *, window=0,
+def cached_decode_attention(q, k_cache, v_cache, pos, q_pos, *, window=0,
                             use_pallas=None, interpret=None, bk=128):
-    """Model layout: q (B, 1, Hq, hd); k/v cache (B, S, Hkv, hd);
-    pos (B, S); step (B,) = query absolute position. Returns (B, 1, Hq, hd).
-    ``use_pallas=None`` defers to ``kernels.dispatch``.
+    """Model layout: q (B, T, Hq, hd) — T = 1 for plain decode, T > 1 for
+    multi-query rows (speculative verify / chunked-prefill extend);
+    k/v cache (B, S, Hkv, hd); pos (B, S); q_pos (B,) base position
+    (query t sits at ``q_pos + t``) or (B, T) explicit per-query absolute
+    positions. Returns (B, T, Hq, hd). ``use_pallas=None`` defers to
+    ``kernels.dispatch``.
     """
     use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
-    qh = q[:, 0]                                     # (B, Hq, hd)
+    T = q.shape[1]
+    if q_pos.ndim == 1:
+        q_pos = q_pos[:, None] + jnp.arange(T, dtype=q_pos.dtype)[None]
     kh = jnp.transpose(k_cache, (0, 2, 1, 3))        # (B, Hkv, S, hd)
     vh = jnp.transpose(v_cache, (0, 2, 1, 3))
     if use_pallas:
-        out = decode_attention_pallas(qh, kh, vh, pos, step, window=window,
+        out = decode_attention_pallas(q, kh, vh, pos, q_pos, window=window,
                                       bk=bk, interpret=interpret)
     else:
-        out = _ref.decode_attention_reference(qh, kh, vh, pos, step,
+        out = _ref.decode_attention_reference(q, kh, vh, pos, q_pos,
                                               window=window)
-    return out[:, None]
+    return out

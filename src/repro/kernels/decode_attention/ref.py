@@ -1,9 +1,12 @@
-"""Oracle for single-token GQA decode attention over a (ring-buffer) cache.
+"""Oracle for GQA decode attention over a (ring-buffer) cache.
 
-q: (B, Hq, hd) — one new token per sequence
+q: (B, Hq, hd) — one new token per sequence — or (B, T, Hq, hd) for
+multi-query rows (speculative verify / chunked-prefill extend: T new
+tokens per sequence attending the same per-slot cache region)
 k, v: (B, Hkv, S, hd) — cache in per-head layout
 pos: (B, S) absolute position stored in each slot (-1 = empty)
-q_pos: (B,) absolute position of the query token
+q_pos: (B,) absolute position of the (single) query token, or (B, T)
+per-query absolute positions in the multi-query form
 """
 from __future__ import annotations
 
@@ -14,16 +17,20 @@ NEG_INF = -1e30
 
 
 def decode_attention_reference(q, k, v, pos, q_pos, *, window=0):
-    B, Hq, hd = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q, q_pos = q[:, None], q_pos[:, None]
+    B, T, Hq, hd = q.shape
     Hkv = k.shape[1]
     rep = Hq // Hkv
-    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)   # (B, Hq, S, hd)
     vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
-    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kf) \
+    s = jnp.einsum("bthd,bhsd->bths", q.astype(jnp.float32), kf) \
         / jnp.sqrt(hd)
-    valid = (pos >= 0) & (pos <= q_pos[:, None])
+    valid = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_pos[..., None])
     if window:
-        valid &= pos > (q_pos[:, None] - window)
-    s = jnp.where(valid[:, None, :], s, NEG_INF)
+        valid &= pos[:, None, :] > (q_pos[..., None] - window)
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)       # (B, T, Hq, S)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhs,bhsd->bhd", p, vf).astype(q.dtype)
+    out = jnp.einsum("bths,bhsd->bthd", p, vf).astype(q.dtype)
+    return out[:, 0] if squeeze else out

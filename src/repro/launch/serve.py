@@ -51,6 +51,16 @@ def main(argv=None):
                     help="draft tokens proposed per speculative step "
                          "(0 keeps cfg.spec_gamma; needs --draft or a "
                          "spec-variant config)")
+    ap.add_argument("--prefill-chunk", type=int, default=-1,
+                    help="continuous batching: fuse at most this many "
+                         "prompt tokens of one admitting request into "
+                         "every decode step (0 = monolithic prefill "
+                         "that stalls decode, -1 keeps cfg.prefill_chunk"
+                         "; see the 'continuous' variant)")
+    ap.add_argument("--prefix-cache-tokens", type=int, default=-1,
+                    help="shared-prefix KV reuse budget in tokens (LRU; "
+                         "0 = off, -1 keeps cfg.prefix_cache_tokens; "
+                         "needs --prefill-chunk > 0, non-speculative)")
     ap.add_argument("--json", default="",
                     help="optional path to dump latency stats as JSON")
     args = ap.parse_args(argv)
@@ -73,7 +83,11 @@ def main(argv=None):
                     cache_len=args.cache_len,
                     sampler=Sampler(temperature=args.temperature, top_k=32),
                     seed=args.seed, sync_every=args.sync_every,
-                    kv_cache_dtype=args.kv_cache_dtype)
+                    kv_cache_dtype=args.kv_cache_dtype,
+                    prefill_chunk=None if args.prefill_chunk < 0
+                    else args.prefill_chunk,
+                    prefix_cache_tokens=None if args.prefix_cache_tokens < 0
+                    else args.prefix_cache_tokens)
 
     rng = np.random.default_rng(args.seed)
     fe = cfg.frontend
@@ -99,8 +113,20 @@ def main(argv=None):
           f"({stats['tokens_generated']/wall:,.1f} tok/s)")
     print(f"decode ms/step: mean={stats['decode_ms_mean']:.2f} "
           f"p50={stats['decode_ms_p50']:.2f} p99={stats['decode_ms_p99']:.2f}")
-    print(f"ttft mean={stats['ttft_ms_mean']:.1f}ms "
-          f"prefill jit entries={stats['prefill_jit_entries']}")
+    print(f"ttft ms: mean={stats['ttft_ms_mean']:.1f} "
+          f"p50={stats['ttft_ms_p50']:.1f} p95={stats['ttft_ms_p95']:.1f} "
+          f"p99={stats['ttft_ms_p99']:.1f}")
+    print(f"itl ms: mean={stats['itl_ms_mean']:.2f} "
+          f"p50={stats['itl_ms_p50']:.2f} p95={stats['itl_ms_p95']:.2f} "
+          f"p99={stats['itl_ms_p99']:.2f}")
+    print(f"prefill jit entries={stats['prefill_jit_entries']}")
+    if engine.prefill_chunk:
+        line = (f"continuous batching: chunk={stats['prefill_chunk']} "
+                f"chunked admissions={stats['chunked_admissions']}")
+        if "prefix_hits" in stats:
+            line += (f" prefix hits={stats['prefix_hits']} "
+                     f"reused tokens={stats['prefix_hit_tokens']}")
+        print(line)
     if engine.spec_gamma:
         print(f"speculative: gamma={stats['spec_gamma']} "
               f"accept={stats['spec_acceptance_rate']:.2f} "

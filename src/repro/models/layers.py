@@ -294,20 +294,28 @@ def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
     return linear(p["wo"], y.reshape(B, L, -1)), new_cache
 
 
-def verify_into_cache(p, x, cfg: ModelConfig, cache, *, window=None):
-    """Masked multi-token cached decode — the speculative-decoding verify
-    forward. x: (B, T, d) embeds of [pending token, draft tokens]; every
-    row sits at its own ``step`` offset. All T keys/values are written at
-    ring slots ``(step + t) % S`` in one scatter, then attention runs with
-    per-row query positions ``step + t`` against the updated cache (the
-    same position/validity masking the bucketed prefill uses).
+def extend_into_cache(p, x, cfg: ModelConfig, cache, *, lengths=None,
+                      window=None):
+    """Masked multi-token cached decode at per-row offsets — the shared
+    forward behind speculative verify, chunked prefill, and the serving
+    engine's fused mixed (decode + prefill-chunk) step. x: (B, T, d);
+    every row sits at its own ``step`` offset and advances by
+    ``lengths[b] <= T`` tokens (``lengths=None`` = all rows advance by T,
+    the speculative-verify case). Keys/values of the first ``lengths[b]``
+    positions are written at ring slots ``(step + t) % S`` in one masked
+    scatter (rows beyond their length scatter out of bounds and are
+    dropped), then attention runs with per-row query positions
+    ``step + t`` against the updated cache — the same position/validity
+    masking the bucketed prefill uses. Outputs at positions ``t >=
+    lengths[b]`` are garbage by construction; callers discard them
+    (``transformer.last_valid``).
 
-    Rollback contract: the caller may later reduce ``step`` to
-    ``step + accepted`` without touching ``pos`` — entries beyond the new
-    depth carry positions larger than any future query's until the exact
-    decode step that overwrites their slot (same absolute position ->
-    same ring slot), so causal masking alone keeps them invisible.
-    Returns (y, new_cache with step += T).
+    Rollback contract (speculative decoding): the caller may later reduce
+    ``step`` to ``step + accepted`` without touching ``pos`` — entries
+    beyond the new depth carry positions larger than any future query's
+    until the exact decode step that overwrites their slot (same absolute
+    position -> same ring slot), so causal masking alone keeps them
+    invisible. Returns (y, new_cache with step += lengths).
     """
     B, T, d = x.shape
     hd = cfg.hd
@@ -322,33 +330,53 @@ def verify_into_cache(p, x, cfg: ModelConfig, cache, *, window=None):
         k = apply_rope(k, pos, cfg.rope_theta)
     S = cache["k"].shape[1]
     if T > S:
-        raise ValueError(f"verify window T={T} exceeds cache length S={S}")
+        raise ValueError(f"extend window T={T} exceeds cache length S={S}")
     slots = jnp.mod(pos, S)                                # (B, T) distinct
+    if lengths is not None:
+        # rows advance by lengths[b] < T: send the tail out of bounds so
+        # the scatter drops it — cache and pos stay untouched there
+        valid = jnp.arange(T)[None, :] < lengths[:, None]  # (B, T)
+        slots = jnp.where(valid, slots, S)
     bidx = jnp.arange(B)[:, None]
     quant = "k_scale" in cache
     if quant:
         kq, ksc = _quantize_kv(k)
         vq, vsc = _quantize_kv(v)
-        new_k = cache["k"].at[bidx, slots].set(kq)
-        new_v = cache["v"].at[bidx, slots].set(vq)
-        new_ks = cache["k_scale"].at[bidx, slots].set(ksc)
-        new_vs = cache["v_scale"].at[bidx, slots].set(vsc)
+        new_k = cache["k"].at[bidx, slots].set(kq, mode="drop")
+        new_v = cache["v"].at[bidx, slots].set(vq, mode="drop")
+        new_ks = cache["k_scale"].at[bidx, slots].set(ksc, mode="drop")
+        new_vs = cache["v_scale"].at[bidx, slots].set(vsc, mode="drop")
         k_read = _dequantize_kv(new_k, new_ks, q.dtype)
         v_read = _dequantize_kv(new_v, new_vs, q.dtype)
     else:
-        new_k = cache["k"].at[bidx, slots].set(k)
-        new_v = cache["v"].at[bidx, slots].set(v)
+        new_k = cache["k"].at[bidx, slots].set(k, mode="drop")
+        new_v = cache["v"].at[bidx, slots].set(v, mode="drop")
         k_read, v_read = new_k, new_v
-    new_pos = cache["pos"].at[bidx, slots].set(pos.astype(jnp.int32))
+    new_pos = cache["pos"].at[bidx, slots].set(pos.astype(jnp.int32),
+                                               mode="drop")
     k_valid = new_pos >= 0                                 # (B, S)
-    y = gqa_attention(q, k_read, v_read, q_positions=pos,
-                      k_positions=new_pos, causal=True, window=window,
-                      k_valid=k_valid)
-    new_cache = {"k": new_k, "v": new_v, "pos": new_pos, "step": step + T}
+    if cfg.use_decode_kernel and not quant:
+        from repro.kernels.decode_attention.ops import \
+            cached_decode_attention
+        y = cached_decode_attention(q, k_read, v_read, new_pos, pos,
+                                    window=window)
+    else:
+        y = gqa_attention(q, k_read, v_read, q_positions=pos,
+                          k_positions=new_pos, causal=True, window=window,
+                          k_valid=k_valid)
+    inc = T if lengths is None else lengths.astype(step.dtype)
+    new_cache = {"k": new_k, "v": new_v, "pos": new_pos, "step": step + inc}
     if quant:
         new_cache["k_scale"] = new_ks
         new_cache["v_scale"] = new_vs
     return linear(p["wo"], y.reshape(B, T, -1)), new_cache
+
+
+def verify_into_cache(p, x, cfg: ModelConfig, cache, *, window=None):
+    """Speculative-decoding verify forward: every row advances by the full
+    window T. Kept as the historical name; ``extend_into_cache`` is the
+    general per-row-length form."""
+    return extend_into_cache(p, x, cfg, cache, lengths=None, window=window)
 
 
 def prefill_into_cache(p, x, cfg: ModelConfig, cache, *, window=None,

@@ -38,12 +38,19 @@ class Model:
       valid position per row.
     * ``decode_step(params, token, cache)`` advances every row by one token
       at that row's own offset.
-    * ``verify_step(params, tokens, cache)`` (attention-backed stacks
-      only; None otherwise) scores T tokens per row in one masked
-      multi-token forward — the speculative-decoding verify pass — and
-      ``rollback(cache, steps)`` rewinds every per-row ``step`` to the
-      accepted depth without touching stored keys (causal masking hides
-      the speculated tail until its slots are rewritten).
+    * ``extend_into_cache(params, tokens, cache, lengths, last_only)``
+      (attention-backed stacks only; None otherwise) is the unified
+      masked multi-token cached forward at per-row offsets: row b
+      consumes ``tokens[b, :lengths[b]]`` and advances its cache step by
+      ``lengths[b]`` (0 = untouched; lengths=None = all rows advance by
+      T). Speculative verify, chunked prefill and the serving engine's
+      fused mixed (decode + prefill-chunk) step all share this one code
+      path.
+    * ``verify_step(params, tokens, cache)`` is extend with the full
+      window (every row advances by T) — the speculative-decoding verify
+      pass — and ``rollback(cache, steps)`` rewinds every per-row
+      ``step`` to the accepted depth without touching stored keys (causal
+      masking hides the speculated tail until its slots are rewritten).
     """
 
     cfg: ModelConfig
@@ -55,10 +62,19 @@ class Model:
     cache_steps: Callable[..., Any] = lambda cache: None  # cache -> (B,) depths
     verify_step: Optional[Callable[..., Any]] = None  # (params, tokens (B,T), cache)
     rollback: Optional[Callable[..., Any]] = None     # (cache, steps (B,)) -> cache
+    extend_into_cache: Optional[Callable[..., Any]] = None
+    # (params, tokens (B,T), cache, lengths (B,), last_only) -> (logits, cache)
 
     @property
     def supports_speculative(self) -> bool:
         return self.verify_step is not None
+
+    @property
+    def supports_extend(self) -> bool:
+        """Whether the stack supports the per-row-length multi-token
+        cached forward (chunked prefill / fused mixed step). Attention-
+        backed decoder stacks only — SSM recurrent state is positionless."""
+        return self.extend_into_cache is not None
 
     def cache_len(self, shape: ShapeConfig) -> int:
         if self.cfg.sliding_window:
@@ -141,12 +157,17 @@ def _build_decoder(cfg: ModelConfig) -> Model:
     def verify_fn(params, tokens, cache):
         return T.verify_step(params, cfg, tokens, cache)
 
+    def extend_fn(params, tokens, cache, lengths=None, last_only=False):
+        return T.extend_step(params, cfg, tokens, cache, lengths=lengths,
+                             last_only=last_only)
+
     return Model(cfg=cfg, init=lambda k: T.init_transformer(k, cfg),
                  train_loss=train_loss, prefill=prefill_fn,
                  decode_step=decode_fn, make_cache=make_cache,
                  cache_steps=T.cache_steps,
                  verify_step=verify_fn if spec_ok else None,
-                 rollback=T.set_cache_steps if spec_ok else None)
+                 rollback=T.set_cache_steps if spec_ok else None,
+                 extend_into_cache=extend_fn if spec_ok else None)
 
 
 def _build_encdec(cfg: ModelConfig) -> Model:

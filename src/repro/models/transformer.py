@@ -144,12 +144,14 @@ def cache_steps(cache):
 # --------------------------------------------------------------------- #
 def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
                 length=None):
-    """mode: 'train' | 'prefill' | 'decode' | 'verify'. Returns
-    (x, new_cache, aux). ``length``: optional (B,) valid-token counts for
-    right-padded prefill (bucketed serving prefill); forwarded to the
-    cache writers. 'verify' is the speculative-decoding multi-token
-    cached decode — attention-only (SSM recurrent state has no positional
-    rollback)."""
+    """mode: 'train' | 'prefill' | 'decode' | 'extend'. Returns
+    (x, new_cache, aux). ``length``: optional (B,) counts — for 'prefill'
+    the valid-token count of right-padded rows (bucketed serving
+    prefill); for 'extend' the per-row advance (rows move by length[b]
+    <= T tokens, None = all rows advance by T). 'extend' is the masked
+    multi-token cached decode shared by speculative verify, chunked
+    prefill and the engine's fused mixed step — attention-only (SSM
+    recurrent state has no positional rollback)."""
     spec = block_spec(cfg)
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
@@ -163,16 +165,18 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
                 y, nc = L.prefill_into_cache(sp["attn"], h, cfg,
                                              cache[f"sub{i}"],
                                              length=length)
-            elif mode == "verify":
-                y, nc = L.verify_into_cache(sp["attn"], h, cfg,
-                                            cache[f"sub{i}"])
+            elif mode == "extend":
+                y, nc = L.extend_into_cache(sp["attn"], h, cfg,
+                                            cache[f"sub{i}"],
+                                            lengths=length)
             else:
                 y, nc = L.attention_block(sp["attn"], h, cfg,
                                           cache=cache[f"sub{i}"])
         else:
-            if mode == "verify":
+            if mode == "extend":
                 raise NotImplementedError(
-                    "speculative verify requires attention-backed caches; "
+                    "multi-token cached extend (speculative verify / "
+                    "chunked prefill) requires attention-backed caches; "
                     f"family {cfg.family!r} has SSM mixers whose recurrent "
                     "state cannot be rolled back per position")
             if mode == "train":
@@ -310,16 +314,33 @@ def decode_step(params, cfg: ModelConfig, token, cache):
     return logits_from(params, cfg, x), new_cache
 
 
+def extend_step(params, cfg: ModelConfig, tokens, cache, lengths=None,
+                last_only=False):
+    """Masked multi-token cached forward at per-row offsets — the unified
+    extend path behind speculative verify, chunked prefill, and the
+    serving engine's fused mixed step. tokens: (B, T) ids; ``lengths``:
+    optional (B,) per-row advance (row b consumes tokens[b, :lengths[b]]
+    and its cache step moves by lengths[b]; 0 = row untouched; None = all
+    rows advance by T). Returns (logits, new_cache) — logits (B, T, V)
+    where ``logits[:, i]`` is the distribution after consuming
+    tokens[:, :i+1], or (B, 1, V) at each row's last valid position when
+    ``last_only`` (saves the (T-1)·V unembed when only the next-token
+    distribution is needed, e.g. a prefill chunk)."""
+    x = embed_inputs(params, cfg, tokens)
+    x, new_cache, _ = _scan_blocks(params, x, cfg, mode="extend",
+                                   cache=cache, length=lengths)
+    if last_only:
+        x = last_valid(x, lengths)
+    return logits_from(params, cfg, x), new_cache
+
+
 def verify_step(params, cfg: ModelConfig, tokens, cache):
     """Speculative-decoding verify: score T tokens per row in one masked
     multi-token forward at each row's own cache offset. tokens: (B, T)
     ids — [pending token, draft proposals]. Returns (logits (B, T, V),
     new_cache with step += T); ``logits[:, i]`` is the target
     distribution after consuming tokens[:, :i+1]."""
-    x = embed_inputs(params, cfg, tokens)
-    x, new_cache, _ = _scan_blocks(params, x, cfg, mode="verify",
-                                   cache=cache)
-    return logits_from(params, cfg, x), new_cache
+    return extend_step(params, cfg, tokens, cache)
 
 
 def set_cache_steps(cache, steps):

@@ -1,46 +1,50 @@
-"""Batched serving engine v2: bucketed prefill + fused on-device decode,
-with optional speculative decoding (fused draft–verify step).
+"""Batched serving engine v3: continuous batching — bucketed prefill,
+fused on-device decode, chunked prefill fused into the decode step,
+shared-prefix KV reuse, and optional speculative decoding.
 
 A fixed number of batch *slots* share one batched KV/SSM cache; each slot
 runs an independent sequence at its own per-row ``step`` offset. When a
-sequence finishes, the next queued request is prefilled straight into the
-free slot and the decode batch never drains — the serving analogue the
-paper's Fig. 3 measures (stable per-token latency under a stream of
+sequence finishes, the next queued request is admitted into the free slot
+and the decode batch never drains — the serving analogue the paper's
+Fig. 3 measures (stable per-token latency under a stream of
 differently-sized requests). See ``docs/serving.md`` for the lifecycle
 diagram and invariants.
 
-What v2 changes over the first engine:
+What v3 changes over v2 (PR 1/3):
 
-* **Bucketed prefill** — prompts are right-padded to power-of-two length
-  buckets, so the prefill jit cache holds O(log cache_len) entries instead
-  of one per distinct prompt length. Causality makes right padding free:
-  valid positions attend only to valid positions, the model masks padded
-  cache slots (``pos = -1``) and sets the per-row ``step`` to the true
-  length (``batch["length"]``).
-* **Slot-direct prefill** — the jitted prefill slices slot ``b`` out of the
-  batched cache, runs the model, samples the first token, and writes the
-  slot back with ``dynamic_update_slice`` — all inside one XLA program. No
-  host-side batch=1 cache materialisation, no tree-mapped copy.
-* **Fused decode step** — ``decode_step -> logits -> sample -> bookkeeping``
-  is one jitted, cache-donating program. ``remaining``/``eos``/``active``
-  live on device; steady-state decode performs **zero** host<->device token
-  transfers. Every ``sync_every`` steps the host harvests each occupied
-  slot's new token column (sliced on device, one bounded transfer per
-  slot) and detects finishes by replaying the device's stop conditions.
-* **Speculative decoding** (``Engine(draft=..., spec_gamma=...)``) — each
-  decode step becomes one fused draft–verify program: the draft proposes
-  γ tokens autoregressively, the target scores all γ+1 positions in a
-  single masked multi-token forward (``Model.verify_step``), and
-  rejection sampling accepts a prefix + resamples the first rejection on
-  device. Both caches roll back to the accepted depth via the per-row
-  ``step`` offsets (``Model.rollback``). The step emits a *variable*
-  number of tokens but stays static-shaped: a fixed (B, γ+1) token block
-  plus a per-slot accepted-count, so the zero-host-sync invariant and the
-  ``_poll``/``_harvest`` contract are unchanged.
+* **Fused mixed step (Sarathi-style chunked prefill)** — with
+  ``prefill_chunk > 0``, a long prompt no longer monopolises the engine:
+  every step is a single jitted, cache-donating program that decodes all
+  active slots AND advances at most ``prefill_chunk`` tokens of one
+  admitting request, via ``Model.extend_into_cache`` (per-row lengths:
+  decode rows advance by 1, the admitting row by the chunk, idle rows by
+  0). Decode never stalls behind prefill, so tail inter-token latency
+  stays flat when long prompts arrive — the knob trades first-token
+  latency of the admitting request for ITL of everyone else.
+* **Shared-prefix KV reuse** — ``prefix_cache_tokens > 0`` keeps a
+  host-side trie of recently admitted prompt prefixes (chunk-aligned;
+  LRU-evicted under a token budget) whose device KV slices are
+  materialised into a fresh slot with one on-device
+  ``dynamic_update_slice`` copy; chunked prefill resumes after the reused
+  prefix. Shared system prompts and few-shot headers cost one HBM copy
+  instead of recomputation (``serving/prefix_cache.py``).
+* **Percentile latency stats** — ``latency_stats`` now reports
+  p50/p95/p99 TTFT and inter-token latency over per-request samples, the
+  tail metrics ``benchmarks/bench_load.py`` tracks under Poisson load.
+
+Retained from v2 (see the sections below and docs/serving.md): bucketed
+slot-direct prefill (the ``prefill_chunk=0`` legacy/stall path, still
+used for requests the extend path cannot serve), the fused donated
+decode step with zero steady-state host<->device traffic, the bounded
+``_poll``/``_harvest`` trace contract, and the fused draft–verify
+speculative step (``draft=``/``spec_gamma=``; chunked admission then
+runs as its own extend program right before the spec step, advancing
+target and draft caches in lockstep with the draft one position behind).
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -50,6 +54,7 @@ import numpy as np
 from jax import lax
 
 from repro.models.model import Model
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, Response
 from repro.serving.sampler import Sampler
 
@@ -64,13 +69,26 @@ def bucket_length(n: int, cap: int, lo: int = MIN_BUCKET) -> int:
     return min(b, cap)
 
 
+@dataclasses.dataclass
+class _Admission:
+    """One in-flight chunked admission: the prompt enters the cache
+    ``prefill_chunk`` tokens per fused step, starting at ``base`` (> 0
+    when a prefix-cache hit pre-populated the slot)."""
+    req: Request
+    slot: int
+    base: int
+    length: int
+
+
 class Engine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  cache_len: int = 512, sampler: Optional[Sampler] = None,
                  seed: int = 0, sync_every: int = 8,
                  donate: Optional[bool] = None,
                  kv_cache_dtype: str = "",
-                 draft: Any = None, spec_gamma: int = 0):
+                 draft: Any = None, spec_gamma: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache_tokens: Optional[int] = None):
         """``params`` may be a quantized tree (``quant.quantize_params``):
         projections route through the fused dequantize-matmul inside the
         same jitted prefill/decode programs, nothing else changes.
@@ -87,7 +105,22 @@ class Engine:
         ``cfg.draft``. ``spec_gamma`` is the number of draft tokens
         proposed per step (0 follows ``cfg.spec_gamma``, defaulting to 4
         once a draft is configured). Requires attention-backed caches
-        (``Model.supports_speculative``) on both models."""
+        (``Model.supports_speculative``) on both models.
+
+        ``prefill_chunk`` enables continuous batching (the fused mixed
+        step): each engine step decodes every active slot and advances at
+        most this many prompt tokens of one admitting request. None
+        follows ``cfg.prefill_chunk``; 0 disables (monolithic slot-direct
+        prefill, which stalls decode for the whole prompt). Requires the
+        extend path (attention-backed, MoE-free stacks — expert capacity
+        is shared across a batch row, so masked extend rows would steal
+        it); other models and requests carrying frontend embeddings fall
+        back to the monolithic path automatically.
+
+        ``prefix_cache_tokens`` (with chunked prefill, non-speculative)
+        caps the shared-prefix KV reuse budget in tokens; None follows
+        ``cfg.prefix_cache_tokens``, 0 disables.
+        """
         if kv_cache_dtype not in ("", "int8"):
             raise ValueError(f"unsupported kv_cache_dtype "
                              f"{kv_cache_dtype!r} (use '' or 'int8')")
@@ -124,6 +157,9 @@ class Engine:
         self.requests: Dict[int, Request] = {}
         self.responses: Dict[int, Response] = {}
         self.step_times: List[float] = []
+        self.step_kinds: List[str] = []   # "plain"|"mixed"|"admit"|"spec",
+        # aligned with step_times — lets benchmarks separate steady
+        # decode from steps that also carried admission work
 
         # device-resident decode state (never read back in steady state)
         self.key = jax.random.PRNGKey(seed)
@@ -136,12 +172,22 @@ class Engine:
         self.cache = model.make_cache(max_batch, cache_len)
 
         # per-step sampled-token trace: device arrays, harvested lazily.
-        # Plain decode appends (B,) token vectors; speculative decode
-        # appends ((B, gamma+1) block, (B,) emit-count) pairs.
+        # Plain decode appends (B,) token vectors; mixed/spec/admission
+        # steps append ((B, W) block, (B,) emit-count) pairs (W = 1 for
+        # mixed and admission entries, gamma+1 for speculative entries).
         self._trace: List[Any] = []
         self._trace_base = 0                      # global step of _trace[0]
         self._slot_start = [0] * max_batch        # global step per slot
         self._steps = 0
+        self._step_wall: List[float] = []         # per-step wall clock (for
+        # inter-token gaps; assigned at burst sync, padded for raw
+        # step(), pruned with the trace — _step_wall_base is the global
+        # step index of entry 0)
+        self._step_wall_base = 0
+        self._itl: Dict[int, List[float]] = {}    # per-request ITL samples
+        self._await_first: List[Request] = []     # chunked admissions whose
+        # first token exists on device but has no host timestamp yet
+        self._drop_compile_step = True            # step_times[0] is compile
 
         # --- speculative decoding ------------------------------------- #
         draft_src = draft if draft is not None else (cfg.draft or None)
@@ -185,9 +231,32 @@ class Engine:
             self.sync_every = max(1, self.sync_every
                                   // (self.spec_gamma + 1))
 
+        # --- continuous batching (chunked prefill + prefix reuse) ------ #
+        chunk = cfg.prefill_chunk if prefill_chunk is None \
+            else prefill_chunk
+        self._extend_ok = model.supports_extend and cfg.moe is None
+        if self.spec_gamma and self._draft_model is not None:
+            self._extend_ok = self._extend_ok \
+                and self._draft_model.supports_extend
+        self.prefill_chunk = min(int(chunk), self.kv_len) \
+            if (chunk and self._extend_ok) else 0
+        pct = cfg.prefix_cache_tokens if prefix_cache_tokens is None \
+            else prefix_cache_tokens
+        # prefix reuse stores target-cache slices only; in spec mode the
+        # draft cache would still need recomputation, so it is disabled
+        self.prefix_cache: Optional[PrefixCache] = \
+            PrefixCache(pct, self.prefill_chunk) \
+            if (pct and self.prefill_chunk and not self.spec_gamma) \
+            else None
+        self._admit: Optional[_Admission] = None
+        self._chunked_admissions = 0
+
         self._step_fn = self._build_spec_step() if self.spec_gamma \
             else self._build_step()
         self._prefill_jits: Dict[Tuple, Any] = {}
+        self._mixed_fn = None          # fused decode+chunk, built lazily
+        self._admit_chunk_fn = None    # spec-mode chunk program, lazy
+        self._slot_jits: Dict[Tuple, Any] = {}   # reset/materialize/extract
 
     # ------------------------------------------------------------ #
     # jitted programs
@@ -208,6 +277,114 @@ class Engine:
 
         donate = (1, 2, 3, 4) if self._donate else ()
         return jax.jit(step, donate_argnums=donate)
+
+    @staticmethod
+    def _slot_extend(model, params, cache, slot, chunk, n, last_only=True):
+        """Slot-direct chunk extend inside a jitted program: slice the
+        admitting slot out of the batched cache (batch axis 1 under the
+        block axis), advance it by ``n`` of the chunk's C tokens at
+        batch 1, and write it back with ``dynamic_update_slice`` — the
+        chunk costs C tokens at batch 1, NOT B·C. (An earlier design ran
+        a (B, C) matrix through one extend; every decode row then paid
+        the chunk's sequence length through all matmuls and tail ITL got
+        *worse* than the stall baseline it was meant to fix.)"""
+        cache1 = jax.tree.map(
+            lambda t: lax.dynamic_slice_in_dim(t, slot, 1, axis=1), cache)
+        logits, cache1 = model.extend_into_cache(
+            params, chunk[None, :], cache1, n[None], last_only=last_only)
+        cache = jax.tree.map(
+            lambda full, u: lax.dynamic_update_slice_in_dim(
+                full, u, slot, axis=1), cache, cache1)
+        return logits, cache
+
+    def _build_mixed_step(self):
+        """One fused decode + prefill-chunk program (static shapes):
+
+        1. all active slots decode one token (a masked T=1
+           ``extend_into_cache`` — bit-identical per row to the plain
+           step, but the admitting and idle rows advance by 0 so nothing
+           is speculated into a half-filled slot);
+        2. the admitting slot is sliced out, advanced by up to
+           ``prefill_chunk`` prompt tokens at batch 1, and written back
+           (``_slot_extend``);
+        3. one sampler call over each row's last-valid logits gives the
+           decode rows their next token and — when the chunk completes
+           the prompt (``a_last``) — the admitting row its *first*
+           token, arming it on device (tokens/remaining/active/eos rows
+           written in-program, no host round-trip).
+
+        Emitted tokens flow through the same trace/poll contract as
+        plain decode (W = 1 blocks with a per-row emit count)."""
+        model, sampler = self.model, self.sampler
+
+        def mixed(params, cache, tokens, remaining, active, eos, key,
+                  chunk, a_slot, a_len, a_last, a_rem, a_eos):
+            B = tokens.shape[0]
+            bidx = jnp.arange(B)
+            is_admit = bidx == a_slot
+            dec_logits, cache = model.extend_into_cache(
+                params, tokens, cache, active.astype(jnp.int32),
+                last_only=True)
+            ch_logits, cache = self._slot_extend(
+                model, params, cache, a_slot, chunk, a_len)
+            logits = jnp.where(is_admit[:, None], ch_logits[0, 0][None],
+                               dec_logits[:, 0])
+            key, sk = jax.random.split(key)
+            nxt = sampler(sk, logits.astype(jnp.float32))       # (B,)
+            arm = is_admit & a_last
+            emit = active | arm
+            done = emit & ((jnp.where(arm, a_rem, remaining) <= 1)
+                           | (nxt == jnp.where(arm, a_eos, eos)))
+            new_active = emit & ~done
+            new_remaining = jnp.where(
+                arm, a_rem - 1,
+                jnp.where(active, remaining - 1, remaining))
+            new_eos = jnp.where(arm, a_eos, eos)
+            new_tokens = jnp.where(emit, nxt, tokens[:, 0])
+            return (new_tokens[:, None], nxt[:, None],
+                    emit.astype(jnp.int32), cache, new_remaining,
+                    new_active, new_eos, key)
+
+        donate = (1, 2, 3, 4, 5) if self._donate else ()
+        return jax.jit(mixed, donate_argnums=donate)
+
+    def _build_admit_chunk(self):
+        """Spec-mode chunk program: advance one admitting request by up to
+        C prompt tokens in the target cache and (one position behind) in
+        the draft cache — both slot-direct at batch 1 — arming the slot
+        on completion. Dispatched right before the fused spec step, so
+        admission never stalls speculative decode of the other slots.
+        The draft consumes the same chunk capped at L-1 total (its cache
+        lags the committed depth by one: the last prompt token becomes
+        ``prev`` and is re-consumed by the first draft verify window)."""
+        model, draft = self.model, self._draft_model
+        sampler = self.sampler
+
+        def admit(params, dparams, cache, dcache, tokens, prev, remaining,
+                  active, eos, key, chunk, a_slot, a_len, d_len, a_last,
+                  a_rem, a_eos, a_prev):
+            B = tokens.shape[0]
+            bidx = jnp.arange(B)
+            is_admit = bidx == a_slot
+            logits, cache = self._slot_extend(
+                model, params, cache, a_slot, chunk, a_len)
+            _, dcache = self._slot_extend(
+                draft, dparams, dcache, a_slot, chunk, d_len)
+            key, sk = jax.random.split(key)
+            nxt = sampler(sk, logits[:, 0].astype(jnp.float32))  # (1,)
+            arm = is_admit & a_last
+            done = arm & ((a_rem <= 1) | (nxt[0] == a_eos))
+            new_active = active | (arm & ~done)
+            new_remaining = jnp.where(arm, a_rem - 1, remaining)
+            new_eos = jnp.where(arm, a_eos, eos)
+            new_tokens = jnp.where(arm, nxt[0], tokens[:, 0])
+            new_prev = jnp.where(arm, a_prev, prev[:, 0])
+            return (new_tokens[:, None], new_prev[:, None],
+                    new_tokens[:, None], arm.astype(jnp.int32), cache,
+                    dcache, new_remaining, new_active, new_eos, key)
+
+        donate = (2, 3, 4, 5, 6, 7, 8) if self._donate else ()
+        return jax.jit(admit, donate_argnums=donate)
 
     def _build_spec_step(self):
         """One fused draft–verify–accept program (static shapes):
@@ -237,6 +414,13 @@ class Engine:
         C+1..C+gamma-1, and the last proposal is *never* written — its
         position is re-consumed by the next step's verify window, so full
         acceptance leaves no hole.
+
+        Every forward is an ``extend_into_cache`` masked by ``active``:
+        inactive rows neither write keys nor advance their ``step``.
+        Active rows are bit-identical either way (attention is per-row),
+        but an *admitting* slot — mid-chunked-prefill while its
+        neighbours keep speculating — must not have garbage speculated
+        into the row between its chunks.
         """
         model, sampler = self.model, self.sampler
         draft, gamma = self._draft_model, self.spec_gamma
@@ -244,10 +428,12 @@ class Engine:
         def spec(params, dparams, cache, dcache, tokens, prev, remaining,
                  active, eos, key):
             B = tokens.shape[0]
+            act1 = active.astype(jnp.int32)
             # 1) draft proposals (and their full logit rows, for the
             #    stochastic accept ratio p/q)
             window = jnp.concatenate([prev, tokens], axis=1)   # (B, 2)
-            dl, dcache = draft.verify_step(dparams, window, dcache)
+            dl, dcache = draft.extend_into_cache(dparams, window, dcache,
+                                                 2 * act1)
             d_toks, d_logits = [], []
             cur_logits = dl[:, -1].astype(jnp.float32)
             for i in range(gamma):
@@ -256,8 +442,8 @@ class Engine:
                 d_toks.append(t)
                 d_logits.append(cur_logits)
                 if i + 1 < gamma:
-                    dl, dcache = draft.decode_step(dparams, t[:, None],
-                                                   dcache)
+                    dl, dcache = draft.extend_into_cache(
+                        dparams, t[:, None], dcache, act1)
                     cur_logits = dl[:, -1].astype(jnp.float32)
             draft_tokens = jnp.stack(d_toks, axis=1)          # (B, g)
             draft_logits = jnp.stack(d_logits, axis=1)        # (B, g, V)
@@ -265,7 +451,8 @@ class Engine:
             # 2) one masked multi-token target forward over
             #    [pending, draft_0..draft_{g-1}]
             seq = jnp.concatenate([tokens, draft_tokens], axis=1)
-            t_logits, cache = model.verify_step(params, seq, cache)
+            t_logits, cache = model.extend_into_cache(
+                params, seq, cache, (gamma + 1) * act1)
 
             # 3) accept prefix + resample first rejection (on device)
             key, sk = jax.random.split(key)
@@ -275,13 +462,17 @@ class Engine:
             n_emit = jnp.where(active, n_acc + 1, 0)          # (B,)
 
             # 4) per-row rollback to the accepted depth. verify advanced
-            #    the target by gamma+1; the committed depth is
+            #    active targets by gamma+1; the committed depth is
             #    old_step + 1 + n_acc (pending + accepted drafts), i.e.
             #    current - gamma + n_acc. The draft sits at committed-1.
+            #    Inactive rows did not move and must not be rolled.
             steps_now = model.cache_steps(cache)              # (B,)
-            committed = steps_now - gamma + n_acc
+            committed = jnp.where(active, steps_now - gamma + n_acc,
+                                  steps_now)
             cache = model.rollback(cache, committed)
-            dcache = draft.rollback(dcache, committed - 1)
+            dcache = draft.rollback(
+                dcache, jnp.where(active, committed - 1,
+                                  draft.cache_steps(dcache)))
 
             # 5) bookkeeping (same stop conditions as the plain step,
             #    with a variable emit count)
@@ -339,6 +530,89 @@ class Engine:
         return fn
 
     # ------------------------------------------------------------ #
+    # slot programs (chunked admission + prefix reuse)
+    # ------------------------------------------------------------ #
+    def _walk_attn(self, node, fn):
+        """Apply ``fn`` to every attention sub-cache dict (identified by
+        its ``pos`` row; chunked admission is gated to attention-only
+        stacks, so this visits every leaf-bearing node)."""
+        if isinstance(node, dict) and "pos" in node:
+            return fn(node)
+        return {k: self._walk_attn(v, fn) for k, v in node.items()}
+
+    def _get_slot_fn(self, kind: str, P=0):
+        """reset / materialize / extract programs for one slot row, jitted
+        per (kind, length). Lengths are bucketed chunk multiples, so the
+        jit cache stays small: extract is keyed on the stored prefix
+        length, materialize on the hit length Q alone — a partial hit of
+        a longer stored entry is sliced to Q eagerly in
+        ``_start_chunked`` before reaching the program (exact by
+        causality: K/V at p depends only on tokens <= p)."""
+        jkey = (kind, P)
+        if jkey in self._slot_jits:
+            return self._slot_jits[jkey]
+
+        def pos_row(node, b, upto):
+            nb, _, S = node["pos"].shape
+            ar = jnp.arange(S, dtype=jnp.int32)
+            row = jnp.where(ar < upto, ar, -1)[None, None, :]
+            out = dict(node)
+            out["pos"] = lax.dynamic_update_slice(
+                node["pos"], jnp.broadcast_to(row, (nb, 1, S)), (0, b, 0))
+            out["step"] = lax.dynamic_update_slice(
+                node["step"], jnp.full((nb, 1), upto, jnp.int32), (0, b))
+            return out
+
+        if kind == "reset":
+            def fn(cache, b):
+                # erase slot b: every position empty, depth 0 — a recycled
+                # slot carries no stale keys from the previous occupant
+                return self._walk_attn(cache, lambda n: pos_row(n, b, 0))
+        elif kind == "materialize":
+            def fn(cache, kv, b):
+                # walk cache and entry trees in lockstep: write the P
+                # stored K/V (+scale) positions, then stamp pos/step for
+                # a slot whose first P positions are now populated
+                def walk(c, e):
+                    if isinstance(c, dict) and "pos" in c:
+                        out = dict(c)
+                        for k2, part in e.items():
+                            idx = (0, b, 0) + (0,) * (c[k2].ndim - 3)
+                            out[k2] = lax.dynamic_update_slice(
+                                c[k2], part, idx)
+                        return pos_row(out, b, P)
+                    return {k2: walk(v2, e[k2]) for k2, v2 in c.items()}
+                return walk(cache, kv)
+        elif kind == "extract":
+            def fn(cache, b):
+                def ext(node):
+                    out = {}
+                    for k2 in ("k", "v", "k_scale", "v_scale"):
+                        if k2 in node:
+                            sl = lax.dynamic_slice_in_dim(node[k2], b, 1,
+                                                          axis=1)
+                            out[k2] = lax.slice_in_dim(sl, 0, P, axis=2)
+                    return out
+                return self._walk_attn(cache, ext)
+        else:
+            raise ValueError(kind)
+
+        donate = (0,) if (self._donate and kind != "extract") else ()
+        jitted = jax.jit(fn, donate_argnums=donate)
+        self._slot_jits[jkey] = jitted
+        return jitted
+
+    def _get_mixed(self):
+        if self._mixed_fn is None:
+            self._mixed_fn = self._build_mixed_step()
+        return self._mixed_fn
+
+    def _get_admit_chunk(self):
+        if self._admit_chunk_fn is None:
+            self._admit_chunk_fn = self._build_admit_chunk()
+        return self._admit_chunk_fn
+
+    # ------------------------------------------------------------ #
     # scheduling
     # ------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
@@ -348,100 +622,266 @@ class Engine:
         self.responses[req.uid] = Response(uid=req.uid,
                                            prompt_len=len(req.prompt))
 
-    def _fill_free_slots(self) -> None:
+    def _free_slot(self) -> Optional[int]:
+        admitting = self._admit.slot if self._admit is not None else -1
         for b in range(self.max_batch):
-            if self.slots[b] is not None or not self.queue:
+            if self.slots[b] is None and b != admitting:
+                return b
+        return None
+
+    def _chunk_eligible(self, req: Request) -> bool:
+        """Whether this request can be admitted through the fused
+        chunked-prefill path. Fallbacks (monolithic slot-direct prefill):
+        no extend support (ssm/hybrid/moe/encdec), frontend embeddings
+        (the chunk matrix carries token ids only), and prompts longer
+        than the KV ring (exact-length ring prefill rewrites the row)."""
+        return (self.prefill_chunk > 0 and self._extend_ok
+                and req.embeddings is None
+                and len(req.prompt) <= self.kv_len - self._prefix)
+
+    def _fill_free_slots(self) -> None:
+        """Admission scheduler (FIFO): chunk-eligible requests start a
+        chunked admission (at most one in flight — 'advance one admitting
+        request per step'); everything else takes the legacy monolithic
+        prefill immediately."""
+        while self.queue:
+            b = self._free_slot()
+            if b is None:
+                return
+            req = self.queue[0]
+            if self._chunk_eligible(req):
+                if self._admit is not None:
+                    return            # one chunked admission at a time
+                self.queue.popleft()
+                self._start_chunked(req, b)
                 continue
-            req = self.queue.popleft()
-            req.started_s = time.perf_counter()
-            L = len(req.prompt)
-            # prompts longer than the KV ring (sliding-window caches) fall
-            # back to exact-length ring prefill, which rewrites the full row
-            cap = self.kv_len - self._prefix
-            masked = L <= cap
-            Lb = bucket_length(L, cap) if (masked and self._pad_buckets) \
-                else L
-            toks = np.zeros((1, Lb), np.int32)
-            toks[0, :L] = np.asarray(req.prompt, np.int32)
-            emb = None
-            if req.embeddings is not None:
-                emb = jnp.asarray(req.embeddings)[None]
-            self.key, sk = jax.random.split(self.key)
-            fn = self._get_prefill(Lb, masked, emb is not None)
-            first, self.cache = fn(self.params, jnp.asarray(toks),
-                                   jnp.asarray([L], jnp.int32), emb,
-                                   jnp.int32(b), self.cache, sk)
-            # the only per-request host sync: the first sampled token
-            tok = int(first[0])
-            req.first_token_s = time.perf_counter()
-            resp = self.responses[req.uid]
-            resp.tokens.append(tok)
-            if req.max_new_tokens <= 1 or (req.eos_id is not None
-                                           and tok == req.eos_id):
-                resp.finished = True
-                resp.finish_reason = "eos" if (
-                    req.eos_id is not None and tok == req.eos_id) \
-                    else "length"
-                req.finished_s = time.perf_counter()
-                continue  # slot stays free
+            self.queue.popleft()
+            self._prefill_direct(req, b)
+
+    def _start_chunked(self, req: Request, b: int) -> None:
+        """Begin a chunked admission: probe the prefix cache, then either
+        materialise the hit into slot ``b`` (one on-device
+        dynamic_update_slice copy) or reset the slot row; the fused mixed
+        step takes it from there, ``prefill_chunk`` tokens per step."""
+        req.started_s = time.perf_counter()
+        base, kv, ent_len = 0, None, 0
+        if self.prefix_cache is not None:
+            kv, ent_len, base = self.prefix_cache.lookup(req.prompt)
+        bb = jnp.int32(b)
+        if kv is not None:
+            if base < ent_len:
+                # partial hit: take the first Q positions of the longer
+                # stored entry eagerly, so the materialize program is
+                # keyed on the hit length alone
+                kv = jax.tree.map(lambda t: t[:, :, :base], kv)
+            self.cache = self._get_slot_fn("materialize", base)(
+                self.cache, kv, bb)
+        else:
+            self.cache = self._get_slot_fn("reset")(self.cache, bb)
             if self.spec_gamma:
-                # the draft needs the prompt context too: same bucketed
-                # prefill into the draft's own batched cache, but only up
-                # to L-1 tokens — the draft cache lags the committed
-                # depth by one (the last prompt token becomes ``prev``
-                # and is re-consumed by the first draft verify window).
-                # Its sampled token is discarded.
-                self.key, sk = jax.random.split(self.key)
-                if masked:
-                    dtoks, dlen, dLb = toks, L - 1, Lb
-                else:  # exact-length ring fallback (L-1 >= kv ring)
-                    dtoks, dlen, dLb = toks[:, :L - 1], L - 1, L - 1
-                dfn = self._get_prefill(dLb, masked, emb is not None,
-                                        for_draft=True)
-                _, self.draft_cache = dfn(
-                    self._draft_params, jnp.asarray(dtoks),
-                    jnp.asarray([dlen], jnp.int32), emb, jnp.int32(b),
-                    self.draft_cache, sk)
-                self.prev = self.prev.at[b, 0].set(int(req.prompt[-1]))
-            self.tokens = self.tokens.at[b, 0].set(tok)
-            self.remaining = self.remaining.at[b].set(
-                req.max_new_tokens - 1)
-            self.active = self.active.at[b].set(True)
-            self.eos = self.eos.at[b].set(
-                -1 if req.eos_id is None else int(req.eos_id))
-            self.slots[b] = req
-            self._slot_start[b] = self._steps
+                self.draft_cache = self._get_slot_fn("reset")(
+                    self.draft_cache, bb)
+        self._admit = _Admission(req=req, slot=b, base=base,
+                                 length=len(req.prompt))
+
+    def _prefill_direct(self, req: Request, b: int) -> None:
+        """Legacy monolithic admission: one whole-prompt slot-direct
+        bucketed prefill (stalls decode for the duration — the
+        ``prefill_chunk=0`` baseline, and the fallback for requests the
+        extend path cannot serve)."""
+        req.started_s = time.perf_counter()
+        L = len(req.prompt)
+        # prompts longer than the KV ring (sliding-window caches) fall
+        # back to exact-length ring prefill, which rewrites the full row
+        cap = self.kv_len - self._prefix
+        masked = L <= cap
+        Lb = bucket_length(L, cap) if (masked and self._pad_buckets) \
+            else L
+        toks = np.zeros((1, Lb), np.int32)
+        toks[0, :L] = np.asarray(req.prompt, np.int32)
+        emb = None
+        if req.embeddings is not None:
+            emb = jnp.asarray(req.embeddings)[None]
+        self.key, sk = jax.random.split(self.key)
+        fn = self._get_prefill(Lb, masked, emb is not None)
+        first, self.cache = fn(self.params, jnp.asarray(toks),
+                               jnp.asarray([L], jnp.int32), emb,
+                               jnp.int32(b), self.cache, sk)
+        # the only per-request host sync: the first sampled token
+        tok = int(first[0])
+        req.first_token_s = time.perf_counter()
+        resp = self.responses[req.uid]
+        resp.tokens.append(tok)
+        if req.max_new_tokens <= 1 or (req.eos_id is not None
+                                       and tok == req.eos_id):
+            resp.finished = True
+            resp.finish_reason = "eos" if (
+                req.eos_id is not None and tok == req.eos_id) \
+                else "length"
+            req.finished_s = time.perf_counter()
+            return  # slot stays free
+        if self.spec_gamma:
+            # the draft needs the prompt context too: same bucketed
+            # prefill into the draft's own batched cache, but only up
+            # to L-1 tokens — the draft cache lags the committed
+            # depth by one (the last prompt token becomes ``prev``
+            # and is re-consumed by the first draft verify window).
+            # Its sampled token is discarded.
+            self.key, sk = jax.random.split(self.key)
+            if masked:
+                dtoks, dlen, dLb = toks, L - 1, Lb
+            else:  # exact-length ring fallback (L-1 >= kv ring)
+                dtoks, dlen, dLb = toks[:, :L - 1], L - 1, L - 1
+            dfn = self._get_prefill(dLb, masked, emb is not None,
+                                    for_draft=True)
+            _, self.draft_cache = dfn(
+                self._draft_params, jnp.asarray(dtoks),
+                jnp.asarray([dlen], jnp.int32), emb, jnp.int32(b),
+                self.draft_cache, sk)
+            self.prev = self.prev.at[b, 0].set(int(req.prompt[-1]))
+        self.tokens = self.tokens.at[b, 0].set(tok)
+        self.remaining = self.remaining.at[b].set(
+            req.max_new_tokens - 1)
+        self.active = self.active.at[b].set(True)
+        self.eos = self.eos.at[b].set(
+            -1 if req.eos_id is None else int(req.eos_id))
+        self.slots[b] = req
+        self._slot_start[b] = self._steps
 
     # ------------------------------------------------------------ #
     # decode
     # ------------------------------------------------------------ #
     def step(self) -> None:
-        """One batched decode step (plain or speculative). Pure device
-        work: tokens, finish flags, and counters all stay on device;
-        nothing is transferred."""
+        """One engine step (plain, mixed, or speculative — plus, in spec
+        mode, the admission chunk program). Pure device work: tokens,
+        finish flags, and counters all stay on device; nothing is
+        transferred."""
         t0 = time.perf_counter()
+        n0 = self._steps
+        if self._admit is None and self.prefill_chunk and self.queue:
+            # pipeline the next admission mid-burst (chunk-eligible
+            # head-of-queue only; legacy prefills wait for the burst
+            # boundary so they cannot stall the hot loop invisibly)
+            b = self._free_slot()
+            if b is not None and self._chunk_eligible(self.queue[0]):
+                self._start_chunked(self.queue.popleft(), b)
+        adm = self._admit
         if self.spec_gamma:
-            (self.tokens, self.prev, block, n_emit, self.cache,
-             self.draft_cache, self.remaining, self.active,
-             self.key) = self._step_fn(
-                self.params, self._draft_params, self.cache,
-                self.draft_cache, self.tokens, self.prev, self.remaining,
-                self.active, self.eos, self.key)
-            self._trace.append((block, n_emit))
+            if adm is not None:
+                self._step_admit_chunk(adm)
+                if self.active_slots:
+                    self._step_spec()
+            else:
+                self._step_spec()
+        elif adm is not None:
+            self._step_mixed(adm)
         else:
-            (self.tokens, self.cache, self.remaining, self.active,
-             self.key) = self._step_fn(self.params, self.cache,
-                                       self.tokens, self.remaining,
-                                       self.active, self.eos, self.key)
-            self._trace.append(self.tokens[:, 0])
+            self._step_plain()
+        made = self._steps - n0
+        dt = (time.perf_counter() - t0) / max(made, 1)
+        for _ in range(made):
+            self.step_times.append(dt)
+
+    def _step_plain(self) -> None:
+        (self.tokens, self.cache, self.remaining, self.active,
+         self.key) = self._step_fn(self.params, self.cache,
+                                   self.tokens, self.remaining,
+                                   self.active, self.eos, self.key)
+        self._trace.append(self.tokens[:, 0])
+        self.step_kinds.append("plain")
         self._steps += 1
-        self.step_times.append(time.perf_counter() - t0)
+
+    def _step_spec(self) -> None:
+        (self.tokens, self.prev, block, n_emit, self.cache,
+         self.draft_cache, self.remaining, self.active,
+         self.key) = self._step_fn(
+            self.params, self._draft_params, self.cache,
+            self.draft_cache, self.tokens, self.prev, self.remaining,
+            self.active, self.eos, self.key)
+        self._trace.append((block, n_emit))
+        self.step_kinds.append("spec")
+        self._steps += 1
+
+    def _chunk_args(self, adm: _Admission) -> Tuple[np.ndarray, int, bool]:
+        C = self.prefill_chunk
+        n = min(C, adm.length - adm.base)
+        chunk = np.zeros((C,), np.int32)
+        chunk[:n] = np.asarray(adm.req.prompt[adm.base:adm.base + n],
+                               np.int32)
+        return chunk, n, adm.base + n >= adm.length
+
+    def _step_mixed(self, adm: _Admission) -> None:
+        """Dispatch the fused decode + prefill-chunk program."""
+        chunk, n, last = self._chunk_args(adm)
+        req = adm.req
+        (self.tokens, block, n_emit, self.cache, self.remaining,
+         self.active, self.eos, self.key) = self._get_mixed()(
+            self.params, self.cache, self.tokens, self.remaining,
+            self.active, self.eos, self.key, jnp.asarray(chunk),
+            jnp.int32(adm.slot), jnp.int32(n), jnp.asarray(bool(last)),
+            jnp.int32(req.max_new_tokens),
+            jnp.int32(-1 if req.eos_id is None else int(req.eos_id)))
+        self._trace.append((block, n_emit))
+        self.step_kinds.append("mixed")
+        adm.base += n
+        if last:
+            self._complete_admission(adm)
+        self._steps += 1
+
+    def _step_admit_chunk(self, adm: _Admission) -> None:
+        """Dispatch the spec-mode admission chunk program (target +
+        lagging draft), then let the spec step decode the other slots."""
+        chunk, n, last = self._chunk_args(adm)
+        d_n = max(0, min(n, adm.length - 1 - adm.base))
+        req = adm.req
+        (self.tokens, self.prev, block, n_emit, self.cache,
+         self.draft_cache, self.remaining, self.active, self.eos,
+         self.key) = self._get_admit_chunk()(
+            self.params, self._draft_params, self.cache, self.draft_cache,
+            self.tokens, self.prev, self.remaining, self.active, self.eos,
+            self.key, jnp.asarray(chunk), jnp.int32(adm.slot),
+            jnp.int32(n), jnp.int32(d_n), jnp.asarray(bool(last)),
+            jnp.int32(req.max_new_tokens),
+            jnp.int32(-1 if req.eos_id is None else int(req.eos_id)),
+            jnp.int32(int(req.prompt[-1])))
+        self._trace.append((block, n_emit))
+        self.step_kinds.append("admit")
+        adm.base += n
+        if last:
+            self._complete_admission(adm)
+        self._steps += 1
+
+    def _complete_admission(self, adm: _Admission) -> None:
+        """The chunk just dispatched covers the end of the prompt: the
+        device sampled the first token and armed the slot in-program.
+        Host-side: attach the request to the slot (its trace entries
+        start at this step), queue the TTFT stamp for the next sync, and
+        snapshot the prompt's prefix KV for reuse before any decode step
+        can wrap the ring over it."""
+        b = adm.slot
+        self.slots[b] = adm.req
+        self._slot_start[b] = self._steps
+        self._await_first.append(adm.req)
+        self._chunked_admissions += 1
+        self._admit = None
+        if self.prefix_cache is not None:
+            P = self.prefix_cache.wants(adm.req.prompt)
+            if P and P <= self.kv_len:
+                kv = self._get_slot_fn("extract", P)(self.cache,
+                                                     jnp.int32(b))
+                self.prefix_cache.insert(adm.req.prompt, P, kv)
+
+    def _stamp_first_tokens(self, now: float) -> None:
+        for req in self._await_first:
+            if not req.first_token_s:
+                req.first_token_s = now
+        self._await_first.clear()
 
     def _poll(self) -> None:
         """The periodic host sync: harvest each occupied slot's new token
-        block (one bounded transfer per slot, sliced on device) and prune
-        the trace. Only the unconsumed suffix of the trace is ever
-        stacked, so poll cost is bounded by the tokens produced since the
+        block (one bounded transfer per entry, sliced on device) and
+        prune the trace. Only the unconsumed suffix of the trace is ever
+        touched, so poll cost is bounded by the tokens produced since the
         previous poll — it does not grow with trace (or sequence) length.
         Finish detection replays the device's own stop conditions on the
         harvested tokens, so host and device slot state agree by
@@ -455,30 +895,45 @@ class Engine:
             lo = min(starts)
             suffix = self._trace[lo:]
             jax.block_until_ready(suffix[-1])
-            # host-side stacking: each entry is a bounded (B,)/(B, g+1)
-            # transfer. A device-side jnp.stack here would trigger one
-            # XLA compile per distinct suffix length — a recurring
-            # ~100ms latency spike that dwarfed the transfers it saved.
-            if self.spec_gamma:
-                blocks = np.stack([np.asarray(t) for t, _ in suffix])
-                counts = np.stack([np.asarray(c) for _, c in suffix])
-            else:
-                blocks = np.stack([np.asarray(t) for t in suffix])[..., None]
-                counts = None
+            # host-side conversion, entry by entry: each is a bounded
+            # (B,)/(B, W) transfer. A device-side jnp.stack here would
+            # trigger one XLA compile per distinct suffix length — a
+            # recurring ~100ms latency spike that dwarfed the transfers
+            # it saved. Entries are heterogeneous (plain (B,) vectors,
+            # mixed/admission W=1 pairs, speculative W=gamma+1 pairs),
+            # so they are normalised to (block, count) per entry.
+            host = []
+            for t in suffix:
+                if isinstance(t, tuple):
+                    host.append((np.asarray(t[0]), np.asarray(t[1])))
+                else:
+                    host.append((np.asarray(t)[:, None], None))
             for b, start in occupied:
                 s = start - lo
-                if s >= blocks.shape[0]:
-                    continue                               # armed post-trace
-                blk = blocks[s:, b]                        # (T', W)
-                if counts is None:
-                    col = [int(t) for t in blk[:, 0]]
-                else:
-                    cnt = counts[s:, b]                    # (T',)
-                    self._spec_emitted += int(cnt.sum())
-                    self._spec_active_steps += int((cnt > 0).sum())
-                    col = [int(t) for row, c in zip(blk, cnt)
-                           for t in row[:c]]
-                self._harvest(b, col)
+                if s >= len(host):
+                    continue                           # armed post-trace
+                col: List[int] = []
+                gaps: List[Optional[float]] = []
+                for off in range(s, len(host)):
+                    blk, cnt = host[off]
+                    g = self._trace_base + lo + off    # global step index
+                    w = g - self._step_wall_base
+                    gap = None
+                    if 0 < w < len(self._step_wall):
+                        gap = self._step_wall[w] - self._step_wall[w - 1]
+                    if cnt is None:
+                        col.append(int(blk[b, 0]))
+                        gaps.append(gap)
+                        continue
+                    c = int(cnt[b])
+                    if self.spec_gamma \
+                            and blk.shape[1] == self.spec_gamma + 1:
+                        self._spec_emitted += c
+                        self._spec_active_steps += int(c > 0)
+                    for tok in blk[b, :c]:
+                        col.append(int(tok))
+                        gaps.append(gap / c if gap is not None else None)
+                self._harvest(b, col, gaps)
         # every occupied slot has now consumed the whole trace
         keep_from = min((self._slot_start[b] for b, r
                          in enumerate(self.slots) if r is not None),
@@ -487,17 +942,30 @@ class Engine:
         if drop > 0:
             del self._trace[:drop]
             self._trace_base = keep_from
+        # prune wall stamps consumed by every slot (keep one entry before
+        # the oldest live step: its gap needs the predecessor's stamp)
+        wdrop = keep_from - 1 - self._step_wall_base
+        if wdrop > 0:
+            del self._step_wall[:wdrop]
+            self._step_wall_base = keep_from - 1
 
-    def _harvest(self, b: int, col: List[int]) -> None:
+    def _harvest(self, b: int, col: List[int],
+                 gaps: Optional[List[Optional[float]]] = None) -> None:
         """Append slot ``b``'s sampled tokens host-side. The device kept
         decoding after the slot finished (it only learns at the next poll),
         so cut the column at the true stop condition — the same condition
-        the fused step applied on device."""
+        the fused step applied on device. ``gaps`` carries each token's
+        inter-step wall gap for the ITL percentile stats (the first token
+        of a request is TTFT, not ITL, and is skipped)."""
         req = self.slots[b]
         resp = self.responses[req.uid]
         done = False
-        for tok in col:
+        if gaps is None:
+            gaps = [None] * len(col)
+        for tok, gap in zip(col, gaps):
             tok = int(tok)
+            if resp.tokens and gap is not None:
+                self._itl.setdefault(req.uid, []).append(gap)
             resp.tokens.append(tok)
             if (req.eos_id is not None and tok == req.eos_id):
                 resp.finish_reason = "eos"
@@ -518,57 +986,120 @@ class Engine:
     def active_slots(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active_slots
+                    or self._admit is not None)
+
+    def tick(self, steps: Optional[int] = None) -> int:
+        """Advance the engine by one admission pass, one burst of up to
+        ``steps`` fused steps (default ``sync_every``), and one poll.
+        Returns the number of steps run — the open-loop driving primitive
+        for callers that interleave submissions with service
+        (``benchmarks/bench_load.py``); ``run`` is a drain loop on top."""
+        k = self.sync_every if steps is None else max(1, steps)
+        self._fill_free_slots()
+        if not (self.active_slots or self._admit is not None):
+            self._poll()
+            return 0
+        t0 = time.perf_counter()
+        # steps run outside tick (raw .step() calls) have no wall stamp;
+        # backfill so gap indexing stays aligned with the step counter
+        while len(self._step_wall) + self._step_wall_base < self._steps:
+            self._step_wall.append(t0)
+        n0 = len(self.step_times)
+        ran0 = self._steps
+        while self._steps - ran0 < k:
+            first_ever = self._steps == 0
+            before = len(self.step_times)
+            self.step()
+            if first_ever:
+                # isolate the fused-step compile in its own step_times
+                # entries (latency_stats drops the first) so burst
+                # averaging below never smears it over steady state
+                jax.block_until_ready(self.tokens)
+                now = time.perf_counter()
+                made = len(self.step_times) - before
+                for i in range(before, len(self.step_times)):
+                    self.step_times[i] = (now - t0) / made
+                self._step_wall.extend([now] * made)
+                t0 = now
+                n0 = len(self.step_times)
+        jax.block_until_ready(self.tokens)
+        t1 = time.perf_counter()
+        m = len(self.step_times) - n0
+        if m > 0:
+            # burst-average: per-step dispatch time plus its share of sync
+            dt = (t1 - t0) / m
+            for i in range(n0, len(self.step_times)):
+                self.step_times[i] = dt
+            for i in range(m):
+                self._step_wall.append(t0 + dt * (i + 1))
+        self._stamp_first_tokens(t1)
+        self._poll()
+        return self._steps - ran0
+
     def run(self, max_steps: int = 100_000,
             sync_every: Optional[int] = None) -> Dict[int, Response]:
         k = self.sync_every if sync_every is None else max(1, sync_every)
         steps = 0
-        while (self.queue or self.active_slots) and steps < max_steps:
-            self._fill_free_slots()
-            if not self.active_slots:
-                continue  # whole queue finished at prefill (max_new <= 1)
-            t0 = time.perf_counter()
-            n0 = len(self.step_times)
-            for _ in range(k):
-                first_ever = self._steps == 0
-                self.step()
-                steps += 1
-                if first_ever:
-                    # isolate the fused-step compile in step_times[0]
-                    # (latency_stats drops it) so burst averaging below
-                    # never smears it over steady-state entries
-                    jax.block_until_ready(self.tokens)
-                    self.step_times[-1] = time.perf_counter() - t0
-                    t0 = time.perf_counter()
-                    n0 = len(self.step_times)
-                if steps >= max_steps:
-                    break
-            jax.block_until_ready(self.tokens)
-            # burst-average: per-step dispatch time plus its share of sync
-            if len(self.step_times) > n0:
-                dt = (time.perf_counter() - t0) / (len(self.step_times)
-                                                   - n0)
-                for i in range(n0, len(self.step_times)):
-                    self.step_times[i] = dt
-            self._poll()
+        while self.has_work and steps < max_steps:
+            made = self.tick(min(k, max_steps - steps))
+            steps += made
+            if made == 0 and not self.has_work:
+                break
         self._poll()   # partial tokens for interrupted slots
         return self.responses
 
+    def reset_stats(self) -> None:
+        """Forget timing and finished-request history (compiled programs,
+        cache state and prefix-cache *entries* are kept) — for benchmarks
+        that warm an engine up and then measure a fresh stream."""
+        self.step_times = []
+        self.step_kinds = []
+        self._itl = {}
+        self._drop_compile_step = False
+        for uid in [u for u, r in self.responses.items() if r.finished]:
+            del self.responses[uid]
+            del self.requests[uid]
+        self._spec_emitted = 0
+        self._spec_active_steps = 0
+        self._chunked_admissions = 0
+        if self.prefix_cache is not None:
+            pc = self.prefix_cache
+            pc.hits = pc.misses = pc.hit_tokens = pc.evictions = 0
+
     # ------------------------------------------------------------ #
     def latency_stats(self) -> Dict[str, float]:
-        ts = np.asarray(self.step_times[1:] or [0.0])  # drop compile step
+        drop = 1 if self._drop_compile_step else 0
+        ts = np.asarray(self.step_times[drop:] or [0.0])
         finished = [r for r in self.responses.values() if r.finished]
-        ttft = [r.first_token_s - r.submitted_s
-                for r in self.requests.values() if r.first_token_s]
+        ttft = np.asarray([r.first_token_s - r.submitted_s
+                           for r in self.requests.values()
+                           if r.first_token_s] or [0.0])
+        itl = np.asarray([g for lst in self._itl.values() for g in lst]
+                         or [0.0])
         stats = {
             "decode_ms_mean": float(ts.mean() * 1e3),
             "decode_ms_p50": float(np.percentile(ts, 50) * 1e3),
             "decode_ms_p99": float(np.percentile(ts, 99) * 1e3),
-            "ttft_ms_mean": float(np.mean(ttft) * 1e3) if ttft else 0.0,
+            "ttft_ms_mean": float(ttft.mean() * 1e3),
+            "ttft_ms_p50": float(np.percentile(ttft, 50) * 1e3),
+            "ttft_ms_p95": float(np.percentile(ttft, 95) * 1e3),
+            "ttft_ms_p99": float(np.percentile(ttft, 99) * 1e3),
+            "itl_ms_mean": float(itl.mean() * 1e3),
+            "itl_ms_p50": float(np.percentile(itl, 50) * 1e3),
+            "itl_ms_p95": float(np.percentile(itl, 95) * 1e3),
+            "itl_ms_p99": float(np.percentile(itl, 99) * 1e3),
             "n_finished": len(finished),
             "tokens_generated": sum(r.n_generated for r in finished),
             "prefill_jit_entries": len(self._prefill_jits),
             "decode_steps": self._steps,
+            "prefill_chunk": self.prefill_chunk,
+            "chunked_admissions": self._chunked_admissions,
         }
+        if self.prefix_cache is not None:
+            stats.update(self.prefix_cache.stats())
         if self.spec_gamma:
             # every harvested (step, active slot) pair emitted 1 + n_acc
             # tokens; acceptance rate = mean(n_acc) / gamma

@@ -1,0 +1,304 @@
+"""Continuous batching invariants: the unified extend path
+(``Model.extend_into_cache``), chunked prefill ≡ monolithic bucketed
+prefill (token-identical greedy output, cache bit-equality), shared-
+prefix KV reuse (hit ≡ cold path, LRU eviction under the token cap),
+and the fused mixed step composing with int8 KV + speculative decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving.engine import Engine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+_CFG = get_arch("llama3.2-1b", variant="reduced")
+_MODEL = build(_CFG)
+_PARAMS = _MODEL.init(jax.random.PRNGKey(0))
+_RNG = np.random.default_rng(21)
+# lengths straddle the chunk: below, equal, multiple chunks, non-multiple
+_PROMPTS = [_RNG.integers(0, _CFG.vocab, L) for L in (3, 8, 11, 24, 30, 17)]
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("sampler", Sampler())
+    return Engine(_MODEL, _PARAMS, **kw)
+
+
+def _run(prompts=_PROMPTS, max_new=6, **kw):
+    eng = _engine(**kw)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    resp = eng.run()
+    return {u: r.tokens for u, r in resp.items()}, eng
+
+
+# ------------------------------------------------------------------ #
+# Model.extend_into_cache (the unified extend path)
+# ------------------------------------------------------------------ #
+def test_extend_matches_sequential_decode_per_row_lengths():
+    """One masked extend with per-row lengths [3, 1, 0] produces the same
+    valid-position logits as token-by-token decode, advances each row's
+    step by its own length, and leaves the length-0 row bit-untouched."""
+    B, T = 3, 4
+    toks = jnp.asarray(_RNG.integers(0, _CFG.vocab, (B, 6)), jnp.int32)
+    cache = _MODEL.make_cache(B, 32)
+    _, cache = jax.jit(_MODEL.prefill)(_PARAMS, {"tokens": toks}, cache)
+    ext = jnp.asarray(_RNG.integers(0, _CFG.vocab, (B, T)), jnp.int32)
+    lengths = jnp.asarray([3, 1, 0], jnp.int32)
+    lo, cache_e = jax.jit(_MODEL.extend_into_cache)(_PARAMS, ext, cache,
+                                                    lengths)
+    assert list(np.asarray(_MODEL.cache_steps(cache_e))) == [9, 7, 6]
+
+    step = jax.jit(_MODEL.decode_step)
+    cache_s = cache
+    for i in range(3):
+        lo_i, cache_s = step(_PARAMS, ext[:, i:i + 1], cache_s)
+        for b in range(B):
+            if i < int(lengths[b]):
+                np.testing.assert_allclose(
+                    np.asarray(lo[b, i]), np.asarray(lo_i[b, 0]),
+                    rtol=2e-5, atol=2e-5)
+    # row 2 advanced by 0: its cache row is bit-identical to before
+    for a, b0 in zip(jax.tree.leaves(cache_e), jax.tree.leaves(cache)):
+        if a.ndim >= 2:
+            assert np.array_equal(np.asarray(a)[:, 2], np.asarray(b0)[:, 2])
+
+
+def test_extend_last_only_gathers_last_valid_position():
+    toks = jnp.asarray(_RNG.integers(0, _CFG.vocab, (2, 5)), jnp.int32)
+    cache = _MODEL.make_cache(2, 32)
+    _, cache = jax.jit(_MODEL.prefill)(_PARAMS, {"tokens": toks}, cache)
+    ext = jnp.asarray(_RNG.integers(0, _CFG.vocab, (2, 4)), jnp.int32)
+    lengths = jnp.asarray([4, 2], jnp.int32)
+    lo_full, _ = jax.jit(_MODEL.extend_into_cache)(_PARAMS, ext, cache,
+                                                   lengths)
+    lo_last, _ = jax.jit(
+        lambda p, t, c, l: _MODEL.extend_into_cache(p, t, c, l,
+                                                    last_only=True))(
+        _PARAMS, ext, cache, lengths)
+    np.testing.assert_array_equal(np.asarray(lo_last[0, 0]),
+                                  np.asarray(lo_full[0, 3]))
+    np.testing.assert_array_equal(np.asarray(lo_last[1, 0]),
+                                  np.asarray(lo_full[1, 1]))
+
+
+def test_extend_gated_for_ssm_stacks():
+    cfg = get_arch("mamba2-780m", variant="reduced")
+    model = build(cfg)
+    assert not model.supports_extend and model.extend_into_cache is None
+
+
+# ------------------------------------------------------------------ #
+# chunked prefill ≡ monolithic bucketed prefill
+# ------------------------------------------------------------------ #
+def test_chunked_prefill_cache_bit_equality():
+    """Model level: feeding the prompt through chunked extends produces a
+    bit-identical cache (K/V/pos/step) and next-token logits to one
+    monolithic masked prefill — chunking is a scheduling choice, not a
+    numerics choice."""
+    L, C, Lb, S = 13, 4, 16, 32
+    prompt = _RNG.integers(0, _CFG.vocab, L)
+    padded = np.zeros((1, Lb), np.int32)
+    padded[0, :L] = prompt
+    cache_a = _MODEL.make_cache(1, S)
+    lo_a, cache_a = jax.jit(_MODEL.prefill)(
+        _PARAMS, {"tokens": jnp.asarray(padded),
+                  "length": jnp.asarray([L], jnp.int32)}, cache_a)
+
+    cache_b = _MODEL.make_cache(1, S)
+    ext = jax.jit(lambda p, t, c, l: _MODEL.extend_into_cache(
+        p, t, c, l, last_only=True))
+    for base in range(0, L, C):
+        n = min(C, L - base)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = prompt[base:base + n]
+        lo_b, cache_b = ext(_PARAMS, jnp.asarray(chunk), cache_b,
+                            jnp.asarray([n], jnp.int32))
+
+    np.testing.assert_array_equal(np.asarray(lo_a[0, -1]),
+                                  np.asarray(lo_b[0, 0]))
+    for sub in cache_a:
+        for key in ("k", "v", "pos", "step"):
+            a = np.asarray(cache_a[sub][key])
+            b = np.asarray(cache_b[sub][key])
+            if key in ("k", "v"):
+                a, b = a[:, :, :L], b[:, :, :L]   # padding region differs
+            np.testing.assert_array_equal(a, b, err_msg=f"{sub}/{key}")
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_chunked_engine_matches_legacy(chunk):
+    """Engine level: more requests than slots, prompts shorter and longer
+    than the chunk — greedy output must equal the monolithic engine's,
+    and every admission must take the chunked path."""
+    base, _ = _run()
+    out, eng = _run(prefill_chunk=chunk)
+    assert out == base
+    st = eng.latency_stats()
+    assert st["chunked_admissions"] == len(_PROMPTS)
+    assert st["prefill_chunk"] == chunk
+
+
+def test_chunked_max_new_one_and_eos_free_slot():
+    """max_new=1: the chunked admission emits exactly one token and never
+    arms the slot; eos on the first token behaves the same way."""
+    out, eng = _run(max_new=1, prefill_chunk=8)
+    base, _ = _run(max_new=1)
+    assert out == base
+    assert all(len(t) == 1 for t in out.values())
+    # eos on the first generated token
+    first = base[0][0]
+    eng2 = _engine(prefill_chunk=8)
+    eng2.submit(Request(uid=0, prompt=_PROMPTS[0], max_new_tokens=10,
+                        eos_id=int(first)))
+    eng2.submit(Request(uid=1, prompt=_PROMPTS[1], max_new_tokens=3))
+    resp = eng2.run()
+    assert resp[0].n_generated == 1 and resp[0].finish_reason == "eos"
+    assert resp[1].finished and resp[1].n_generated == 3
+
+
+def test_chunked_falls_back_for_unsupported_stacks():
+    """SSM stacks have no extend path: the knob degrades to monolithic
+    prefill instead of failing, with identical output."""
+    cfg = get_arch("mamba2-780m", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(**kw):
+        eng = Engine(model, params, max_batch=2, cache_len=64,
+                     sampler=Sampler(), **kw)
+        for uid, p in enumerate(_PROMPTS[:3]):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        return {u: r.tokens for u, r in eng.run().items()}, eng
+
+    base, _ = run()
+    out, eng = run(prefill_chunk=8)
+    assert out == base
+    assert eng.prefill_chunk == 0
+    assert eng.latency_stats()["chunked_admissions"] == 0
+
+
+# ------------------------------------------------------------------ #
+# shared-prefix KV reuse
+# ------------------------------------------------------------------ #
+def test_prefix_hit_matches_cold_path():
+    """Requests sharing a system-prompt head: the second admission
+    materialises the stored prefix instead of recomputing it, with
+    token-identical greedy output — including a *partial* hit, where the
+    shared head is shorter than the stored entry."""
+    head = _RNG.integers(0, _CFG.vocab, 16)
+    prompts = [np.concatenate([head, _RNG.integers(0, _CFG.vocab, n)])
+               for n in (9, 5, 12)]
+    cold, _ = _run(prompts=prompts, prefill_chunk=8)
+    hot, eng = _run(prompts=prompts, prefill_chunk=8,
+                    prefix_cache_tokens=256)
+    assert hot == cold
+    st = eng.latency_stats()
+    assert st["prefix_hits"] >= 2
+    assert st["prefix_hit_tokens"] >= 2 * 16
+    assert st["prefix_entries"] >= 1
+
+
+def test_prefix_eviction_under_token_cap():
+    """Distinct prefixes past the token budget evict LRU entries; stored
+    tokens never exceed the cap and correctness is unaffected."""
+    prompts = [np.concatenate([_RNG.integers(0, _CFG.vocab, 16),
+                               _RNG.integers(0, _CFG.vocab, 4)])
+               for _ in range(4)]
+    cold, _ = _run(prompts=prompts, prefill_chunk=8)
+    hot, eng = _run(prompts=prompts, prefill_chunk=8,
+                    prefix_cache_tokens=32)   # cap: two 16-token entries
+    assert hot == cold
+    st = eng.latency_stats()
+    assert st["prefix_tokens"] <= 32
+    assert st["prefix_evictions"] >= 2
+
+
+def test_prefix_cache_trie_unit():
+    pc = PrefixCache(capacity_tokens=64, chunk=8)
+    assert pc.bucket(7) == 0 and pc.bucket(8) == 8 and pc.bucket(31) == 16
+    a = list(range(40))
+    assert pc.wants(a) == 32          # largest power-of-two chunk mult
+    pc.insert(a, 32, kv="A")
+    assert pc.wants(a) == 0           # already stored
+    # exact-prefix hit, shorter prompt
+    kv, ent, q = pc.lookup(a[:33])
+    assert (kv, ent, q) == ("A", 32, 32)
+    # partial hit: only 20 tokens shared -> bucket 16 of entry A
+    kv, ent, q = pc.lookup(a[:20] + [999] * 30)
+    assert (kv, ent, q) == ("A", 32, 16)
+    # no hit below one chunk
+    assert pc.lookup([999, 998])[0] is None
+    # prompt must keep >= 1 token to prefill: a 32-token prompt can only
+    # use a shorter bucket of the stored 32-token entry
+    kv, ent, q = pc.lookup(a[:32])
+    assert q == 16
+    # LRU eviction under the cap: A's last touch predates B's insert,
+    # so A is the least recently used and goes first
+    b = [1000 + i for i in range(40)]
+    pc.insert(b, 32, kv="B")          # 64 tokens stored, at cap
+    c = [2000 + i for i in range(24)]
+    pc.insert(c, 16, kv="C")          # 80 > 64 -> evict LRU
+    assert pc.tokens <= 64 and pc.evictions >= 1
+    assert pc.lookup(a[:33])[0] is None
+    assert pc.lookup(b)[0] == "B" and pc.lookup(c[:17])[0] == "C"
+
+
+# ------------------------------------------------------------------ #
+# composition: mixed step + int8 KV + speculative decoding
+# ------------------------------------------------------------------ #
+def test_chunked_composes_with_int8_kv():
+    base, _ = _run(kv_cache_dtype="int8")
+    out, eng = _run(kv_cache_dtype="int8", prefill_chunk=8,
+                    prefix_cache_tokens=256)
+    assert out == base
+    assert eng.latency_stats()["chunked_admissions"] == len(_PROMPTS)
+
+
+def test_chunked_composes_with_speculative_decoding():
+    """Chunked admission runs as its own extend program right before the
+    fused spec step; greedy output stays token-identical to the plain
+    engine (the speculative contract) while admissions are chunked."""
+    base, _ = _run(max_new=10)
+    out, eng = _run(max_new=10, draft="int8@1", spec_gamma=3,
+                    prefill_chunk=8)
+    assert out == base
+    st = eng.latency_stats()
+    assert st["chunked_admissions"] == len(_PROMPTS)
+    assert st["spec_gamma"] == 3
+    # prefix reuse is target-cache-only; spec mode must disable it
+    assert eng.prefix_cache is None
+
+
+def test_chunked_spec_with_int8_kv():
+    base, _ = _run(max_new=8, kv_cache_dtype="int8")
+    out, _ = _run(max_new=8, kv_cache_dtype="int8", draft="int8@1",
+                  spec_gamma=3, prefill_chunk=8)
+    assert out == base
+
+
+# ------------------------------------------------------------------ #
+# latency stats + open-loop driving
+# ------------------------------------------------------------------ #
+def test_latency_stats_percentiles_and_tick():
+    eng = _engine(prefill_chunk=8, sync_every=4)
+    for uid, p in enumerate(_PROMPTS[:3]):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=8))
+    total = 0
+    while eng.has_work and total < 500:
+        total += max(1, eng.tick(4))
+    assert all(r.finished for r in eng.responses.values())
+    st = eng.latency_stats()
+    for key in ("ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
+                "itl_ms_mean", "itl_ms_p50", "itl_ms_p95", "itl_ms_p99"):
+        assert key in st and st[key] >= 0.0
+    assert st["itl_ms_p50"] > 0.0
+    # reset_stats keeps programs + prefix entries, clears history
+    eng.reset_stats()
+    assert eng.step_times == [] and eng.latency_stats()["n_finished"] == 0

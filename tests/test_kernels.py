@@ -103,6 +103,63 @@ def test_decode_attention(B, Hq, Hkv, S, hd, window, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("T,B,Hq,Hkv,S,hd", [
+    (4, 2, 8, 2, 256, 64), (5, 1, 4, 4, 128, 32),
+])
+@pytest.mark.parametrize("window", [0, 64])
+def test_decode_attention_multi_query(T, B, Hq, Hkv, S, hd, window):
+    """Multi-query rows (speculative verify / chunked-prefill extend):
+    T query tokens per row, each masked at its own absolute position,
+    against the same per-slot cache region."""
+    from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_reference)
+    step = S - S // 3
+    q = _arr((B, T, Hq, hd))
+    k = _arr((B, Hkv, S, hd))
+    v = _arr((B, Hkv, S, hd))
+    pos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        n = min(step + T, S)
+        ps = np.arange(step + T - n, step + T)
+        pos[b, ps % S] = ps
+    pos = jnp.asarray(pos)
+    qp = jnp.broadcast_to(step + jnp.arange(T, dtype=jnp.int32), (B, T))
+    out = decode_attention_pallas(q, k, v, pos, qp, window=window, bk=64,
+                                  interpret=True)
+    ref = decode_attention_reference(q, k, v, pos, qp, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cached_decode_attention_multi_query_matches_gqa():
+    """The ops wrapper's (B, T) form == the model's gqa_attention with
+    per-row query positions (what extend_into_cache routes through when
+    cfg.use_decode_kernel is set)."""
+    from repro.kernels.decode_attention.ops import cached_decode_attention
+    from repro.models.layers import gqa_attention
+    B, T, S, Hq, Hkv, hd = 2, 3, 64, 4, 2, 32
+    base = S - 8
+    q = _arr((B, T, Hq, hd))
+    k_cache = _arr((B, S, Hkv, hd))
+    v_cache = _arr((B, S, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q_pos = base + jnp.arange(T, dtype=jnp.int32)[None] \
+        + jnp.zeros((B, 1), jnp.int32)
+    out = cached_decode_attention(q, k_cache, v_cache, pos, q_pos,
+                                  use_pallas=True, bk=32)
+    ref = gqa_attention(q, k_cache, v_cache, q_positions=q_pos,
+                        k_positions=pos, causal=True, k_valid=pos >= 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # (B,) base-position form == explicit per-query positions
+    out2 = cached_decode_attention(q, k_cache, v_cache, pos,
+                                   jnp.full((B,), base, jnp.int32),
+                                   use_pallas=True, bk=32)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_decode_attention_matches_model_path():
     """Kernel == the model's gqa_attention on a populated cache."""
     from repro.kernels.decode_attention.ops import cached_decode_attention
