@@ -196,7 +196,8 @@ def run(n_requests: int = 48, long_frac: float = 0.3,
         st = serve_stream(eng, arrivals, prompts, max_new)
         outputs[name] = {u: list(r.tokens)
                          for u, r in eng.responses.items() if u >= 0}
-        row = {"mode": name, **{k: st[k] for k in (
+        # latency key groups are absent when a stream had no samples
+        row = {"mode": name, **{k: st.get(k, float("nan")) for k in (
             "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
             "itl_ms_mean", "itl_ms_p50", "itl_ms_p95", "itl_ms_p99",
             "decode_ms_p50", "decode_ms_p99", "decode_tok_per_s",

@@ -61,15 +61,17 @@ def run(n_requests: int = 12, max_new: int = 16,
         wall = time.perf_counter() - t0
         st = eng.latency_stats()
         decode_s = sum(eng.step_times)
+        # latency key groups are absent when a stream had no samples
+        g = lambda k: st.get(k, float("nan"))  # noqa: E731
         rows.append({"max_batch": max_batch,
                      "tok_per_s": st["tokens_generated"] / wall,
                      "decode_tok_per_s": st["tokens_generated"] / decode_s
                      if decode_s else 0.0,
-                     "decode_ms_p50": st["decode_ms_p50"],
-                     "decode_ms_p99": st["decode_ms_p99"],
-                     "ttft_ms_mean": st["ttft_ms_mean"],
-                     "itl_ms_p50": st["itl_ms_p50"],
-                     "itl_ms_p99": st["itl_ms_p99"],
+                     "decode_ms_p50": g("decode_ms_p50"),
+                     "decode_ms_p99": g("decode_ms_p99"),
+                     "ttft_ms_mean": g("ttft_ms_mean"),
+                     "itl_ms_p50": g("itl_ms_p50"),
+                     "itl_ms_p99": g("itl_ms_p99"),
                      "prefill_jit_entries": st["prefill_jit_entries"],
                      "decode_steps": st["decode_steps"],
                      "wall_s": wall})

@@ -1,0 +1,156 @@
+"""Tensor-parallel sharded serving benchmark: mesh layouts vs
+single-device on an 8-way host-platform mesh.
+
+  PYTHONPATH=src python -m benchmarks.bench_sharded [--smoke] \
+      [--out BENCH_sharded.json]
+
+MUST run as its own process: it forces 8 host-platform devices before
+jax initialises (the dry-run pattern) so the mesh exists on CPU-only CI.
+Runs the same greedy request stream through the single-device engine and
+through sharded engines (pure tensor-parallel 1x8 and mixed 2x4
+data x model layouts), asserts token-identical greedy output per layout,
+and reports decode tokens/s plus the per-device parameter-bytes cut —
+the number that decides whether a 15B-398B config fits device HBM at
+all. On host-platform devices the throughput columns measure dispatch
+overhead only (collectives are emulated on one CPU); the bytes column
+and the identity assertion are the portable signal. Emits the unified
+artifact schema (``benchmarks/schema.py``).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+from typing import Dict, List  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks import schema  # noqa: E402
+from repro.configs import get_arch  # noqa: E402
+from repro.models.model import build  # noqa: E402
+from repro.serving.engine import Engine  # noqa: E402
+from repro.serving.request import Request  # noqa: E402
+from repro.serving.sampler import Sampler  # noqa: E402
+
+
+def _param_bytes_per_device(eng: Engine) -> int:
+    """Max per-device bytes across the param tree (replicated leaves
+    count fully on every device; sharded leaves count their shard)."""
+    total = 0
+    for leaf in jax.tree.leaves(eng.params):
+        n_shards = 1
+        if eng.mesh is not None:
+            spec = leaf.sharding.spec
+            sizes = dict(zip(eng.mesh.axis_names, eng.mesh.devices.shape))
+            for ax in spec:
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    if a is not None:
+                        n_shards *= sizes[a]
+        total += leaf.nbytes // n_shards
+    return total
+
+
+def _one_run(model, params, cfg, mesh, n_requests, max_new,
+             prefill_chunk=0) -> Dict:
+    eng = Engine(model, params, max_batch=4, cache_len=96,
+                 sampler=Sampler(), mesh=mesh,
+                 prefill_chunk=prefill_chunk)
+    rngw = np.random.default_rng(99)
+    for i, L in enumerate((5, 12, 20)):          # warm compile
+        eng.submit(Request(uid=-1 - i,
+                           prompt=rngw.integers(0, cfg.vocab, L),
+                           max_new_tokens=4))
+    eng.run()
+    eng.reset_stats()
+    rng = np.random.default_rng(0)
+    for uid in range(n_requests):
+        L = int(rng.integers(4, 24))
+        eng.submit(Request(uid=uid, prompt=rng.integers(0, cfg.vocab, L),
+                           max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    resp = eng.run()
+    wall = time.perf_counter() - t0
+    st = eng.latency_stats()
+    decode_s = sum(eng.step_times)
+    return {
+        "tokens": {u: list(r.tokens) for u, r in resp.items() if u >= 0},
+        "decode_tok_per_s": st["tokens_generated"] / decode_s
+        if decode_s else 0.0,
+        "decode_ms_p50": st.get("decode_ms_p50", 0.0),
+        "wall_s": wall,
+        "param_bytes_per_device": _param_bytes_per_device(eng),
+        "programs": eng.program_cache_sizes(),
+    }
+
+
+def run(n_requests: int = 8, max_new: int = 16,
+        layouts=("1,8", "2,4")) -> List[Dict]:
+    cfg = get_arch("llama3.2-1b", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rows = []
+    base = _one_run(model, params, cfg, None, n_requests, max_new)
+    rows.append({"mesh": "single", **{k: v for k, v in base.items()
+                                      if k != "tokens"}})
+    for layout in layouts:
+        r = _one_run(model, params, cfg, layout, n_requests, max_new)
+        assert r["tokens"] == base["tokens"], \
+            f"greedy output diverged on mesh {layout}"
+        assert all(v == 1 for v in r["programs"].values()), \
+            f"step program recompiled on mesh {layout}: {r['programs']}"
+        rows.append({"mesh": layout, "greedy_match": True,
+                     **{k: v for k, v in r.items() if k != "tokens"}})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~60s CI mode: fewer requests, one layout")
+    ap.add_argument("--out", default="BENCH_sharded.json",
+                    help="JSON output path ('' to skip)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rows = run(n_requests=4, max_new=8, layouts=("2,4",))
+    else:
+        rows = run()
+
+    print("sharded serving: mesh layouts vs single device "
+          f"({len(jax.devices())} host-platform devices, greedy)")
+    print(f"{'mesh':>8s} {'tok/s':>9s} {'p50 ms':>8s} "
+          f"{'param MiB/dev':>14s}")
+    for r in rows:
+        print(f"{r['mesh']:>8s} {r['decode_tok_per_s']:9.1f} "
+              f"{r['decode_ms_p50']:8.2f} "
+              f"{r['param_bytes_per_device'] / 2**20:14.2f}")
+    cut = rows[0]["param_bytes_per_device"] / \
+        max(min(r["param_bytes_per_device"] for r in rows[1:]), 1)
+    print(f"  best per-device param-bytes cut: {cut:.2f}x")
+
+    if args.out:
+        metrics = [
+            schema.metric("decode_tok_per_s_single", "tok/s",
+                          rows[0]["decode_tok_per_s"]),
+            schema.metric("decode_tok_per_s_sharded_best", "tok/s",
+                          max(r["decode_tok_per_s"] for r in rows[1:])),
+            schema.metric("param_bytes_cut_best", "x", cut),
+            schema.metric("greedy_match", "bool", True),
+        ]
+        schema.write(args.out, schema.payload(
+            "sharded_serving",
+            run=schema.run_meta(smoke=args.smoke,
+                                arch="llama3.2-1b-reduced", greedy=True,
+                                n_devices=len(jax.devices()),
+                                max_batch=4),
+            metrics=metrics, data={"rows": rows}))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

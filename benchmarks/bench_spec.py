@@ -92,8 +92,9 @@ def run(n_requests: int = 12, max_new: int = 16, trials: int = 3,
             "spec_gamma": st.get("spec_gamma", 0),
             "decode_tok_per_s": tok_s,
             "decode_tok_per_s_runs": [round(r[0], 1) for r in runs],
-            "decode_ms_p50": st["decode_ms_p50"],
-            "decode_ms_p99": st["decode_ms_p99"],
+            # latency keys are absent when a stream had no samples
+            "decode_ms_p50": st.get("decode_ms_p50", float("nan")),
+            "decode_ms_p99": st.get("decode_ms_p99", float("nan")),
             "decode_steps": st["steps"],
             "acceptance_rate": st.get("spec_acceptance_rate", 1.0),
             "tokens_per_step": st.get("spec_tokens_per_step", 1.0),

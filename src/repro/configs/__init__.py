@@ -39,7 +39,12 @@ def get_arch(name: str, *, variant: str = "") -> ModelConfig:
     decode step, ``prefill_chunk=64``, plus an 8k-token shared-prefix KV
     reuse budget), e.g. ``"reduced+continuous"`` or ``"edge+continuous"``
     for the edge profile that also never stalls decode behind a long
-    prompt.
+    prompt; "sharded" -> tensor-parallel serving over every local
+    device (``cfg.mesh="auto"``: weights, KV heads and decode state
+    sharded over a ("data", "model") mesh — how a 15B-398B config fits
+    device memory at all), e.g. ``"reduced+sharded"`` or
+    ``"sharded+continuous"``; pick an explicit layout with
+    ``serve.py --mesh dp,mp``.
     """
     cfg = ARCHS.get(name) or EXTRA_ARCHS[name]
     for v in filter(None, variant.split("+")):
@@ -50,6 +55,8 @@ def get_arch(name: str, *, variant: str = "") -> ModelConfig:
         elif v == "edge":
             cfg = cfg.replace(name=cfg.name + "-edge", quant="int4",
                               kv_quant=True)
+        elif v == "sharded":
+            cfg = cfg.replace(name=cfg.name + "-sharded", mesh="auto")
         elif v == "continuous":
             cfg = cfg.replace(name=cfg.name + "-cont",
                               prefill_chunk=cfg.prefill_chunk or 64,

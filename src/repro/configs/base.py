@@ -114,6 +114,12 @@ class ModelConfig:
                                     # tokens (LRU trie of chunk-aligned
                                     # prompt prefixes; 0 = off). Requires
                                     # prefill_chunk > 0
+    mesh: str = ""                  # tensor-parallel serving mesh spec:
+                                    # "" = single-device; "auto" = all
+                                    # local devices on the model axis;
+                                    # "dp,mp" (e.g. "2,4") = explicit
+                                    # (data, model) axis sizes. Engine
+                                    # knob mirror: Engine(mesh=...)
     draft: str = ""                 # speculative-decoding draft spec:
                                     # "" = off; "<prec>[@<blocks>]" builds a
                                     # weight-sharing self-draft from the

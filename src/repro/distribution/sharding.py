@@ -65,6 +65,19 @@ def current_rules() -> Optional[ActivationRules]:
     return getattr(_ctx, "rules", None)
 
 
+def model_axis_size(axis: str = "model") -> int:
+    """Size of the model axis in the active ``ActivationRules`` mesh (1
+    when no context is active or the mesh has no such axis). Lets code
+    outside the model stack — e.g. ``kernels.dispatch`` — ask "are
+    activations tensor-parallel right now?" without threading the mesh
+    through every call site."""
+    ctx = current_rules()
+    if ctx is None:
+        return 1
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    return int(sizes.get(axis, 1))
+
+
 def shard_activation(x, name: str):
     ctx = current_rules()
     if ctx is None or name not in ctx.rules:
@@ -73,9 +86,15 @@ def shard_activation(x, name: str):
     # Drop constraint if rank mismatch (e.g. flattened activations).
     if hasattr(x, "ndim") and len(spec) != x.ndim:
         return x
+    # Replicate non-divisible dims (same fit rule as param/cache
+    # shardings): an uneven constraint — e.g. 4 KV heads on an 8-way
+    # model axis — would fight the fitted cache/param shardings and
+    # force involuntary resharding inside the step program.
+    axis_sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    fixed, _ = _fit_spec(tuple(spec), x.shape, axis_sizes)
     try:
         return jax.lax.with_sharding_constraint(
-            x, NamedSharding(ctx.mesh, spec))
+            x, NamedSharding(ctx.mesh, P(*fixed)))
     except ValueError:
         return x
 
@@ -168,6 +187,9 @@ def _fit_spec(spec, shape, axis_sizes):
 
 
 def spec_for_path(path_str: str, shape, rules, axis_sizes) -> P:
+    qspec = _qtensor_spec(path_str, shape, rules, axis_sizes)
+    if qspec is not None:
+        return qspec
     for pat, spec in rules:
         if re.fullmatch(pat, path_str):
             candidates = spec if isinstance(spec, list) else [spec]
@@ -258,10 +280,43 @@ def batch_shardings(batch_shapes, mesh: Mesh, batch_axes=("data",)):
     return jax.tree.map(one, batch_shapes)
 
 
+def _qtensor_spec(path_str: str, shape, rules, axis_sizes) -> Optional[P]:
+    """Spec for a quantized-weight leaf (``quant.quantize_params`` replaces
+    a linear's ``w`` with a ``{"q"|"q4", "scale"}`` dict, so paths gain a
+    trailing component the ``.../w`` rules don't see).
+
+    * ``.../w/q`` and ``.../w/q4`` keep the weight's own spec — ``q`` has
+      ``w``'s shape and ``q4`` only halves the K dim (divisibility is
+      re-checked against the actual leaf shape);
+    * ``.../w/scale`` is per-output-channel (int8: (..., N); int4:
+      (..., n_groups, N)): shard the last dim iff the weight rule shards
+      its last (output) dim, replicate everything else.
+
+    Returns None for leaves that are not QTensor components."""
+    head, _, last = path_str.rpartition("/")
+    if not head.endswith("/w"):
+        return None
+    if last in ("q", "q4"):
+        return spec_for_path(head, shape, rules, axis_sizes)
+    if last == "scale":
+        for pat, spec in rules:
+            if re.fullmatch(pat, head):
+                cand = (spec[0] if isinstance(spec, list) else spec)
+                out_ax = cand[-1] if cand else None
+                fixed, _ = _fit_spec((None,) * (len(shape) - 1) + (out_ax,),
+                                     shape, axis_sizes)
+                return P(*fixed)
+        return P()
+    return None
+
+
 def param_shardings(params_tree, mesh: Mesh, rules=None):
     """Map a (shaped) param pytree to NamedShardings via path rules.
 
-    Dims whose size is not divisible by the mesh axis are replicated."""
+    Dims whose size is not divisible by the mesh axis are replicated.
+    Quantized trees (QTensor ``q``/``q4``/``scale`` leaves under a ``w``)
+    inherit the weight's own rule, so a quantized model shards the same
+    way its full-precision parent does."""
     rules = rules or default_param_rules()
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 

@@ -2,18 +2,31 @@
 
 Each ``kernels/*/ops.py`` wrapper used to hard-code
 ``use_pallas=False, interpret=True`` defaults; this module is now the
-single place that decides which implementation runs:
+single place that decides which implementation runs. Precedence, highest
+first:
 
-* explicit ``use_pallas=True/False`` at a call site always wins;
-* ``REPRO_FORCE_REF=1`` in the environment forces the jnp reference
-  everywhere (debugging / bisecting a kernel regression);
-* ``REPRO_FORCE_PALLAS=1`` forces the Pallas path (in interpret mode
-  off-TPU, so it still runs — the kernel-validation CI mode);
+* **sharded fallback** — when a tensor-parallel activation context is
+  active (``distribution.sharding`` model axis > 1), every op routes to
+  the jnp reference, even over an explicit ``use_pallas=True``. Pallas
+  kernels are single-device programs whose block specs assume the full
+  (unsharded) head/feature dims; under GSPMD partitioning they would
+  either force an all-gather of their operands or fail outright inside
+  ``shard_map``. The jnp reference partitions like any other XLA op, so
+  falling back per-op keeps the whole step program partitionable;
+* ``REPRO_FORCE_REF=1`` forces the jnp reference everywhere, overriding
+  even an explicit ``use_pallas=True`` (debugging / bisecting a kernel
+  regression without touching call sites);
+* ``REPRO_FORCE_PALLAS=1`` forces the Pallas path the same way — it
+  overrides an explicit ``use_pallas=False`` (in interpret mode off-TPU,
+  so it still runs — the kernel-validation CI mode). When both force
+  envs are set, ``REPRO_FORCE_REF`` wins: the reference path is the
+  ground truth the Pallas path is validated against;
+* explicit ``use_pallas=True/False`` at a call site;
 * otherwise the backend decides: Pallas compiled on TPU, reference
   elsewhere (Pallas CPU lowering is interpret-only and not
   representative of TPU codegen, so it is never the silent default).
 
-``interpret`` follows the same rule: compiled on TPU, interpret mode
+``interpret`` follows the backend rule: compiled on TPU, interpret mode
 everywhere else, unless the caller pins it.
 """
 from __future__ import annotations
@@ -35,6 +48,15 @@ def backend() -> str:
     return jax.default_backend()
 
 
+def sharded_ref_fallback() -> bool:
+    """True when ops should take the reference path because activations
+    are tensor-parallel right now (an ``activation_sharding`` context
+    with a model axis > 1 is active — the serving engine and launchers
+    enter one around every sharded program they trace)."""
+    from repro.distribution.sharding import model_axis_size
+    return model_axis_size() > 1
+
+
 def use_pallas_default() -> bool:
     """The implementation choice when the call site does not pin one."""
     if _env_true(_FORCE_REF_ENV):
@@ -54,12 +76,17 @@ def resolve(use_pallas: Optional[bool] = None,
     """Resolve the (use_pallas, interpret) pair for one op call.
 
     ``None`` means "let the backend decide"; explicit booleans are
-    honoured as-is (except ``REPRO_FORCE_REF``, which overrides even an
-    explicit ``use_pallas=True`` — it exists to bisect kernel bugs
-    without touching call sites).
+    honoured as-is unless a higher-precedence rule applies (see the
+    module docstring): the sharded fallback, then ``REPRO_FORCE_REF``,
+    then ``REPRO_FORCE_PALLAS`` — the two force envs are symmetric, and
+    REF wins when both are set.
     """
-    if _env_true(_FORCE_REF_ENV):
+    if sharded_ref_fallback():
         up = False
+    elif _env_true(_FORCE_REF_ENV):
+        up = False
+    elif _env_true(_FORCE_PALLAS_ENV):
+        up = True
     elif use_pallas is None:
         up = use_pallas_default()
     else:

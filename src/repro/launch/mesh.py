@@ -19,6 +19,28 @@ def batch_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def make_serving_mesh(spec: str = "auto"):
+    """Serving mesh from a spec string — the layout the ``Engine``'s
+    param/cache/decode-state shardings assume, always ("data", "model").
+
+    * ``"auto"`` (or ``""``): all local devices on the model axis,
+      shape ``(1, n_devices)`` — pure tensor parallelism, the
+      memory-bound serving default (weights and KV heads split n ways);
+    * ``"dp,mp"`` (e.g. ``"2,4"``; ``"2x4"`` also accepted): explicit
+      (data, model) axis sizes — batch slots shard over data, weights
+      and KV heads over model.
+    """
+    if spec in ("", "auto"):
+        shape = (1, len(jax.devices()))
+    else:
+        parts = [int(x) for x in spec.replace("x", ",").split(",")]
+        if len(parts) != 2 or any(p < 1 for p in parts):
+            raise ValueError(f"mesh spec {spec!r}: want 'dp,mp', "
+                             f"e.g. '2,4', or 'auto'")
+        shape = tuple(parts)
+    return jax.make_mesh(shape, ("data", "model"))
+
+
 # TPU v5e hardware constants (per chip) used by the roofline analysis.
 HW = {
     "peak_flops_bf16": 197e12,    # FLOP/s

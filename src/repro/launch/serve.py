@@ -61,6 +61,13 @@ def main(argv=None):
                     help="shared-prefix KV reuse budget in tokens (LRU; "
                          "0 = off, -1 keeps cfg.prefix_cache_tokens; "
                          "needs --prefill-chunk > 0, non-speculative)")
+    ap.add_argument("--mesh", default="",
+                    help="tensor-parallel serving mesh: 'dp,mp' (e.g. "
+                         "'2,4' = 2-way data x 4-way model), 'auto' = "
+                         "all local devices on the model axis, 'none' "
+                         "forces single-device even for a sharded "
+                         "variant, '' keeps cfg.mesh (see the 'sharded' "
+                         "variant)")
     ap.add_argument("--json", default="",
                     help="optional path to dump latency stats as JSON")
     args = ap.parse_args(argv)
@@ -87,7 +94,8 @@ def main(argv=None):
                     prefill_chunk=None if args.prefill_chunk < 0
                     else args.prefill_chunk,
                     prefix_cache_tokens=None if args.prefix_cache_tokens < 0
-                    else args.prefix_cache_tokens)
+                    else args.prefix_cache_tokens,
+                    mesh=args.mesh or None)
 
     rng = np.random.default_rng(args.seed)
     fe = cfg.frontend
@@ -108,17 +116,26 @@ def main(argv=None):
     stats = engine.latency_stats()
     print(f"arch={cfg.name} requests={args.requests} "
           f"batch={args.max_batch}")
+    if engine.mesh is not None:
+        shape = dict(zip(engine.mesh.axis_names,
+                         engine.mesh.devices.shape))
+        print(f"mesh: data={shape.get('data', 1)} "
+              f"model={shape.get('model', 1)} "
+              f"({engine.mesh.devices.size} devices)")
     print(f"finished={stats['n_finished']} "
           f"tokens={stats['tokens_generated']} wall={wall:.2f}s "
           f"({stats['tokens_generated']/wall:,.1f} tok/s)")
-    print(f"decode ms/step: mean={stats['decode_ms_mean']:.2f} "
-          f"p50={stats['decode_ms_p50']:.2f} p99={stats['decode_ms_p99']:.2f}")
-    print(f"ttft ms: mean={stats['ttft_ms_mean']:.1f} "
-          f"p50={stats['ttft_ms_p50']:.1f} p95={stats['ttft_ms_p95']:.1f} "
-          f"p99={stats['ttft_ms_p99']:.1f}")
-    print(f"itl ms: mean={stats['itl_ms_mean']:.2f} "
-          f"p50={stats['itl_ms_p50']:.2f} p95={stats['itl_ms_p95']:.2f} "
-          f"p99={stats['itl_ms_p99']:.2f}")
+    # latency keys are absent when a stream produced no samples (e.g.
+    # --max-new 1 never decodes): print NaN rather than fake zeros
+    g = lambda k: stats.get(k, float("nan"))  # noqa: E731
+    print(f"decode ms/step: mean={g('decode_ms_mean'):.2f} "
+          f"p50={g('decode_ms_p50'):.2f} p99={g('decode_ms_p99'):.2f}")
+    print(f"ttft ms: mean={g('ttft_ms_mean'):.1f} "
+          f"p50={g('ttft_ms_p50'):.1f} p95={g('ttft_ms_p95'):.1f} "
+          f"p99={g('ttft_ms_p99'):.1f}")
+    print(f"itl ms: mean={g('itl_ms_mean'):.2f} "
+          f"p50={g('itl_ms_p50'):.2f} p95={g('itl_ms_p95'):.2f} "
+          f"p99={g('itl_ms_p99'):.2f}")
     print(f"prefill jit entries={stats['prefill_jit_entries']}")
     if engine.prefill_chunk:
         line = (f"continuous batching: chunk={stats['prefill_chunk']} "

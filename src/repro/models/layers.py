@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.distribution.sharding import shard_activation
 
 NEG_INF = -1e30
 
@@ -259,6 +260,12 @@ def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
     if cfg.rope:
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
+    # decode-shaped activation rules: heads stay split over the model
+    # axis through the cache update + attention, matching the KV cache's
+    # own sharding (cache_shardings) so nothing re-lays-out per step
+    q = shard_activation(q, "act_heads")
+    k = shard_activation(k, "act_heads")
+    v = shard_activation(v, "act_heads")
     slot = jnp.mod(step, S)                    # (B,)
     bidx = jnp.arange(B)
     quant = "k_scale" in cache
@@ -328,6 +335,11 @@ def extend_into_cache(p, x, cfg: ModelConfig, cache, *, lengths=None,
     if cfg.rope:
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
+    # same decode-shaped head sharding as the single-token step (the
+    # extend path is the multi-token cached decode)
+    q = shard_activation(q, "act_heads")
+    k = shard_activation(k, "act_heads")
+    v = shard_activation(v, "act_heads")
     S = cache["k"].shape[1]
     if T > S:
         raise ValueError(f"extend window T={T} exceeds cache length S={S}")

@@ -309,6 +309,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache, embeddings=None,
 def decode_step(params, cfg: ModelConfig, token, cache):
     """token: (B, 1) ids. Returns (logits (B, 1, V), new_cache)."""
     x = embed_inputs(params, cfg, token)
+    x = shard_activation(x, "act_btd")
     x, new_cache, _ = _scan_blocks(params, x, cfg, mode="decode",
                                    cache=cache)
     return logits_from(params, cfg, x), new_cache
@@ -327,6 +328,7 @@ def extend_step(params, cfg: ModelConfig, tokens, cache, lengths=None,
     ``last_only`` (saves the (T-1)·V unembed when only the next-token
     distribution is needed, e.g. a prefill chunk)."""
     x = embed_inputs(params, cfg, tokens)
+    x = shard_activation(x, "act_btd")
     x, new_cache, _ = _scan_blocks(params, x, cfg, mode="extend",
                                    cache=cache, length=lengths)
     if last_only:

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models.model import Model
 from repro.serving.prefix_cache import PrefixCache
@@ -88,7 +89,8 @@ class Engine:
                  kv_cache_dtype: str = "",
                  draft: Any = None, spec_gamma: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 prefix_cache_tokens: Optional[int] = None):
+                 prefix_cache_tokens: Optional[int] = None,
+                 mesh: Any = None):
         """``params`` may be a quantized tree (``quant.quantize_params``):
         projections route through the fused dequantize-matmul inside the
         same jitted prefill/decode programs, nothing else changes.
@@ -120,6 +122,21 @@ class Engine:
         ``prefix_cache_tokens`` (with chunked prefill, non-speculative)
         caps the shared-prefix KV reuse budget in tokens; None follows
         ``cfg.prefix_cache_tokens``, 0 disables.
+
+        ``mesh`` enables tensor-parallel sharded serving: a
+        ``jax.sharding.Mesh`` with ("data", "model") axes, a spec string
+        ("auto" = all local devices on the model axis, "dp,mp" e.g.
+        "2,4" — see ``launch.mesh.make_serving_mesh``), or None to
+        follow ``cfg.mesh`` ("" / "none" disables). Params are placed by
+        ``param_shardings`` (attention/MLP weights split over the model
+        axis), the KV cache by ``cache_shardings`` (heads on model,
+        slots on data), decode state by ``batch_shardings``; every
+        jitted program is built with explicit in/out shardings so
+        donation still updates the cache in place and no per-step
+        re-layout occurs. Host-side state (queue, trie, sampler knobs)
+        stays replicated/host-resident. Pallas kernel ops fall back to
+        their jnp references under a model axis > 1
+        (``kernels.dispatch``).
         """
         if kv_cache_dtype not in ("", "int8"):
             raise ValueError(f"unsupported kv_cache_dtype "
@@ -151,6 +168,32 @@ class Engine:
         self._donate = (jax.default_backend() != "cpu") if donate is None \
             else donate
 
+        # --- tensor-parallel serving mesh ------------------------------ #
+        mesh_src = cfg.mesh if mesh is None else mesh
+        if isinstance(mesh_src, str):
+            if mesh_src in ("", "none", "off"):
+                mesh_src = None
+            else:
+                from repro.launch.mesh import make_serving_mesh
+                mesh_src = make_serving_mesh(mesh_src)
+        self.mesh = mesh_src
+        self._param_sh = self._cache_sh = self._draft_param_sh = None
+        self._draft_cache_sh = self._tok_sh = self._vec_sh = None
+        self._repl = None
+        if self.mesh is not None:
+            from repro.distribution import sharding as _SH
+            from repro.launch.mesh import batch_axes
+            self._SH = _SH
+            self._b_axes = batch_axes(self.mesh) or ("data",)
+            self._act_rules = _SH.default_activation_rules(
+                batch_axes=self._b_axes)
+            self._repl = NamedSharding(self.mesh, PartitionSpec())
+            # params placed once, by path rules; programs then pin the
+            # same shardings via in_shardings so no call ever re-lays
+            # them out
+            self._param_sh = _SH.param_shardings(self.params, self.mesh)
+            self.params = jax.device_put(self.params, self._param_sh)
+
         # host-side scheduling state
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_batch
@@ -170,6 +213,22 @@ class Engine:
         self.active = jnp.zeros((max_batch,), bool)
         self.eos = jnp.full((max_batch,), -1, jnp.int32)
         self.cache = model.make_cache(max_batch, cache_len)
+        if self.mesh is not None:
+            # KV cache: heads on the model axis, slots (batch) on data;
+            # decode state: leading batch dim on data; PRNG key replicated
+            self._cache_sh = self._SH.cache_shardings(
+                self.cache, self.mesh, self._b_axes)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
+            self._tok_sh = self._SH.batch_shardings(self.tokens, self.mesh,
+                                                    self._b_axes)
+            self._vec_sh = self._SH.batch_shardings(self.remaining,
+                                                    self.mesh, self._b_axes)
+            self.tokens = jax.device_put(self.tokens, self._tok_sh)
+            self.prev = jax.device_put(self.prev, self._tok_sh)
+            self.remaining = jax.device_put(self.remaining, self._vec_sh)
+            self.active = jax.device_put(self.active, self._vec_sh)
+            self.eos = jax.device_put(self.eos, self._vec_sh)
+            self.key = jax.device_put(self.key, self._repl)
 
         # per-step sampled-token trace: device arrays, harvested lazily.
         # Plain decode appends (B,) token vectors; mixed/spec/admission
@@ -224,6 +283,17 @@ class Engine:
             self._draft_model = dmodel
             self._draft_params = dparams
             self.draft_cache = dmodel.make_cache(max_batch, cache_len)
+            if self.mesh is not None:
+                # same rules as the target: the self-draft's params are
+                # (slices of) the target's, so they shard identically
+                self._draft_param_sh = self._SH.param_shardings(
+                    dparams, self.mesh)
+                self._draft_params = jax.device_put(dparams,
+                                                    self._draft_param_sh)
+                self._draft_cache_sh = self._SH.cache_shardings(
+                    self.draft_cache, self.mesh, self._b_axes)
+                self.draft_cache = jax.device_put(self.draft_cache,
+                                                  self._draft_cache_sh)
             # a spec step emits up to gamma+1 tokens per slot, so polls
             # must come ~(gamma+1)x as often to keep the post-finish
             # overshoot (device decoding an already-finished slot until
@@ -261,6 +331,44 @@ class Engine:
     # ------------------------------------------------------------ #
     # jitted programs
     # ------------------------------------------------------------ #
+    def _jit(self, fn, donate=(), in_sh=None, out_sh=None):
+        """``jax.jit`` with the engine's mesh wiring. Off-mesh this is a
+        plain jit. On a mesh, every program gets explicit
+        ``in_shardings``/``out_shardings`` (donated buffers keep their
+        layout, so the cache is updated in place and nothing is
+        re-laid-out between steps) and is *traced* inside the
+        activation-rules context — ``shard_activation`` call sites in
+        the models become real constraints and ``kernels.dispatch``
+        routes Pallas ops to their partitionable jnp references."""
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=donate)
+        jitted = jax.jit(fn, donate_argnums=donate,
+                         in_shardings=in_sh, out_shardings=out_sh)
+        mesh, rules = self.mesh, self._act_rules
+        from repro.distribution.sharding import activation_sharding
+
+        def wrapped(*args):
+            with activation_sharding(mesh, rules):
+                return jitted(*args)
+        wrapped._jit = jitted        # compile-count introspection (tests)
+        return wrapped
+
+    def program_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-specialization count per fused-step program. Under a
+        mesh this is the no-recompile guard: steady-state serving must
+        keep each program at one entry — a growing count means some
+        input's sharding/layout is churning step to step."""
+        out: Dict[str, int] = {}
+        for name, fn in (("step", self._step_fn),
+                         ("mixed", self._mixed_fn),
+                         ("admit_chunk", self._admit_chunk_fn)):
+            if fn is None:
+                continue
+            inner = getattr(fn, "_jit", fn)
+            if hasattr(inner, "_cache_size"):
+                out[name] = inner._cache_size()
+        return out
+
     def _build_step(self):
         """Fused decode: model step + sampling + slot bookkeeping, with the
         cache and decode state donated so XLA updates them in place."""
@@ -276,7 +384,12 @@ class Engine:
             return nxt[:, None], cache, remaining, new_active, key
 
         donate = (1, 2, 3, 4) if self._donate else ()
-        return jax.jit(step, donate_argnums=donate)
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r, tok, vec = self._repl, self._tok_sh, self._vec_sh
+            in_sh = (self._param_sh, self._cache_sh, tok, vec, vec, vec, r)
+            out_sh = (tok, self._cache_sh, vec, vec, r)
+        return self._jit(step, donate, in_sh, out_sh)
 
     @staticmethod
     def _slot_extend(model, params, cache, slot, chunk, n, last_only=True):
@@ -346,7 +459,13 @@ class Engine:
                     new_active, new_eos, key)
 
         donate = (1, 2, 3, 4, 5) if self._donate else ()
-        return jax.jit(mixed, donate_argnums=donate)
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r, tok, vec = self._repl, self._tok_sh, self._vec_sh
+            in_sh = (self._param_sh, self._cache_sh, tok, vec, vec, vec,
+                     r, r, r, r, r, r, r)
+            out_sh = (tok, tok, vec, self._cache_sh, vec, vec, vec, r)
+        return self._jit(mixed, donate, in_sh, out_sh)
 
     def _build_admit_chunk(self):
         """Spec-mode chunk program: advance one admitting request by up to
@@ -384,7 +503,15 @@ class Engine:
                     dcache, new_remaining, new_active, new_eos, key)
 
         donate = (2, 3, 4, 5, 6, 7, 8) if self._donate else ()
-        return jax.jit(admit, donate_argnums=donate)
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r, tok, vec = self._repl, self._tok_sh, self._vec_sh
+            in_sh = (self._param_sh, self._draft_param_sh, self._cache_sh,
+                     self._draft_cache_sh, tok, tok, vec, vec, vec, r,
+                     r, r, r, r, r, r, r, r)
+            out_sh = (tok, tok, tok, vec, self._cache_sh,
+                      self._draft_cache_sh, vec, vec, vec, r)
+        return self._jit(admit, donate, in_sh, out_sh)
 
     def _build_spec_step(self):
         """One fused draft–verify–accept program (static shapes):
@@ -496,7 +623,15 @@ class Engine:
                     cache, dcache, remaining, new_active, key)
 
         donate = (2, 3, 4, 5, 6, 7) if self._donate else ()
-        return jax.jit(spec, donate_argnums=donate)
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r, tok, vec = self._repl, self._tok_sh, self._vec_sh
+            in_sh = (self._param_sh, self._draft_param_sh, self._cache_sh,
+                     self._draft_cache_sh, tok, tok, vec, vec, vec, r)
+            # tok's (batch, None) spec also covers the (B, gamma+1) block
+            out_sh = (tok, tok, tok, vec, self._cache_sh,
+                      self._draft_cache_sh, vec, vec, r)
+        return self._jit(spec, donate, in_sh, out_sh)
 
     def _get_prefill(self, bucket: int, masked: bool, has_emb: bool,
                      for_draft: bool = False):
@@ -525,7 +660,17 @@ class Engine:
             return first, cache
 
         donate = (5,) if self._donate else ()
-        fn = jax.jit(prefill, donate_argnums=donate)
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r = self._repl
+            cache_sh = self._draft_cache_sh if for_draft else self._cache_sh
+            # the single-row prompt/length/emb inputs are host-built and
+            # tiny: replicated (the slot-direct cache write is the only
+            # sharded consumer)
+            in_sh = (self._draft_param_sh if for_draft else self._param_sh,
+                     r, r, (r if has_emb else None), r, cache_sh, r)
+            out_sh = (r, cache_sh)
+        fn = self._jit(prefill, donate, in_sh, out_sh)
         self._prefill_jits[kf] = fn
         return fn
 
@@ -598,9 +743,37 @@ class Engine:
             raise ValueError(kind)
 
         donate = (0,) if (self._donate and kind != "extract") else ()
-        jitted = jax.jit(fn, donate_argnums=donate)
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r = self._repl
+            if kind == "reset":
+                in_sh, out_sh = (self._cache_sh, r), self._cache_sh
+            elif kind == "materialize":
+                in_sh = (self._cache_sh, self._kv_slice_shardings(P), r)
+                out_sh = self._cache_sh
+            else:  # extract: the stored slice keeps the cache's layout,
+                # so a later materialize of the same entry is copy-only
+                in_sh = (self._cache_sh, r)
+                out_sh = self._kv_slice_shardings(P)
+        jitted = self._jit(fn, donate, in_sh, out_sh)
         self._slot_jits[jkey] = jitted
         return jitted
+
+    def _kv_slice_shardings(self, P: int):
+        """``cache_shardings`` for the (nb, 1, P, heads, hd) KV-slice
+        pytree the extract/materialize slot programs exchange with the
+        prefix cache — heads stay on the model axis, the single batch
+        row is replicated."""
+        def ext(node):
+            out = {}
+            for k2 in ("k", "v", "k_scale", "v_scale"):
+                if k2 in node:
+                    out[k2] = jax.ShapeDtypeStruct(
+                        node[k2].shape[:1] + (1, P) + node[k2].shape[3:],
+                        node[k2].dtype)
+            return out
+        shapes = self._walk_attn(self.cache, ext)
+        return self._SH.cache_shardings(shapes, self.mesh, self._b_axes)
 
     def _get_mixed(self):
         if self._mixed_fn is None:
@@ -1070,27 +1243,28 @@ class Engine:
             pc.hits = pc.misses = pc.hit_tokens = pc.evictions = 0
 
     # ------------------------------------------------------------ #
+    @staticmethod
+    def _pct_stats(stats: Dict[str, float], prefix: str, samples,
+                   pcts: Tuple[int, ...]) -> None:
+        """Add mean/percentile keys for one latency stream — only when it
+        actually produced samples. An empty stream contributes *no* keys
+        (rather than fabricated 0.0 latencies that would poison benchmark
+        artifacts): consumers treat a missing key as "no data"."""
+        arr = np.asarray(samples, np.float64)
+        if arr.size == 0:
+            return
+        stats[f"{prefix}_mean"] = float(arr.mean() * 1e3)
+        for p in pcts:
+            stats[f"{prefix}_p{p}"] = float(np.percentile(arr, p) * 1e3)
+
     def latency_stats(self) -> Dict[str, float]:
+        """Latency summary. The ``decode_ms_*`` / ``ttft_ms_*`` /
+        ``itl_ms_*`` keys are present only when the corresponding stream
+        has at least one sample — a fresh (or reset) engine reports the
+        counters alone."""
         drop = 1 if self._drop_compile_step else 0
-        ts = np.asarray(self.step_times[drop:] or [0.0])
         finished = [r for r in self.responses.values() if r.finished]
-        ttft = np.asarray([r.first_token_s - r.submitted_s
-                           for r in self.requests.values()
-                           if r.first_token_s] or [0.0])
-        itl = np.asarray([g for lst in self._itl.values() for g in lst]
-                         or [0.0])
-        stats = {
-            "decode_ms_mean": float(ts.mean() * 1e3),
-            "decode_ms_p50": float(np.percentile(ts, 50) * 1e3),
-            "decode_ms_p99": float(np.percentile(ts, 99) * 1e3),
-            "ttft_ms_mean": float(ttft.mean() * 1e3),
-            "ttft_ms_p50": float(np.percentile(ttft, 50) * 1e3),
-            "ttft_ms_p95": float(np.percentile(ttft, 95) * 1e3),
-            "ttft_ms_p99": float(np.percentile(ttft, 99) * 1e3),
-            "itl_ms_mean": float(itl.mean() * 1e3),
-            "itl_ms_p50": float(np.percentile(itl, 50) * 1e3),
-            "itl_ms_p95": float(np.percentile(itl, 95) * 1e3),
-            "itl_ms_p99": float(np.percentile(itl, 99) * 1e3),
+        stats: Dict[str, float] = {
             "n_finished": len(finished),
             "tokens_generated": sum(r.n_generated for r in finished),
             "prefill_jit_entries": len(self._prefill_jits),
@@ -1098,6 +1272,15 @@ class Engine:
             "prefill_chunk": self.prefill_chunk,
             "chunked_admissions": self._chunked_admissions,
         }
+        self._pct_stats(stats, "decode_ms", self.step_times[drop:],
+                        (50, 99))
+        self._pct_stats(stats, "ttft_ms",
+                        [r.first_token_s - r.submitted_s
+                         for r in self.requests.values()
+                         if r.first_token_s], (50, 95, 99))
+        self._pct_stats(stats, "itl_ms",
+                        [g for lst in self._itl.values() for g in lst],
+                        (50, 95, 99))
         if self.prefix_cache is not None:
             stats.update(self.prefix_cache.stats())
         if self.spec_gamma:

@@ -33,27 +33,40 @@ class Sampler:
         if self.top_p < 1.0:
             logits = self._nucleus(logits)
         if self.top_k:
-            vals, idx = jax.lax.top_k(logits, self.top_k)
+            vals, idx = self._topk(logits)
             choice = jax.random.categorical(key, vals)
             return jnp.take_along_axis(idx, choice[:, None],
                                        axis=-1)[:, 0].astype(jnp.int32)
         return jax.random.categorical(key, logits).astype(jnp.int32)
 
+    def _topk(self, logits):
+        """THE top-k selection rule: ``lax.top_k``, which breaks ties at
+        the k-th value by lowest index. Every path that restricts to k
+        tokens (``__call__`` sampling, ``filtered_logits`` masking) must
+        select through this one function — when the k-th value is tied,
+        "all entries >= kth" keeps more than k tokens and the speculative
+        accept/resample distribution q/p would disagree with what the
+        engine actually samples."""
+        return jax.lax.top_k(logits, self.top_k)
+
     def filtered_logits(self, logits):
         """The post-knob logits over the *full* vocab: temperature scaling
         then nucleus then top-k masking (masked entries at NEG_INF), so
         ``softmax(filtered_logits(l))`` is exactly the distribution
-        ``__call__`` samples from. Accepts any leading shape (..., V).
-        Greedy (temperature 0) has no finite-temperature distribution;
-        callers special-case it."""
+        ``__call__`` samples from — including at ties: the surviving set
+        is the *same k entries* ``_topk`` selects, scattered back into
+        the full vocab, not "every logit >= the k-th value". Accepts any
+        leading shape (..., V). Greedy (temperature 0) has no
+        finite-temperature distribution; callers special-case it."""
         assert self.temperature != 0.0
         lead = logits.shape[:-1]
         logits = logits.reshape(-1, logits.shape[-1]) / self.temperature
         if self.top_p < 1.0:
             logits = self._nucleus(logits)
         if self.top_k:
-            kth = jax.lax.top_k(logits, self.top_k)[0][:, -1:]
-            logits = jnp.where(logits >= kth, logits, NEG_INF)
+            vals, idx = self._topk(logits)
+            rows = jnp.arange(logits.shape[0])[:, None]
+            logits = jnp.full_like(logits, NEG_INF).at[rows, idx].set(vals)
         return logits.reshape(lead + (-1,))
 
     def speculative(self, key, draft_tokens, draft_logits, target_logits):

@@ -133,6 +133,7 @@ def test_chunked_prefill_cache_bit_equality():
 
 
 @pytest.mark.parametrize("chunk", [4, 16])
+@pytest.mark.slow
 def test_chunked_engine_matches_legacy(chunk):
     """Engine level: more requests than slots, prompts shorter and longer
     than the chunk — greedy output must equal the monolithic engine's,
@@ -145,6 +146,7 @@ def test_chunked_engine_matches_legacy(chunk):
     assert st["prefill_chunk"] == chunk
 
 
+@pytest.mark.slow
 def test_chunked_max_new_one_and_eos_free_slot():
     """max_new=1: the chunked admission emits exactly one token and never
     arms the slot; eos on the first token behaves the same way."""
@@ -163,6 +165,7 @@ def test_chunked_max_new_one_and_eos_free_slot():
     assert resp[1].finished and resp[1].n_generated == 3
 
 
+@pytest.mark.slow
 def test_chunked_falls_back_for_unsupported_stacks():
     """SSM stacks have no extend path: the knob degrades to monolithic
     prefill instead of failing, with identical output."""
@@ -187,6 +190,7 @@ def test_chunked_falls_back_for_unsupported_stacks():
 # ------------------------------------------------------------------ #
 # shared-prefix KV reuse
 # ------------------------------------------------------------------ #
+@pytest.mark.slow
 def test_prefix_hit_matches_cold_path():
     """Requests sharing a system-prompt head: the second admission
     materialises the stored prefix instead of recomputing it, with
@@ -205,6 +209,7 @@ def test_prefix_hit_matches_cold_path():
     assert st["prefix_entries"] >= 1
 
 
+@pytest.mark.slow
 def test_prefix_eviction_under_token_cap():
     """Distinct prefixes past the token budget evict LRU entries; stored
     tokens never exceed the cap and correctness is unaffected."""
@@ -253,6 +258,7 @@ def test_prefix_cache_trie_unit():
 # ------------------------------------------------------------------ #
 # composition: mixed step + int8 KV + speculative decoding
 # ------------------------------------------------------------------ #
+@pytest.mark.slow
 def test_chunked_composes_with_int8_kv():
     base, _ = _run(kv_cache_dtype="int8")
     out, eng = _run(kv_cache_dtype="int8", prefill_chunk=8,
@@ -261,6 +267,7 @@ def test_chunked_composes_with_int8_kv():
     assert eng.latency_stats()["chunked_admissions"] == len(_PROMPTS)
 
 
+@pytest.mark.slow
 def test_chunked_composes_with_speculative_decoding():
     """Chunked admission runs as its own extend program right before the
     fused spec step; greedy output stays token-identical to the plain
@@ -276,6 +283,7 @@ def test_chunked_composes_with_speculative_decoding():
     assert eng.prefix_cache is None
 
 
+@pytest.mark.slow
 def test_chunked_spec_with_int8_kv():
     base, _ = _run(max_new=8, kv_cache_dtype="int8")
     out, _ = _run(max_new=8, kv_cache_dtype="int8", draft="int8@1",

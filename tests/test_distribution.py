@@ -43,6 +43,26 @@ def test_moe_expert_parallel_with_fallback():
         == (None, "model", None)
 
 
+def test_qtensor_leaves_inherit_weight_rule():
+    """Quantized weights (QTensor q/q4/scale under a linear's w) shard
+    like the full-precision weight they replace."""
+    # int8 q: same shape as w -> same spec
+    assert _spec("blocks/sub0/attn/wq/w/q", (48, 6144, 6144)) \
+        == (None, None, "model")
+    assert _spec("blocks/sub0/attn/wo/w/q", (6144, 6144)) == ("model", None)
+    # int4 q4: K halved by packing, N intact -> output-dim sharding holds
+    assert _spec("blocks/sub0/mlp/wi/w/q4", (3072, 24576)) \
+        == (None, "model")
+    # per-output-channel scale: last dim follows w's output dim
+    assert _spec("blocks/sub0/attn/wq/w/scale", (6144,)) == ("model",)
+    assert _spec("blocks/sub0/mlp/wi/w/scale", (192, 24576)) \
+        == (None, "model")
+    # wo shards its input dim -> scale (per output channel) replicates
+    assert _spec("blocks/sub0/attn/wo/w/scale", (6144,)) == (None,)
+    # rms-norm 'scale' is NOT a qtensor leaf: replicated by the default
+    assert _spec("blocks/sub0/ln1/scale", (6144,)) == (None,)
+
+
 def test_optimizer_state_paths_match():
     # opt state mirrors params under m/ and v/ prefixes
     assert _spec("opt/m/blocks/sub0/mlp/wi/w", (2048, 8192)) \

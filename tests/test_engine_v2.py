@@ -68,6 +68,7 @@ def test_bucket_length_caps_and_floors():
 # ------------------------------------------------------------------ #
 # eviction / refill correctness
 # ------------------------------------------------------------------ #
+@pytest.mark.slow
 def test_slot_refill_matches_sequential_reference():
     """More requests than slots -> every slot is recycled at least once;
     greedy output must equal the unbatched model-API reference, proving the
@@ -141,6 +142,25 @@ def test_max_new_tokens_one_finishes_at_prefill():
     resp = eng.run()
     assert all(r.finished and r.n_generated == 1 for r in resp.values())
     assert eng.latency_stats()["decode_steps"] == 0
+
+
+def test_latency_stats_empty_streams_omit_keys():
+    """A stream that produced no samples contributes no keys — a fresh
+    engine must not fabricate 0.0 percentiles (they used to flow into
+    benchmark artifacts as fake zero latencies)."""
+    eng = _engine()
+    st = eng.latency_stats()
+    assert not [k for k in st if k.startswith(("decode_ms", "ttft_ms",
+                                               "itl_ms"))]
+    assert st["n_finished"] == 0
+    # max_new=1: finishes at prefill — TTFT exists, decode/ITL never ran
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3]),
+                       max_new_tokens=1))
+    eng.run()
+    st = eng.latency_stats()
+    assert "ttft_ms_p50" in st and st["ttft_ms_p50"] > 0.0
+    assert "decode_ms_p50" not in st and "itl_ms_p50" not in st
+    assert st["n_finished"] == 1
 
 
 def test_eos_on_first_token_frees_slot():

@@ -36,6 +36,40 @@ def test_force_pallas(monkeypatch):
     assert dispatch.resolve() == (True, True)  # interpret off-TPU
 
 
+def test_force_pallas_overrides_explicit_false(monkeypatch):
+    """Symmetric with REPRO_FORCE_REF: the force env wins over an
+    explicit call-site ``use_pallas=False``."""
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    monkeypatch.setattr(dispatch, "backend", lambda: "cpu")
+    assert dispatch.resolve(use_pallas=False)[0] is True
+
+
+def test_force_ref_wins_when_both_envs_set(monkeypatch):
+    """REF is the ground truth the Pallas path is validated against."""
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    monkeypatch.setattr(dispatch, "backend", lambda: "tpu")
+    assert dispatch.resolve()[0] is False
+    assert dispatch.resolve(use_pallas=True)[0] is False
+
+
+def test_sharded_fallback_beats_everything(monkeypatch):
+    """With a model axis > 1 active, every op takes the reference path —
+    even over an explicit use_pallas=True or REPRO_FORCE_PALLAS."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    monkeypatch.setattr(dispatch, "backend", lambda: "tpu")
+    monkeypatch.setattr(dispatch, "sharded_ref_fallback", lambda: True)
+    assert dispatch.resolve()[0] is False
+    assert dispatch.resolve(use_pallas=True)[0] is False
+
+
+def test_sharded_fallback_inactive_outside_context():
+    """No activation-sharding context -> the fallback never triggers (the
+    single-device engine is unaffected)."""
+    assert dispatch.sharded_ref_fallback() is False
+
+
 def test_ops_route_through_dispatch(monkeypatch):
     """With the env forcing the reference path, an op called with
     defaults must match an explicit use_pallas=False call bit-for-bit."""

@@ -1,0 +1,66 @@
+"""Sampler masking-rule consistency: ``filtered_logits`` must describe
+exactly the distribution ``__call__`` samples from, including when the
+k-th logit is tied — the speculative accept/resample rule consumes
+``filtered_logits`` as q/p, so any disagreement breaks the "every emitted
+token is an exact sample from the target" guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import NEG_INF, Sampler
+
+
+def _kept(filtered):
+    return np.flatnonzero(np.asarray(filtered[0]) > NEG_INF / 2)
+
+
+def test_topk_tie_at_kth_value_keeps_exactly_k():
+    """A 5-way tie spanning the k-th value must survive as exactly k
+    entries (the old ">= kth" rule kept all 6 tied-or-better logits)."""
+    s = Sampler(temperature=1.0, top_k=4)
+    logits = jnp.asarray([[3.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0]])
+    kept = _kept(s.filtered_logits(logits))
+    assert len(kept) == 4
+    # and it is the *same* k entries lax.top_k selects (stable tie-break)
+    _, idx = jax.lax.top_k(logits, 4)
+    assert set(kept) == set(np.asarray(idx[0]).tolist())
+
+
+def test_topk_call_samples_only_from_filtered_support():
+    """Every token ``__call__`` can emit lies in ``filtered_logits``'s
+    support, and the two induced distributions agree (shared masking
+    rule) — checked on an all-tied row, the worst case for ties."""
+    s = Sampler(temperature=1.0, top_k=3)
+    logits = jnp.ones((1, 8))                     # fully tied
+    filt = s.filtered_logits(logits)
+    kept = _kept(filt)
+    assert len(kept) == 3
+    seen = {int(s(jax.random.PRNGKey(i), logits)[0]) for i in range(64)}
+    assert seen <= set(kept.tolist())
+    # q from filtered_logits: uniform over the kept set, zero elsewhere
+    q = np.asarray(jax.nn.softmax(filt, axis=-1)[0])
+    np.testing.assert_allclose(q[kept], 1.0 / 3, rtol=1e-6)
+    assert q[[i for i in range(8) if i not in kept]].max() < 1e-9
+
+
+def test_topk_without_ties_unchanged():
+    s = Sampler(temperature=0.7, top_k=2)
+    logits = jnp.asarray([[0.5, 3.0, -1.0, 2.0]])
+    kept = _kept(s.filtered_logits(logits))
+    assert set(kept.tolist()) == {1, 3}
+    filt = np.asarray(s.filtered_logits(logits)[0])
+    np.testing.assert_allclose(filt[[1, 3]],
+                               np.asarray([3.0, 2.0]) / 0.7, rtol=1e-6)
+
+
+def test_speculative_greedy_tie_rows_still_prefix_exact():
+    """Greedy speculative accept (argmax path) is unaffected by the
+    masking rule but must keep working alongside it."""
+    s = Sampler()
+    draft = jnp.asarray([[5, 7]], jnp.int32)
+    tgt = jnp.zeros((1, 3, 10)).at[0, 0, 5].set(1.0).at[0, 1, 7].set(1.0) \
+        .at[0, 2, 1].set(1.0)
+    block, n_acc = s.speculative(jax.random.PRNGKey(0), draft,
+                                 jnp.zeros((1, 2, 10)), tgt)
+    assert int(n_acc[0]) == 2
+    assert np.asarray(block[0]).tolist() == [5, 7, 1]

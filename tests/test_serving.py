@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
 from repro.core.deploy import DeploymentPlan, deploy
@@ -33,6 +34,7 @@ def test_engine_finishes_all_mixed_length_requests():
     assert all(r.finished and r.n_generated == 8 for r in resp.values())
 
 
+@pytest.mark.slow
 def test_engine_greedy_matches_single_request_decode():
     """A request served in a shared batch must produce the same greedy
     tokens as served alone — slot isolation."""

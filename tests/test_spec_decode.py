@@ -38,6 +38,7 @@ def _run(max_new=10, prompts=_PROMPTS, sampler=None, **kw):
 # greedy token-identity (the speculative-decoding contract)
 # ------------------------------------------------------------------ #
 @pytest.mark.parametrize("draft", ["fp@1", "int8@1", "int8"])
+@pytest.mark.slow
 def test_greedy_identity(draft):
     base, _ = _run()
     out, eng = _run(draft=draft, spec_gamma=4)
@@ -48,6 +49,7 @@ def test_greedy_identity(draft):
     assert st["decode_steps"] < sum(len(t) - 1 for t in base.values())
 
 
+@pytest.mark.slow
 def test_rejection_resample_path_is_exercised():
     """A truncated (half-depth) draft disagrees with the target on this
     stream, so both the accept and the reject-resample paths run — and
@@ -59,6 +61,7 @@ def test_rejection_resample_path_is_exercised():
     assert 0.0 < acc < 1.0, f"need both paths exercised, got {acc}"
 
 
+@pytest.mark.slow
 def test_eos_inside_draft_window():
     """eos produced mid-window must cut generation exactly there, even
     though the fused step speculates past it."""
@@ -81,6 +84,7 @@ def test_eos_inside_draft_window():
     assert outs[True] == outs[False]
 
 
+@pytest.mark.slow
 def test_max_new_tokens_lands_mid_window():
     """max_new that is not a multiple of the per-step emit count must be
     honoured exactly (the device overshoots; harvest truncates)."""
@@ -92,6 +96,7 @@ def test_max_new_tokens_lands_mid_window():
         assert all(len(t) == mn for t in out.values())
 
 
+@pytest.mark.slow
 def test_spec_with_int8_kv_cache():
     """Speculative decoding composes with the quantized KV cache (verify
     writes quantize-on-write like prefill/decode)."""
@@ -100,6 +105,7 @@ def test_spec_with_int8_kv_cache():
     assert out == base
 
 
+@pytest.mark.slow
 def test_stochastic_spec_completes():
     """Sampled (non-greedy) speculative decoding: every emitted token is
     an exact target-distribution sample by the accept/resample rule, so
