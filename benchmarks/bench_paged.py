@@ -1,0 +1,174 @@
+"""Paged-KV memory-scaling benchmark: streams served at fixed KV memory.
+
+  PYTHONPATH=src python -m benchmarks.bench_paged [--smoke] \
+      [--out BENCH_paged.json]
+
+The contiguous engine pays ``max_batch x cache_len`` tokens of KV
+whether or not anyone is using them, so a fixed KV budget of M token
+slots caps concurrency at ``M // cache_len`` streams. The paged engine
+(``serving/paged_kv.py``) allocates pages as positions are written and
+releases them at harvest, so the same budget sustains as many streams
+as actually-live tokens fit — this bench drives both layouts through an
+identical workload under one budget and reports
+
+* greedy token-identity paged vs contiguous (asserted, not just noted),
+* peak concurrent streams under the budget (paged must beat contiguous),
+* allocated KV bytes per live token at peak occupancy,
+* peak pool utilization and page-lifecycle counters.
+
+Emits the unified artifact schema (``benchmarks/schema.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks import schema
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving import paged_kv
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+CACHE_LEN = 64
+PAGE_SIZE = 8
+KV_BUDGET = 256       # token slots of KV memory shared by both layouts
+
+
+def _kv_bytes(cache) -> int:
+    """Allocated K/V bytes (payload + scales) of an engine cache."""
+    total = 0
+
+    def count(node):
+        for k in ("k", "v", "k_scale", "v_scale") + paged_kv.POOL_KEYS:
+            if k in node:
+                total_ref[0] += node[k].nbytes
+        return node
+    total_ref = [0]
+    paged_kv.walk_attn(cache, count)
+    total = total_ref[0]
+    return total
+
+
+def _drive(eng: Engine, prompts, max_new: int) -> Tuple[Dict, Dict]:
+    """Submit everything up front and drain with ticks, sampling peak
+    concurrency and (paged) peak pool occupancy along the way."""
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    peak_streams = peak_pages = peak_tokens = 0
+    t0 = time.perf_counter()
+    guard = 0
+    while eng.has_work and guard < 100_000:
+        guard += max(1, eng.tick(2))
+        peak_streams = max(peak_streams, eng.active_slots)
+        live = sum(len(r.prompt) + len(eng.responses[r.uid].tokens)
+                   for r in eng.slots if r is not None)
+        peak_tokens = max(peak_tokens, live)
+        if eng.paged:
+            peak_pages = max(peak_pages, eng._paged.live_pages)
+    wall = time.perf_counter() - t0
+    out = {u: r.tokens for u, r in eng.responses.items()}
+    st = eng.latency_stats()
+    return out, {"peak_streams": peak_streams, "peak_pages": peak_pages,
+                 "peak_live_tokens": peak_tokens, "wall_s": wall,
+                 "tokens_generated": st["tokens_generated"],
+                 **{k: v for k, v in st.items() if k.startswith("kv_")}}
+
+
+def run(n_requests: int = 12, max_new: int = 8,
+        paged_slots: int = 8) -> Dict:
+    cfg = get_arch("llama3.2-1b", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(12, 28)))
+               for _ in range(n_requests)]
+
+    contig_cap = KV_BUDGET // CACHE_LEN
+    eng_c = Engine(model, params, max_batch=contig_cap,
+                   cache_len=CACHE_LEN, sampler=Sampler())
+    out_c, row_c = _drive(eng_c, prompts, max_new)
+    row_c["max_batch"] = contig_cap
+    row_c["kv_bytes"] = _kv_bytes(eng_c.cache)
+
+    num_pages = KV_BUDGET // PAGE_SIZE
+    eng_p = Engine(model, params, max_batch=paged_slots,
+                   cache_len=CACHE_LEN, sampler=Sampler(), paged=True,
+                   page_size=PAGE_SIZE, num_pages=num_pages)
+    out_p, row_p = _drive(eng_p, prompts, max_new)
+    row_p["max_batch"] = paged_slots
+    pool_bytes = _kv_bytes(eng_p.cache)
+    # per-page cost excludes the trash page (a fixed +1 overhead)
+    row_p["kv_bytes"] = pool_bytes * num_pages // (num_pages + 1)
+
+    # the layout must be bit-invisible in the token stream
+    assert out_p == out_c, "paged output diverged from contiguous"
+
+    # the headline claim: same KV budget, more concurrent streams —
+    # allocated-on-demand pages vs always-resident per-slot rings
+    assert row_p["peak_streams"] > contig_cap, \
+        (row_p["peak_streams"], contig_cap)
+
+    bpt_c = row_c["kv_bytes"] / max(row_c["peak_live_tokens"], 1)
+    page_bytes = pool_bytes / (num_pages + 1)
+    bpt_p = page_bytes * row_p["peak_pages"] \
+        / max(row_p["peak_live_tokens"], 1)
+    return {"contiguous": row_c, "paged": row_p,
+            "kv_bytes_per_live_token_contig": bpt_c,
+            "kv_bytes_per_live_token_paged": bpt_p,
+            "pool_utilization_peak": row_p["peak_pages"] / num_pages,
+            "kv_budget_tokens": KV_BUDGET}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~30s CI mode: fewer requests")
+    ap.add_argument("--out", default="BENCH_paged.json",
+                    help="JSON output path ('' to skip)")
+    args = ap.parse_args(argv)
+
+    res = run(n_requests=8, max_new=6) if args.smoke else run()
+    rc, rp = res["contiguous"], res["paged"]
+    print(f"paged KV: fixed budget of {res['kv_budget_tokens']} KV token "
+          f"slots (cache_len={CACHE_LEN}, page={PAGE_SIZE})")
+    print(f"{'layout':>10s} {'streams':>8s} {'B/live-tok':>11s} "
+          f"{'tok/s':>8s}")
+    for name, row, bpt in (
+            ("contig", rc, res["kv_bytes_per_live_token_contig"]),
+            ("paged", rp, res["kv_bytes_per_live_token_paged"])):
+        print(f"{name:>10s} {row['peak_streams']:8d} {bpt:11.0f} "
+              f"{row['tokens_generated'] / row['wall_s']:8.1f}")
+    print(f"pool utilization peak: {res['pool_utilization_peak']:.2f}, "
+          f"cow splits: {rp['kv_cow_splits']}, "
+          f"pages released: {rp['kv_pages_released']}")
+
+    if args.out:
+        metrics = [
+            schema.metric("streams_at_fixed_mem_paged", "streams",
+                          rp["peak_streams"]),
+            schema.metric("streams_at_fixed_mem_contig", "streams",
+                          rc["peak_streams"]),
+            schema.metric("kv_bytes_per_live_token_paged", "B/tok",
+                          res["kv_bytes_per_live_token_paged"]),
+            schema.metric("kv_bytes_per_live_token_contig", "B/tok",
+                          res["kv_bytes_per_live_token_contig"]),
+            schema.metric("pool_utilization_peak", "frac",
+                          res["pool_utilization_peak"]),
+        ]
+        schema.write(args.out, schema.payload(
+            "paged_kv", run=schema.run_meta(
+                smoke=args.smoke, arch="llama3.2-1b-reduced",
+                kv_budget_tokens=KV_BUDGET, cache_len=CACHE_LEN,
+                page_size=PAGE_SIZE),
+            metrics=metrics, data=res))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -60,6 +60,19 @@ def bench_serving(csv):
               f"p50={r['decode_ms_p50']:.2f}ms p99={r['decode_ms_p99']:.2f}ms")
 
 
+def bench_paged(csv):
+    from benchmarks.bench_paged import run
+    print(f"\n== paged KV: streams at fixed KV memory ==")
+    res = run(n_requests=8, max_new=6)
+    rc, rp = res["contiguous"], res["paged"]
+    csv.append(("paged_streams", rp["peak_streams"],
+                f"contig={rc['peak_streams']}"))
+    print(f"  contig streams={rc['peak_streams']} "
+          f"paged streams={rp['peak_streams']} "
+          f"(budget {res['kv_budget_tokens']} KV tokens, "
+          f"pool peak {res['pool_utilization_peak']:.2f})")
+
+
 def bench_roofline(csv):
     """Summarise dry-run roofline artifacts if present."""
     from repro.launch.roofline import load_all
@@ -82,7 +95,8 @@ def bench_roofline(csv):
 
 
 ALL = {"fig2": bench_fig2, "fig3": bench_fig3, "kernels": bench_kernels,
-       "serving": bench_serving, "roofline": bench_roofline}
+       "serving": bench_serving, "paged": bench_paged,
+       "roofline": bench_roofline}
 
 
 def main() -> None:

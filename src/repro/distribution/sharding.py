@@ -253,6 +253,14 @@ def cache_shardings(cache_shapes, mesh: Mesh, batch_axes=("data",),
         "v_scale": (None, batch, seq_axis, heads),
         "conv": (None, batch, None, m),
         "ssm": (None, batch, m, None, None),
+        # paged KV: pools (nb, P+1, ps, Hkv, hd) shard heads on the model
+        # axis (pages are shared across the batch so neither the page nor
+        # batch axis applies); block tables (nb, B, NB) follow the batch
+        "kp": (None, None, None, heads, None),
+        "vp": (None, None, None, heads, None),
+        "kp_scale": (None, None, None, heads),
+        "vp_scale": (None, None, None, heads),
+        "bt": (None, batch, None),
     }
 
     def one(path, leaf):

@@ -76,6 +76,84 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
         o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(bt_ref, q_ref, k_ref, v_ref, pos_ref, qpos_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                         window: int, bk: int, R: int):
+    # the block table is consumed by the index maps (scalar prefetch);
+    # inside the body the K/V tile is already the right page
+    del bt_ref
+    _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, scale=scale, window=window,
+                   bk=bk, R=R)
+
+
+def paged_decode_attention_pallas(q, k_pool, v_pool, block_table, pos, q_pos,
+                                  *, window=0, interpret=False):
+    """Paged variant: identical online-softmax body, but the KV grid
+    dimension walks *logical blocks* and the K/V tile for step j is
+    fetched from pool page ``block_table[seq, j]`` via a scalar-prefetch
+    index map — the gather never materialises a contiguous copy of the
+    cache. The KV tile size is the page size, so one grid step stages
+    exactly one page.
+
+    q: (B, T, Hq, hd) (or (B, Hq, hd) single-query); k_pool, v_pool:
+    (P + 1, ps, Hkv, hd) — last pool index is the trash page unallocated
+    block-table entries point at (its junk is masked by ``pos == -1``);
+    block_table: (B, NB) int32; pos: (B, S = NB * ps); q_pos: (B,) or
+    (B, T)."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q, q_pos = q[:, None], q_pos[:, None]
+    B, T, Hq, hd = q.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NB = block_table.shape[1]
+    G = Hq // Hkv
+    R = T * G
+    qg = q.reshape(B, T, Hkv, G, hd).transpose(0, 2, 1, 3, 4) \
+          .reshape(B * Hkv, R, hd)
+    kg = jnp.transpose(k_pool, (2, 0, 1, 3))          # (Hkv, P+1, ps, hd)
+    vg = jnp.transpose(v_pool, (2, 0, 1, 3))
+    posg = jnp.repeat(pos, Hkv, axis=0)               # (B*Hkv, S)
+    qpos_r = jnp.repeat(q_pos.astype(jnp.int32), G, axis=1)   # (B, R)
+    qposg = jnp.repeat(qpos_r, Hkv, axis=0)           # (B*Hkv, R)
+
+    grid = (B * Hkv, 1, NB)
+    kernel = functools.partial(_paged_decode_kernel, scale=1.0 / (hd ** 0.5),
+                               window=window, bk=ps, R=R)
+    # grid index b covers (sequence, kv head): seq = b // Hkv, head =
+    # b % Hkv — matching the dense kernel's B*Hkv regrouping. Index maps
+    # receive the scalar-prefetch operands *after* the grid indices
+    # (the kernel body receives them first).
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, R, hd), lambda b, h, j, bt: (b, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, bt: (b % Hkv, bt[b // Hkv, j], 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, bt: (b % Hkv, bt[b // Hkv, j], 0, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, j, bt: (b, j)),
+            pl.BlockSpec((1, R), lambda b, h, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, hd), lambda b, h, j, bt: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R, _LANES), jnp.float32),
+            pltpu.VMEM((R, _LANES), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, R, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), qg, kg, vg, posg, qposg)
+    out = out.reshape(B, Hkv, T, G, hd).transpose(0, 2, 1, 3, 4) \
+             .reshape(B, T, Hq, hd)
+    return out[:, 0] if squeeze else out
+
+
 def decode_attention_pallas(q, k, v, pos, q_pos, *, window=0, bk=128,
                             interpret=False):
     """q: (B, Hq, hd) single-query or (B, T, Hq, hd) multi-query rows;

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.decode_attention import ref as _ref
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas)
 
 
 def cached_decode_attention(q, k_cache, v_cache, pos, q_pos, *, window=0,
@@ -30,3 +31,25 @@ def cached_decode_attention(q, k_cache, v_cache, pos, q_pos, *, window=0,
         out = _ref.decode_attention_reference(q, kh, vh, pos, q_pos,
                                               window=window)
     return out
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, pos, q_pos, *,
+                           window=0, use_pallas=None, interpret=None):
+    """Paged-cache layout (``layers.make_paged_kv_cache``): q (B, T, Hq,
+    hd); k/v pool (P + 1, ps, Hkv, hd) with the trash page last;
+    block_table (B, NB) int32; pos (B, S = NB * ps); q_pos (B,) base or
+    (B, T) explicit per-query positions. The Pallas path fetches pages
+    through a scalar-prefetch block-table index map (no contiguous
+    gather); the reference gathers the logical view and defers to the
+    dense oracle. Returns (B, T, Hq, hd)."""
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
+    T = q.shape[1]
+    if q_pos.ndim == 1:
+        q_pos = q_pos[:, None] + jnp.arange(T, dtype=q_pos.dtype)[None]
+    if use_pallas:
+        return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
+                                             pos, q_pos, window=window,
+                                             interpret=interpret)
+    return _ref.paged_decode_attention_reference(q, k_pool, v_pool,
+                                                 block_table, pos, q_pos,
+                                                 window=window)

@@ -16,6 +16,25 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def paged_decode_attention_reference(q, k_pool, v_pool, block_table, pos,
+                                     q_pos, *, window=0):
+    """Paged-cache oracle: K/V live in a page pool and each sequence maps
+    logical blocks to pages via its block-table row. Gathers the pool
+    into the contiguous logical view, then defers to the dense oracle —
+    positions backed by the trash page (last pool index) carry junk that
+    ``pos == -1`` masks off.
+
+    k_pool, v_pool: (P + 1, ps, Hkv, hd); block_table: (B, NB) int32;
+    pos: (B, S) with S = NB * ps; q/q_pos as in the dense oracle."""
+    B, NB = block_table.shape
+    ps, Hkv, hd = k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]
+    k = k_pool[block_table].reshape(B, NB * ps, Hkv, hd)
+    v = v_pool[block_table].reshape(B, NB * ps, Hkv, hd)
+    kh = jnp.transpose(k, (0, 2, 1, 3))               # (B, Hkv, S, hd)
+    vh = jnp.transpose(v, (0, 2, 1, 3))
+    return decode_attention_reference(q, kh, vh, pos, q_pos, window=window)
+
+
 def decode_attention_reference(q, k, v, pos, q_pos, *, window=0):
     squeeze = q.ndim == 3
     if squeeze:

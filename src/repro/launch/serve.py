@@ -61,6 +61,16 @@ def main(argv=None):
                     help="shared-prefix KV reuse budget in tokens (LRU; "
                          "0 = off, -1 keeps cfg.prefix_cache_tokens; "
                          "needs --prefill-chunk > 0, non-speculative)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: fixed page pool + per-slot "
+                         "block tables with copy-on-write prefix "
+                         "sharing — KV memory scales with live tokens "
+                         "(attention-only stacks, token-only prompts)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page with --paged")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool size with --paged (0 = capacity "
+                         "parity with the contiguous layout + headroom)")
     ap.add_argument("--mesh", default="",
                     help="tensor-parallel serving mesh: 'dp,mp' (e.g. "
                          "'2,4' = 2-way data x 4-way model), 'auto' = "
@@ -95,6 +105,8 @@ def main(argv=None):
                     else args.prefill_chunk,
                     prefix_cache_tokens=None if args.prefix_cache_tokens < 0
                     else args.prefix_cache_tokens,
+                    paged=args.paged, page_size=args.page_size,
+                    num_pages=args.num_pages or None,
                     mesh=args.mesh or None)
 
     rng = np.random.default_rng(args.seed)

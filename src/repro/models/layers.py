@@ -209,6 +209,36 @@ def make_kv_cache(batch, length, n_kv_heads, hd, dtype, quant=False):
     return c
 
 
+def make_paged_kv_cache(batch, length, n_kv_heads, hd, dtype, *, page_size,
+                        num_pages, quant=False):
+    """Paged cache pytree (see ``serving/paged_kv.py``): K/V live in a
+    fixed pool of ``num_pages`` pages of ``page_size`` positions shared
+    by all slots, and each slot maps logical blocks to pool pages via
+    its block-table row ``bt``. Pool index ``num_pages`` is a trash
+    page: unallocated ``bt`` entries point at it so gathers stay
+    in-bounds (junk masked by ``pos == -1``) and masked-off writes land
+    there harmlessly. ``pos``/``step`` keep the contiguous layout's
+    dense per-slot shape — causal masking, rollback and ring semantics
+    are unchanged; only K/V storage is paged."""
+    nb = -(-int(length) // int(page_size))
+    S = nb * int(page_size)
+    c = {
+        "kp": jnp.zeros((num_pages + 1, page_size, n_kv_heads, hd),
+                        jnp.int8 if quant else dtype),
+        "vp": jnp.zeros((num_pages + 1, page_size, n_kv_heads, hd),
+                        jnp.int8 if quant else dtype),
+        "bt": jnp.full((batch, nb), num_pages, jnp.int32),
+        "pos": jnp.full((batch, S), -1, jnp.int32),
+        "step": jnp.zeros((batch,), jnp.int32),
+    }
+    if quant:
+        c["kp_scale"] = jnp.zeros((num_pages + 1, page_size, n_kv_heads),
+                                  jnp.float32)
+        c["vp_scale"] = jnp.zeros((num_pages + 1, page_size, n_kv_heads),
+                                  jnp.float32)
+    return c
+
+
 def _quantize_kv(x):
     """x: (..., hd) -> (int8 values, per-vector scale)."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
@@ -220,6 +250,69 @@ def _quantize_kv(x):
 
 def _dequantize_kv(q, scale, dtype):
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def paged_kv_view(cache, dtype):
+    """Gather the page pool through the block table into the contiguous
+    logical view ``(B, S, Hkv, hd)`` (dequantized if int8). Positions
+    backed by the trash page hold junk; callers mask with ``pos == -1``.
+    Gather-then-dequantize is elementwise-identical to the contiguous
+    layout's dequantize, so the view is bit-equal to what a contiguous
+    cache would hold at the same logical positions."""
+    B, NB = cache["bt"].shape
+    ps = cache["kp"].shape[1]
+    k = cache["kp"][cache["bt"]]                       # (B, NB, ps, H, hd)
+    v = cache["vp"][cache["bt"]]
+    k = k.reshape(B, NB * ps, *k.shape[3:])
+    v = v.reshape(B, NB * ps, *v.shape[3:])
+    if "kp_scale" in cache:
+        ksc = cache["kp_scale"][cache["bt"]].reshape(B, NB * ps, -1)
+        vsc = cache["vp_scale"][cache["bt"]].reshape(B, NB * ps, -1)
+        k = _dequantize_kv(k, ksc, dtype)
+        v = _dequantize_kv(v, vsc, dtype)
+    return k, v
+
+
+def _paged_attend(q, k, v, cfg, cache, pos, slots, window):
+    """Shared paged write+read behind cached decode and extend: scatter
+    the new K/V through the block table, then attend against the updated
+    cache. ``pos``/``slots``: (B, T); masked-off entries carry
+    ``slots == S`` (their K/V scatters to the trash page and their
+    ``pos`` write drops). Returns (attn out, updated cache dict without
+    ``step``). The host engine guarantees every targeted page is
+    allocated and unshared (CoW) before dispatch."""
+    B = q.shape[0]
+    S = cache["pos"].shape[1]
+    ps = cache["kp"].shape[1]
+    trash = cache["kp"].shape[0] - 1
+    blk = jnp.clip(slots, 0, S - 1) // ps              # (B, T)
+    page = jnp.take_along_axis(cache["bt"], blk, axis=1)
+    page = jnp.where(slots < S, page, trash)
+    off = jnp.clip(slots, 0, S - 1) % ps
+    out = dict(cache)
+    quant = "kp_scale" in cache
+    if quant:
+        k_store, k_sc = _quantize_kv(k)
+        v_store, v_sc = _quantize_kv(v)
+        out["kp_scale"] = cache["kp_scale"].at[page, off].set(k_sc)
+        out["vp_scale"] = cache["vp_scale"].at[page, off].set(v_sc)
+    else:
+        k_store, v_store = k, v
+    out["kp"] = cache["kp"].at[page, off].set(k_store)
+    out["vp"] = cache["vp"].at[page, off].set(v_store)
+    bidx = jnp.arange(B)[:, None]
+    out["pos"] = cache["pos"].at[bidx, slots].set(pos.astype(jnp.int32),
+                                                  mode="drop")
+    if cfg.use_decode_kernel and not quant:
+        from repro.kernels.decode_attention.ops import paged_decode_attention
+        y = paged_decode_attention(q, out["kp"], out["vp"], out["bt"],
+                                   out["pos"], pos, window=window)
+    else:
+        k_read, v_read = paged_kv_view(out, q.dtype)
+        y = gqa_attention(q, k_read, v_read, q_positions=pos,
+                          k_positions=out["pos"], causal=True, window=window,
+                          k_valid=out["pos"] >= 0)
+    return y, out
 
 
 def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
@@ -254,7 +347,7 @@ def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
         return linear(p["wo"], y.reshape(B, L, -1)), None
 
     # --- cached decode (L == 1) -------------------------------------- #
-    S = cache["k"].shape[1]
+    S = cache["pos"].shape[1]
     step = cache["step"]                       # (B,) per-sequence position
     pos = step[:, None]                        # (B, 1)
     if cfg.rope:
@@ -267,6 +360,11 @@ def attention_block(p, x, cfg: ModelConfig, *, cache=None, positions=None,
     k = shard_activation(k, "act_heads")
     v = shard_activation(v, "act_heads")
     slot = jnp.mod(step, S)                    # (B,)
+    if "bt" in cache:                          # paged layout
+        y, new_cache = _paged_attend(q, k, v, cfg, cache, pos,
+                                     slot[:, None], window)
+        new_cache["step"] = step + 1
+        return linear(p["wo"], y.reshape(B, L, -1)), new_cache
     bidx = jnp.arange(B)
     quant = "k_scale" in cache
     if quant:
@@ -340,7 +438,7 @@ def extend_into_cache(p, x, cfg: ModelConfig, cache, *, lengths=None,
     q = shard_activation(q, "act_heads")
     k = shard_activation(k, "act_heads")
     v = shard_activation(v, "act_heads")
-    S = cache["k"].shape[1]
+    S = cache["pos"].shape[1]
     if T > S:
         raise ValueError(f"extend window T={T} exceeds cache length S={S}")
     slots = jnp.mod(pos, S)                                # (B, T) distinct
@@ -349,6 +447,11 @@ def extend_into_cache(p, x, cfg: ModelConfig, cache, *, lengths=None,
         # the scatter drops it — cache and pos stay untouched there
         valid = jnp.arange(T)[None, :] < lengths[:, None]  # (B, T)
         slots = jnp.where(valid, slots, S)
+    if "bt" in cache:                                      # paged layout
+        y, new_cache = _paged_attend(q, k, v, cfg, cache, pos, slots, window)
+        inc = T if lengths is None else lengths.astype(step.dtype)
+        new_cache["step"] = step + inc
+        return linear(p["wo"], y.reshape(B, T, -1)), new_cache
     bidx = jnp.arange(B)[:, None]
     quant = "k_scale" in cache
     if quant:
@@ -408,6 +511,10 @@ def prefill_into_cache(p, x, cfg: ModelConfig, cache, *, window=None,
     B, L, _ = x.shape
     hd = cfg.hd
     window = cfg.sliding_window if window is None else window
+    if "bt" in cache:
+        raise NotImplementedError(
+            "paged caches are populated through chunked admission "
+            "(extend_into_cache), not monolithic prefill")
     positions = jnp.arange(L)
     q = linear(p["wq"], x).reshape(B, L, -1, hd)
     k = linear(p["wk"], x).reshape(B, L, -1, hd)

@@ -64,6 +64,14 @@ class Model:
     rollback: Optional[Callable[..., Any]] = None     # (cache, steps (B,)) -> cache
     extend_into_cache: Optional[Callable[..., Any]] = None
     # (params, tokens (B,T), cache, lengths (B,), last_only) -> (logits, cache)
+    make_paged_cache: Optional[Callable[..., Any]] = None
+    # (batch, cache_len, *, page_size, num_pages) -> paged cache pytree
+
+    @property
+    def supports_paged(self) -> bool:
+        """Paged KV requires the extend path (chunked admission) and
+        attention-only stacks — same gate as ``supports_extend``."""
+        return self.make_paged_cache is not None
 
     @property
     def supports_speculative(self) -> bool:
@@ -161,13 +169,19 @@ def _build_decoder(cfg: ModelConfig) -> Model:
         return T.extend_step(params, cfg, tokens, cache, lengths=lengths,
                              last_only=last_only)
 
+    def make_paged(batch, cache_len, *, page_size, num_pages, dtype=None):
+        return T.make_paged_cache(cfg, batch, cache_len,
+                                  page_size=page_size, num_pages=num_pages,
+                                  dtype=dtype)
+
     return Model(cfg=cfg, init=lambda k: T.init_transformer(k, cfg),
                  train_loss=train_loss, prefill=prefill_fn,
                  decode_step=decode_fn, make_cache=make_cache,
                  cache_steps=T.cache_steps,
                  verify_step=verify_fn if spec_ok else None,
                  rollback=T.set_cache_steps if spec_ok else None,
-                 extend_into_cache=extend_fn if spec_ok else None)
+                 extend_into_cache=extend_fn if spec_ok else None,
+                 make_paged_cache=make_paged if spec_ok else None)
 
 
 def _build_encdec(cfg: ModelConfig) -> Model:

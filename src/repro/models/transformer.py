@@ -130,6 +130,32 @@ def make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (nb,) + x.shape), one)
 
 
+def make_paged_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
+                     page_size: int, num_pages: int, dtype=None):
+    """Paged decode cache (see ``layers.make_paged_kv_cache`` /
+    ``serving/paged_kv.py``): same ``[n_blocks, batch, ...]`` layout
+    contract as ``make_cache`` for ``pos``/``step``/``bt`` leaves, while
+    the K/V pool leaves carry ``[n_blocks, num_pages + 1, ...]`` — the
+    pool replaces the per-slot ring as the storage axis. Attention-only
+    stacks (SSM recurrent state has no paged analogue)."""
+    if any(mixer != "attn" for mixer, _ in block_spec(cfg)):
+        raise NotImplementedError(
+            f"paged KV caches require attention-only stacks; family "
+            f"{cfg.family!r} has SSM mixers")
+    dtype = dtype or cfg.act_dtype
+    spec = block_spec(cfg)
+    S_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+        else cache_len
+    one = {f"sub{i}": L.make_paged_kv_cache(batch, S_len, cfg.n_kv_heads,
+                                            cfg.hd, dtype,
+                                            page_size=page_size,
+                                            num_pages=num_pages,
+                                            quant=cfg.kv_quant)
+           for i in range(len(spec))}
+    nb = n_blocks(cfg)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (nb,) + x.shape), one)
+
+
 def cache_steps(cache):
     """Per-slot sequence depth (B,) from the first attention sub-cache, or
     None for attention-free (pure SSM) stacks whose state is positionless."""

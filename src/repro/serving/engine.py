@@ -32,6 +32,16 @@ What v3 changes over v2 (PR 1/3):
   p50/p95/p99 TTFT and inter-token latency over per-request samples, the
   tail metrics ``benchmarks/bench_load.py`` tracks under Poisson load.
 
+With ``paged=True`` the per-slot contiguous KV rings are replaced by a
+fixed pool of fixed-size pages with per-slot block tables
+(``serving/paged_kv.py``): KV memory scales with live tokens instead of
+``max_batch x cache_len``, prefix-cache hits alias pages (refcount bump,
+zero KV copies — the materialize/extract programs never run) and
+admission applies backpressure when the pool is short. The decode /
+mixed / speculative step programs are unchanged in shape; they write
+through the block table via the paged attention path in
+``models/layers.py``.
+
 Retained from v2 (see the sections below and docs/serving.md): bucketed
 slot-direct prefill (the ``prefill_chunk=0`` legacy/stall path, still
 used for requests the extend path cannot serve), the fused donated
@@ -55,6 +65,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models.model import Model
+from repro.serving import paged_kv
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, Response
 from repro.serving.sampler import Sampler
@@ -90,7 +101,9 @@ class Engine:
                  draft: Any = None, spec_gamma: int = 0,
                  prefill_chunk: Optional[int] = None,
                  prefix_cache_tokens: Optional[int] = None,
-                 mesh: Any = None):
+                 mesh: Any = None,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         """``params`` may be a quantized tree (``quant.quantize_params``):
         projections route through the fused dequantize-matmul inside the
         same jitted prefill/decode programs, nothing else changes.
@@ -137,6 +150,18 @@ class Engine:
         stays replicated/host-resident. Pallas kernel ops fall back to
         their jnp references under a model axis > 1
         (``kernels.dispatch``).
+
+        ``paged=True`` replaces the per-slot contiguous KV rings with a
+        fixed pool of ``num_pages`` pages of ``page_size`` tokens each
+        (``serving/paged_kv.py``): HBM scales with live tokens, prefix
+        hits become block-table aliases (zero KV copies) and admission
+        applies backpressure instead of assuming worst-case capacity.
+        Requires the extend path (attention-only, MoE-free stacks) and
+        token-only prompts that fit the KV ring — ``submit`` rejects
+        anything else. ``num_pages=None`` sizes the pool for capacity
+        parity with the contiguous layout plus provisioning headroom.
+        Composes with int8 KV, speculative decoding (the draft cache
+        stays contiguous), chunked admission and mesh sharding.
         """
         if kv_cache_dtype not in ("", "int8"):
             raise ValueError(f"unsupported kv_cache_dtype "
@@ -212,7 +237,39 @@ class Engine:
         self.remaining = jnp.zeros((max_batch,), jnp.int32)
         self.active = jnp.zeros((max_batch,), bool)
         self.eos = jnp.full((max_batch,), -1, jnp.int32)
-        self.cache = model.make_cache(max_batch, cache_len)
+
+        # --- paged KV cache ------------------------------------------- #
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self._paged: Optional[paged_kv.PagedKVState] = None
+        self._depth_ub = [0] * max_batch   # per-slot provisioned depth:
+        # an upper bound on the device's committed depth, advanced ahead
+        # of each dispatched step and corrected at every poll
+        if self.paged:
+            if not model.supports_paged:
+                raise ValueError(
+                    "paged KV requires the extend path (attention-only "
+                    f"stacks); family {cfg.family!r} has none")
+            n_blk = paged_kv.num_blocks(self.kv_len, self.page_size)
+            # default: capacity parity with the contiguous layout, plus
+            # headroom for provisioning drift (depth upper bounds run
+            # ahead of the harvested truth between polls)
+            self.num_pages = int(num_pages) if num_pages \
+                else max_batch * n_blk + 2 * max_batch
+            if self.num_pages < n_blk:
+                # one full-length stream must always fit once the pool
+                # drains, else admission backpressure can never clear
+                raise ValueError(
+                    f"num_pages={self.num_pages} cannot hold one full "
+                    f"stream ({n_blk} blocks of {self.page_size} tokens)")
+            self._paged = paged_kv.PagedKVState(
+                max_batch, self.kv_len, self.page_size, self.num_pages)
+            self.cache = model.make_paged_cache(
+                max_batch, cache_len, page_size=self.page_size,
+                num_pages=self.num_pages)
+        else:
+            self.num_pages = 0
+            self.cache = model.make_cache(max_batch, cache_len)
         if self.mesh is not None:
             # KV cache: heads on the model axis, slots (batch) on data;
             # decode state: leading batch dim on data; PRNG key replicated
@@ -310,14 +367,32 @@ class Engine:
                 and self._draft_model.supports_extend
         self.prefill_chunk = min(int(chunk), self.kv_len) \
             if (chunk and self._extend_ok) else 0
+        if self.paged:
+            if not self._extend_ok:
+                raise ValueError(
+                    "paged KV serving admits through chunked prefill, "
+                    "which this model stack does not support")
+            if self.prefill_chunk == 0:
+                # every paged admission runs through the extend path;
+                # when chunking was not requested, admit whole prompts
+                # in one chunk (the "plain-mode" paged engine)
+                self.prefill_chunk = self.kv_len
         pct = cfg.prefix_cache_tokens if prefix_cache_tokens is None \
             else prefix_cache_tokens
         # prefix reuse stores target-cache slices only; in spec mode the
         # draft cache would still need recomputation, so it is disabled
-        self.prefix_cache: Optional[PrefixCache] = \
-            PrefixCache(pct, self.prefill_chunk) \
-            if (pct and self.prefill_chunk and not self.spec_gamma) \
-            else None
+        self.prefix_cache: Optional[PrefixCache] = None
+        if pct and self.prefill_chunk and not self.spec_gamma:
+            if self.paged:
+                # entries are page-index lists; bucketing on the page
+                # size makes every hit a whole-page alias, and eviction
+                # drops the entry's page references (the pages outlive
+                # it while any live slot still aliases them)
+                self.prefix_cache = PrefixCache(
+                    pct, self.page_size,
+                    on_evict=lambda e: self._paged.release_pages(e["kv"]))
+            else:
+                self.prefix_cache = PrefixCache(pct, self.prefill_chunk)
         self._admit: Optional[_Admission] = None
         self._chunked_admissions = 0
 
@@ -371,17 +446,36 @@ class Engine:
 
     def _build_step(self):
         """Fused decode: model step + sampling + slot bookkeeping, with the
-        cache and decode state donated so XLA updates them in place."""
+        cache and decode state donated so XLA updates them in place.
+
+        Paged engines decode through a masked T=1 ``extend_into_cache``
+        (bit-identical per row to ``decode_step``) so rows the device
+        already finished neither scatter into pages nor advance their
+        step — page provisioning stays an upper bound on real writes."""
         model, sampler = self.model, self.sampler
 
-        def step(params, cache, tokens, remaining, active, eos, key):
-            logits, cache = model.decode_step(params, tokens, cache)
-            key, sk = jax.random.split(key)
-            nxt = sampler(sk, logits[:, -1].astype(jnp.float32))   # (B,)
-            done = active & ((remaining <= 1) | (nxt == eos))
-            new_active = active & ~done
-            remaining = jnp.where(active, remaining - 1, remaining)
-            return nxt[:, None], cache, remaining, new_active, key
+        if self.paged:
+            def step(params, cache, tokens, remaining, active, eos, key):
+                logits, cache = model.extend_into_cache(
+                    params, tokens, cache, active.astype(jnp.int32),
+                    last_only=True)
+                key, sk = jax.random.split(key)
+                nxt = sampler(sk, logits[:, 0].astype(jnp.float32))
+                done = active & ((remaining <= 1) | (nxt == eos))
+                new_active = active & ~done
+                remaining = jnp.where(active, remaining - 1, remaining)
+                new_tokens = jnp.where(active, nxt, tokens[:, 0])
+                return (new_tokens[:, None], cache, remaining, new_active,
+                        key)
+        else:
+            def step(params, cache, tokens, remaining, active, eos, key):
+                logits, cache = model.decode_step(params, tokens, cache)
+                key, sk = jax.random.split(key)
+                nxt = sampler(sk, logits[:, -1].astype(jnp.float32))  # (B,)
+                done = active & ((remaining <= 1) | (nxt == eos))
+                new_active = active & ~done
+                remaining = jnp.where(active, remaining - 1, remaining)
+                return nxt[:, None], cache, remaining, new_active, key
 
         donate = (1, 2, 3, 4) if self._donate else ()
         in_sh = out_sh = None
@@ -392,7 +486,8 @@ class Engine:
         return self._jit(step, donate, in_sh, out_sh)
 
     @staticmethod
-    def _slot_extend(model, params, cache, slot, chunk, n, last_only=True):
+    def _slot_extend(model, params, cache, slot, chunk, n, last_only=True,
+                     paged=False):
         """Slot-direct chunk extend inside a jitted program: slice the
         admitting slot out of the batched cache (batch axis 1 under the
         block axis), advance it by ``n`` of the chunk's C tokens at
@@ -400,7 +495,28 @@ class Engine:
         chunk costs C tokens at batch 1, NOT B·C. (An earlier design ran
         a (B, C) matrix through one extend; every decode row then paid
         the chunk's sequence length through all matmuls and tail ITL got
-        *worse* than the stall baseline it was meant to fix.)"""
+        *worse* than the stall baseline it was meant to fix.)
+
+        Paged caches share their page pools across slots: only the
+        per-slot leaves (block table / pos / step) are sliced and written
+        back; the pools pass through whole and the chunk's KV scatters
+        into them through the sliced block-table row."""
+        if paged:
+            def slc(node):
+                return {k: (v if k in paged_kv.POOL_KEYS else
+                            lax.dynamic_slice_in_dim(v, slot, 1, axis=1))
+                        for k, v in node.items()}
+            cache1 = paged_kv.walk_attn(cache, slc)
+            logits, cache1 = model.extend_into_cache(
+                params, chunk[None, :], cache1, n[None],
+                last_only=last_only)
+
+            def merge(full, upd):
+                return {k: (upd[k] if k in paged_kv.POOL_KEYS else
+                            lax.dynamic_update_slice_in_dim(
+                                full[k], upd[k], slot, axis=1))
+                        for k in full}
+            return logits, paged_kv.walk_attn2(cache, cache1, merge)
         cache1 = jax.tree.map(
             lambda t: lax.dynamic_slice_in_dim(t, slot, 1, axis=1), cache)
         logits, cache1 = model.extend_into_cache(
@@ -429,6 +545,7 @@ class Engine:
         Emitted tokens flow through the same trace/poll contract as
         plain decode (W = 1 blocks with a per-row emit count)."""
         model, sampler = self.model, self.sampler
+        is_paged = self.paged
 
         def mixed(params, cache, tokens, remaining, active, eos, key,
                   chunk, a_slot, a_len, a_last, a_rem, a_eos):
@@ -439,7 +556,8 @@ class Engine:
                 params, tokens, cache, active.astype(jnp.int32),
                 last_only=True)
             ch_logits, cache = self._slot_extend(
-                model, params, cache, a_slot, chunk, a_len)
+                model, params, cache, a_slot, chunk, a_len,
+                paged=is_paged)
             logits = jnp.where(is_admit[:, None], ch_logits[0, 0][None],
                                dec_logits[:, 0])
             key, sk = jax.random.split(key)
@@ -478,6 +596,7 @@ class Engine:
         ``prev`` and is re-consumed by the first draft verify window)."""
         model, draft = self.model, self._draft_model
         sampler = self.sampler
+        is_paged = self.paged
 
         def admit(params, dparams, cache, dcache, tokens, prev, remaining,
                   active, eos, key, chunk, a_slot, a_len, d_len, a_last,
@@ -486,7 +605,8 @@ class Engine:
             bidx = jnp.arange(B)
             is_admit = bidx == a_slot
             logits, cache = self._slot_extend(
-                model, params, cache, a_slot, chunk, a_len)
+                model, params, cache, a_slot, chunk, a_len,
+                paged=is_paged)
             _, dcache = self._slot_extend(
                 draft, dparams, dcache, a_slot, chunk, d_len)
             key, sk = jax.random.split(key)
@@ -711,8 +831,12 @@ class Engine:
         if kind == "reset":
             def fn(cache, b):
                 # erase slot b: every position empty, depth 0 — a recycled
-                # slot carries no stale keys from the previous occupant
-                return self._walk_attn(cache, lambda n: pos_row(n, b, 0))
+                # slot carries no stale keys from the previous occupant.
+                # With P > 0 (the paged prefix-alias path) the first P
+                # positions are stamped valid instead: the slot's block
+                # table already points at fully-written shared pages, so
+                # only the pos/step metadata needs populating
+                return self._walk_attn(cache, lambda n: pos_row(n, b, P))
         elif kind == "materialize":
             def fn(cache, kv, b):
                 # walk cache and entry trees in lockstep: write the P
@@ -775,6 +899,91 @@ class Engine:
         shapes = self._walk_attn(self.cache, ext)
         return self._SH.cache_shardings(shapes, self.mesh, self._b_axes)
 
+    # ------------------------------------------------------------ #
+    # paged provisioning (host allocator <-> device page pools)
+    # ------------------------------------------------------------ #
+    def _provision(self, slot: int, start: int, n: int) -> None:
+        """Make the pages behind positions [start, start+n) of ``slot``
+        privately writable before a dispatched step (allocate missing
+        pages, CoW-split shared ones). Exhaustion first reclaims LRU
+        prefix entries; if the pool is still short it is a hard error —
+        a live slot's write must never be dropped or redirected."""
+        while True:
+            try:
+                copies = self._paged.prepare_write(slot, start, n)
+                break
+            except paged_kv.PagePoolExhausted as e:
+                if self.prefix_cache is not None \
+                        and self.prefix_cache.drop_lru():
+                    continue
+                raise RuntimeError(
+                    f"KV page pool exhausted mid-decode (slot {slot}, "
+                    f"positions [{start}, {start + n})): {e}") from e
+        if copies:
+            self._copy_pages(copies)
+
+    def _copy_pages(self, copies) -> None:
+        """Copy-on-write splits: duplicate the shared pool pages on
+        device *before* the write that would have mutated them through
+        an alias (one jitted gather/scatter per split count)."""
+        src = jnp.asarray([s for s, _ in copies], jnp.int32)
+        dst = jnp.asarray([d for _, d in copies], jnp.int32)
+        self.cache = self._get_page_copy(len(copies))(self.cache, src, dst)
+
+    def _get_page_copy(self, k: int):
+        jkey = ("pagecopy", k)
+        if jkey in self._slot_jits:
+            return self._slot_jits[jkey]
+
+        def fn(cache, src, dst):
+            def cp(node):
+                out = dict(node)
+                for k2 in paged_kv.POOL_KEYS:
+                    if k2 in node:
+                        out[k2] = node[k2].at[:, dst].set(node[k2][:, src])
+                return out
+            return self._walk_attn(cache, cp)
+
+        donate = (0,) if self._donate else ()
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            in_sh = (self._cache_sh, self._repl, self._repl)
+            out_sh = self._cache_sh
+        jitted = self._jit(fn, donate, in_sh, out_sh)
+        self._slot_jits[jkey] = jitted
+        return jitted
+
+    def _push_block_tables(self) -> None:
+        """Sync the host-authoritative block tables into every attention
+        sub-cache's ``bt`` leaf (dirty-flagged). The host copy is a tiny
+        int32 array; the next jitted step places it on device (and, on a
+        mesh, to the bt sharding) as a normal input upload."""
+        if not self._paged.dirty:
+            return
+        bt = self._paged.block_tables
+
+        def setbt(node):
+            out = dict(node)
+            out["bt"] = np.broadcast_to(bt[None], out["bt"].shape)
+            return out
+        self.cache = self._walk_attn(self.cache, setbt)
+        self._paged.dirty = False
+
+    def _admit_fits(self, req: Request) -> bool:
+        """Paged admission backpressure: admit only when the pool can
+        hold the whole prompt plus the first decode write (conservative:
+        a prefix hit would need less). Reclaims LRU prefix entries
+        first; on failure the request simply stays queued (FIFO order is
+        preserved — nothing behind it is admitted either)."""
+        if not self.paged:
+            return True
+        need = len(req.prompt)
+        while not self._paged.can_admit(need):
+            if self.prefix_cache is None \
+                    or not self.prefix_cache.drop_lru():
+                return False
+        return True
+
     def _get_mixed(self):
         if self._mixed_fn is None:
             self._mixed_fn = self._build_mixed_step()
@@ -789,6 +998,12 @@ class Engine:
     # scheduling
     # ------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
+        if self.paged and not self._chunk_eligible(req):
+            raise ValueError(
+                "paged KV serving admits requests through chunked "
+                "prefill only: prompts must be token-only (no frontend "
+                f"embeddings) and fit the KV ring ({len(req.prompt)} "
+                f"tokens vs {self.kv_len - self._prefix})")
         req.submitted_s = time.perf_counter()
         self.queue.append(req)
         self.requests[req.uid] = req
@@ -825,6 +1040,8 @@ class Engine:
             if self._chunk_eligible(req):
                 if self._admit is not None:
                     return            # one chunked admission at a time
+                if not self._admit_fits(req):
+                    return            # page backpressure: head waits
                 self.queue.popleft()
                 self._start_chunked(req, b)
                 continue
@@ -841,6 +1058,23 @@ class Engine:
         if self.prefix_cache is not None:
             kv, ent_len, base = self.prefix_cache.lookup(req.prompt)
         bb = jnp.int32(b)
+        if self.paged:
+            # a prefix hit is a page alias: point the fresh slot's block
+            # table at the entry's pages (host refcount bump — zero KV
+            # copies, no materialize program) and stamp pos/step for the
+            # covered positions; a partial hit just takes fewer pages
+            self._paged.release_slot(b)
+            if kv is not None:
+                self._paged.alias_prefix(b, kv[:base // self.page_size])
+            self.cache = self._get_slot_fn(
+                "reset", base if kv is not None else 0)(self.cache, bb)
+            if self.spec_gamma:
+                self.draft_cache = self._get_slot_fn("reset")(
+                    self.draft_cache, bb)
+            self._depth_ub[b] = base
+            self._admit = _Admission(req=req, slot=b, base=base,
+                                     length=len(req.prompt))
+            return
         if kv is not None:
             if base < ent_len:
                 # partial hit: take the first Q positions of the longer
@@ -936,7 +1170,8 @@ class Engine:
             # head-of-queue only; legacy prefills wait for the burst
             # boundary so they cannot stall the hot loop invisibly)
             b = self._free_slot()
-            if b is not None and self._chunk_eligible(self.queue[0]):
+            if b is not None and self._chunk_eligible(self.queue[0]) \
+                    and self._admit_fits(self.queue[0]):
                 self._start_chunked(self.queue.popleft(), b)
         adm = self._admit
         if self.spec_gamma:
@@ -956,6 +1191,15 @@ class Engine:
             self.step_times.append(dt)
 
     def _step_plain(self) -> None:
+        if self.paged:
+            # provision one decode write per occupied slot (an upper
+            # bound — rows the device already finished write nothing;
+            # the poll's shrink reclaims the overshoot)
+            for b, r in enumerate(self.slots):
+                if r is not None:
+                    self._provision(b, self._depth_ub[b], 1)
+                    self._depth_ub[b] += 1
+            self._push_block_tables()
         (self.tokens, self.cache, self.remaining, self.active,
          self.key) = self._step_fn(self.params, self.cache,
                                    self.tokens, self.remaining,
@@ -965,6 +1209,16 @@ class Engine:
         self._steps += 1
 
     def _step_spec(self) -> None:
+        if self.paged:
+            # a spec step writes up to gamma+1 positions per active row
+            # (verify window); rollback keeps the committed prefix and
+            # the poll's shrink drops pages past it
+            g1 = self.spec_gamma + 1
+            for b, r in enumerate(self.slots):
+                if r is not None:
+                    self._provision(b, self._depth_ub[b], g1)
+                    self._depth_ub[b] += g1
+            self._push_block_tables()
         (self.tokens, self.prev, block, n_emit, self.cache,
          self.draft_cache, self.remaining, self.active,
          self.key) = self._step_fn(
@@ -987,6 +1241,14 @@ class Engine:
         """Dispatch the fused decode + prefill-chunk program."""
         chunk, n, last = self._chunk_args(adm)
         req = adm.req
+        if self.paged:
+            for b, r in enumerate(self.slots):
+                if r is not None:
+                    self._provision(b, self._depth_ub[b], 1)
+                    self._depth_ub[b] += 1
+            self._provision(adm.slot, adm.base, n)
+            self._depth_ub[adm.slot] = adm.base + n
+            self._push_block_tables()
         (self.tokens, block, n_emit, self.cache, self.remaining,
          self.active, self.eos, self.key) = self._get_mixed()(
             self.params, self.cache, self.tokens, self.remaining,
@@ -1007,6 +1269,13 @@ class Engine:
         chunk, n, last = self._chunk_args(adm)
         d_n = max(0, min(n, adm.length - 1 - adm.base))
         req = adm.req
+        if self.paged:
+            # target chunk only — the draft cache stays contiguous; the
+            # spec step dispatched right after provisions decode rows
+            # (including a slot this chunk just armed)
+            self._provision(adm.slot, adm.base, n)
+            self._depth_ub[adm.slot] = adm.base + n
+            self._push_block_tables()
         (self.tokens, self.prev, block, n_emit, self.cache,
          self.draft_cache, self.remaining, self.active, self.eos,
          self.key) = self._get_admit_chunk()(
@@ -1040,9 +1309,15 @@ class Engine:
         if self.prefix_cache is not None:
             P = self.prefix_cache.wants(adm.req.prompt)
             if P and P <= self.kv_len:
-                kv = self._get_slot_fn("extract", P)(self.cache,
-                                                     jnp.int32(b))
-                self.prefix_cache.insert(adm.req.prompt, P, kv)
+                if self.paged:
+                    # publication is a refcount pin on the slot's own
+                    # pages — no extract program, no KV movement
+                    pages = self._paged.snapshot_prefix(b, P)
+                    self.prefix_cache.insert(adm.req.prompt, P, pages)
+                else:
+                    kv = self._get_slot_fn("extract", P)(self.cache,
+                                                         jnp.int32(b))
+                    self.prefix_cache.insert(adm.req.prompt, P, kv)
 
     def _stamp_first_tokens(self, now: float) -> None:
         for req in self._await_first:
@@ -1121,6 +1396,23 @@ class Engine:
         if wdrop > 0:
             del self._step_wall[:wdrop]
             self._step_wall_base = keep_from - 1
+        if self.paged:
+            # the harvested trace reveals each live slot's true committed
+            # depth (prompt + generated - 1 pending): release the pages
+            # the provisioning upper bound ran ahead by
+            for b, r in enumerate(self.slots):
+                if r is not None:
+                    nt = len(self.responses[r.uid].tokens)
+                    if nt:
+                        depth = len(r.prompt) + nt - 1
+                        self._paged.shrink(b, depth)
+                        self._depth_ub[b] = depth
+            if __debug__:
+                entries = None
+                if self.prefix_cache is not None:
+                    entries = [e["kv"] for e
+                               in self.prefix_cache._entries.values()]
+                self._paged.check_invariants(entries)
 
     def _harvest(self, b: int, col: List[int],
                  gaps: Optional[List[Optional[float]]] = None) -> None:
@@ -1152,6 +1444,12 @@ class Engine:
             resp.finished = True
             req.finished_s = time.perf_counter()
             self.slots[b] = None
+            if self.paged:
+                # the stream's pages return to the free list; pages a
+                # prefix entry pinned stay live through the entry's own
+                # references until it is evicted
+                self._paged.release_slot(b)
+                self._depth_ub[b] = 0
         else:
             self._slot_start[b] = self._steps              # all consumed
 
@@ -1241,6 +1539,9 @@ class Engine:
         if self.prefix_cache is not None:
             pc = self.prefix_cache
             pc.hits = pc.misses = pc.hit_tokens = pc.evictions = 0
+        if self.paged:
+            pk = self._paged
+            pk.alias_pages = pk.cow_splits = pk.pages_released = 0
 
     # ------------------------------------------------------------ #
     @staticmethod
@@ -1283,6 +1584,8 @@ class Engine:
                         (50, 95, 99))
         if self.prefix_cache is not None:
             stats.update(self.prefix_cache.stats())
+        if self.paged:
+            stats.update(self._paged.stats())
         if self.spec_gamma:
             # every harvested (step, active slot) pair emitted 1 + n_acc
             # tokens; acceptance rate = mean(n_acc) / gamma

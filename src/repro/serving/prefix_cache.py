@@ -38,7 +38,7 @@ Invariants (relied on by the engine, asserted in
 from __future__ import annotations
 
 import collections
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class _Node:
@@ -50,10 +50,16 @@ class _Node:
 
 
 class PrefixCache:
-    def __init__(self, capacity_tokens: int, chunk: int):
+    def __init__(self, capacity_tokens: int, chunk: int,
+                 on_evict: Optional[Callable[[Dict], None]] = None):
+        """``on_evict(entry)`` fires when an entry leaves the cache —
+        the paged engine uses it to release the entry's page
+        references (the pages themselves outlive the entry while any
+        live slot still aliases them)."""
         assert chunk > 0
         self.capacity = int(capacity_tokens)
         self.chunk = int(chunk)
+        self.on_evict = on_evict
         self.root = _Node()
         # key (tuple of ids) -> {"kv": device pytree, "length": P}
         self._entries: "collections.OrderedDict[Tuple[int, ...], Dict]" = \
@@ -123,12 +129,20 @@ class PrefixCache:
     def wants(self, prompt) -> int:
         """The prefix length ``insert`` would store for this prompt:
         the largest bucket <= len(prompt) - 1 that fits the token
-        budget and is not already stored. 0 = nothing to store (the
-        caller skips the device-side KV extraction entirely)."""
+        budget and is not already *covered*. 0 = nothing to store (the
+        caller skips the device-side KV extraction entirely).
+
+        Covered means any stored entry passes through ``prompt[:P]`` —
+        not just an exact-key match. Partial-entry lookup serves the
+        first Q positions of any such entry, so storing ``prompt[:P]``
+        again would be fully redundant; the old exact-key check missed
+        this, and every prompt whose hit came from a *longer* entry
+        re-extracted and re-stored a prefix of it, wasting a prefill
+        bucket entry's worth of token budget until eviction."""
         P = self.bucket(len(prompt) - 1)
         if not P or P > self.capacity:
             return 0
-        if tuple(int(t) for t in prompt[:P]) in self._entries:
+        if self._entry_through(self.root, prompt, P) is not None:
             return 0
         return P
 
@@ -147,6 +161,15 @@ class PrefixCache:
         while self.tokens > self.capacity and len(self._entries) > 1:
             self._evict_lru(keep=key)
 
+    def drop_lru(self) -> bool:
+        """Evict the least-recently-used entry unconditionally (the
+        paged engine's free-list reclaim under page pressure). Returns
+        False when the cache is empty."""
+        if not self._entries:
+            return False
+        self._evict_lru()
+        return True
+
     def _evict_lru(self, keep=None) -> None:
         for key in self._entries:
             if key != keep:
@@ -156,6 +179,8 @@ class PrefixCache:
         entry = self._entries.pop(key)
         self.tokens -= entry["length"]
         self.evictions += 1
+        if self.on_evict is not None:
+            self.on_evict(entry)
         # unlink from the trie and prune now-empty nodes
         path: List[Tuple[_Node, int]] = []
         node = self.root

@@ -132,18 +132,22 @@ def test_chunked_prefill_cache_bit_equality():
             np.testing.assert_array_equal(a, b, err_msg=f"{sub}/{key}")
 
 
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 @pytest.mark.parametrize("chunk", [4, 16])
 @pytest.mark.slow
-def test_chunked_engine_matches_legacy(chunk):
+def test_chunked_engine_matches_legacy(chunk, paged):
     """Engine level: more requests than slots, prompts shorter and longer
     than the chunk — greedy output must equal the monolithic engine's,
-    and every admission must take the chunked path."""
+    and every admission must take the chunked path. The paged layout
+    (block-table KV pool) must be bit-invisible in the token stream."""
     base, _ = _run()
-    out, eng = _run(prefill_chunk=chunk)
+    out, eng = _run(prefill_chunk=chunk, paged=paged, page_size=8)
     assert out == base
     st = eng.latency_stats()
     assert st["chunked_admissions"] == len(_PROMPTS)
     assert st["prefill_chunk"] == chunk
+    if paged:
+        assert st["kv_pages_live"] == 0
 
 
 @pytest.mark.slow
@@ -190,39 +194,51 @@ def test_chunked_falls_back_for_unsupported_stacks():
 # ------------------------------------------------------------------ #
 # shared-prefix KV reuse
 # ------------------------------------------------------------------ #
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 @pytest.mark.slow
-def test_prefix_hit_matches_cold_path():
+def test_prefix_hit_matches_cold_path(paged):
     """Requests sharing a system-prompt head: the second admission
-    materialises the stored prefix instead of recomputing it, with
+    reuses the stored prefix instead of recomputing it, with
     token-identical greedy output — including a *partial* hit, where the
-    shared head is shorter than the stored entry."""
+    shared head is shorter than the stored entry. Contiguous serves the
+    hit with one device copy; paged serves it with a zero-copy page
+    alias."""
     head = _RNG.integers(0, _CFG.vocab, 16)
     prompts = [np.concatenate([head, _RNG.integers(0, _CFG.vocab, n)])
                for n in (9, 5, 12)]
     cold, _ = _run(prompts=prompts, prefill_chunk=8)
     hot, eng = _run(prompts=prompts, prefill_chunk=8,
-                    prefix_cache_tokens=256)
+                    prefix_cache_tokens=256, paged=paged, page_size=8)
     assert hot == cold
     st = eng.latency_stats()
     assert st["prefix_hits"] >= 2
     assert st["prefix_hit_tokens"] >= 2 * 16
     assert st["prefix_entries"] >= 1
+    if paged:
+        assert st["kv_alias_pages"] >= 2 * (16 // 8)
 
 
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 @pytest.mark.slow
-def test_prefix_eviction_under_token_cap():
+def test_prefix_eviction_under_token_cap(paged):
     """Distinct prefixes past the token budget evict LRU entries; stored
-    tokens never exceed the cap and correctness is unaffected."""
+    tokens never exceed the cap and correctness is unaffected. In paged
+    mode each eviction also releases the entry's pinned pages."""
     prompts = [np.concatenate([_RNG.integers(0, _CFG.vocab, 16),
                                _RNG.integers(0, _CFG.vocab, 4)])
                for _ in range(4)]
     cold, _ = _run(prompts=prompts, prefill_chunk=8)
-    hot, eng = _run(prompts=prompts, prefill_chunk=8,
+    hot, eng = _run(prompts=prompts, prefill_chunk=8, paged=paged,
+                    page_size=8,
                     prefix_cache_tokens=32)   # cap: two 16-token entries
     assert hot == cold
     st = eng.latency_stats()
     assert st["prefix_tokens"] <= 32
     assert st["prefix_evictions"] >= 2
+    if paged:
+        # evicted entries dropped their page refs; only surviving
+        # entries still pin pages (streams are all harvested)
+        assert eng._paged.live_pages == 2 * len(eng.prefix_cache)
 
 
 def test_prefix_cache_trie_unit():
@@ -258,23 +274,27 @@ def test_prefix_cache_trie_unit():
 # ------------------------------------------------------------------ #
 # composition: mixed step + int8 KV + speculative decoding
 # ------------------------------------------------------------------ #
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 @pytest.mark.slow
-def test_chunked_composes_with_int8_kv():
+def test_chunked_composes_with_int8_kv(paged):
     base, _ = _run(kv_cache_dtype="int8")
     out, eng = _run(kv_cache_dtype="int8", prefill_chunk=8,
-                    prefix_cache_tokens=256)
+                    prefix_cache_tokens=256, paged=paged, page_size=8)
     assert out == base
     assert eng.latency_stats()["chunked_admissions"] == len(_PROMPTS)
 
 
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 @pytest.mark.slow
-def test_chunked_composes_with_speculative_decoding():
+def test_chunked_composes_with_speculative_decoding(paged):
     """Chunked admission runs as its own extend program right before the
     fused spec step; greedy output stays token-identical to the plain
-    engine (the speculative contract) while admissions are chunked."""
+    engine (the speculative contract) while admissions are chunked. In
+    paged mode the target cache is the page pool — speculative rollback
+    rides on pos/step exactly as in the contiguous layout."""
     base, _ = _run(max_new=10)
     out, eng = _run(max_new=10, draft="int8@1", spec_gamma=3,
-                    prefill_chunk=8)
+                    prefill_chunk=8, paged=paged, page_size=8)
     assert out == base
     st = eng.latency_stats()
     assert st["chunked_admissions"] == len(_PROMPTS)
@@ -283,11 +303,12 @@ def test_chunked_composes_with_speculative_decoding():
     assert eng.prefix_cache is None
 
 
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 @pytest.mark.slow
-def test_chunked_spec_with_int8_kv():
+def test_chunked_spec_with_int8_kv(paged):
     base, _ = _run(max_new=8, kv_cache_dtype="int8")
     out, _ = _run(max_new=8, kv_cache_dtype="int8", draft="int8@1",
-                  spec_gamma=3, prefill_chunk=8)
+                  spec_gamma=3, prefill_chunk=8, paged=paged, page_size=8)
     assert out == base
 
 

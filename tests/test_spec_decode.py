@@ -37,16 +37,22 @@ def _run(max_new=10, prompts=_PROMPTS, sampler=None, **kw):
 # ------------------------------------------------------------------ #
 # greedy token-identity (the speculative-decoding contract)
 # ------------------------------------------------------------------ #
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 @pytest.mark.parametrize("draft", ["fp@1", "int8@1", "int8"])
 @pytest.mark.slow
-def test_greedy_identity(draft):
+def test_greedy_identity(draft, paged):
+    """The speculative contract holds over both KV layouts: the paged
+    target cache (block-table page pool) rolls back through pos/step
+    exactly like the contiguous ring."""
     base, _ = _run()
-    out, eng = _run(draft=draft, spec_gamma=4)
+    out, eng = _run(draft=draft, spec_gamma=4, paged=paged)
     assert out == base
     st = eng.latency_stats()
     assert st["spec_gamma"] == 4
     # speculation actually happened: fewer fused steps than tokens
     assert st["decode_steps"] < sum(len(t) - 1 for t in base.values())
+    if paged:
+        assert st["kv_pages_live"] == 0
 
 
 @pytest.mark.slow
