@@ -38,6 +38,7 @@ import numpy as np
 from benchmarks import schema
 from repro.configs import get_arch
 from repro.models.model import build
+from repro.serving import telemetry
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 from repro.serving.sampler import Sampler
@@ -152,7 +153,7 @@ def steady_decode(model, params, cfg, chunk: int, trials: int = 3) -> Dict:
         plain = [tt for tt, k in zip(eng.step_times, eng.step_kinds)
                  if k == "plain"]
         if plain:
-            p50s.append(float(np.percentile(plain, 50)))
+            p50s.append(telemetry.percentile(plain, 50))
         if decode_s:
             incl.append(st["tokens_generated"] / decode_s)
         admissions += st["chunked_admissions"]
@@ -188,12 +189,14 @@ def run(n_requests: int = 48, long_frac: float = 0.3,
                                      prefix_cache_tokens=prefix_tokens))]
     rows: List[Dict] = []
     outputs: Dict[str, Dict[int, List[int]]] = {}
+    snap = None
     for name, kw in modes:
         eng = Engine(model, params, max_batch=max_batch,
                      cache_len=cache_len, sampler=Sampler(),
                      sync_every=4, **kw)
         _warm(eng, cfg, long_len, 64, max_new)
         st = serve_stream(eng, arrivals, prompts, max_new)
+        snap = eng.metrics.snapshot()
         outputs[name] = {u: list(r.tokens)
                          for u, r in eng.responses.items() if u >= 0}
         # latency key groups are absent when a stream had no samples
@@ -232,6 +235,9 @@ def run(n_requests: int = 48, long_frac: float = 0.3,
                      "prefix_cache_tokens": prefix_tokens, "seed": seed},
         "rows": rows,
         "steady": steady,
+        # final registry snapshot of the last mode's engine; popped into
+        # the artifact envelope's telemetry section by main()
+        "telemetry": snap,
     }
 
 
@@ -300,7 +306,8 @@ def main(argv=None):
             "load", run=schema.run_meta(smoke=args.smoke,
                                         arch="llama3.2-1b-reduced",
                                         greedy=True),
-            metrics=metrics, data=data))
+            metrics=metrics, data=data,
+            telemetry=data.pop("telemetry", None)))
     return data
 
 

@@ -122,7 +122,10 @@ def run(n_requests: int = 12, max_new: int = 8,
             "kv_bytes_per_live_token_contig": bpt_c,
             "kv_bytes_per_live_token_paged": bpt_p,
             "pool_utilization_peak": row_p["peak_pages"] / num_pages,
-            "kv_budget_tokens": KV_BUDGET}
+            "kv_budget_tokens": KV_BUDGET,
+            # final registry snapshot of the paged engine; popped into
+            # the artifact envelope's telemetry section by main()
+            "telemetry": eng_p.metrics.snapshot()}
 
 
 def main(argv=None):
@@ -166,7 +169,8 @@ def main(argv=None):
                 smoke=args.smoke, arch="llama3.2-1b-reduced",
                 kv_budget_tokens=KV_BUDGET, cache_len=CACHE_LEN,
                 page_size=PAGE_SIZE),
-            metrics=metrics, data=res))
+            metrics=metrics, data=res,
+            telemetry=res.pop("telemetry", None)))
     return res
 
 

@@ -65,7 +65,7 @@ def _greedy(model, params, prompt, n, cache_len=64):
 
 
 def _engine_toks_per_s(model, params, cfg, *, kv_cache_dtype, n_requests,
-                       max_new) -> float:
+                       max_new):
     eng = Engine(model, params, max_batch=4, cache_len=96,
                  sampler=Sampler(), kv_cache_dtype=kv_cache_dtype)
     rng = np.random.default_rng(0)
@@ -76,7 +76,8 @@ def _engine_toks_per_s(model, params, cfg, *, kv_cache_dtype, n_requests,
                            max_new_tokens=max_new))
     eng.run()
     wall = time.perf_counter() - t0
-    return eng.latency_stats()["tokens_generated"] / wall
+    tps = eng.latency_stats()["tokens_generated"] / wall
+    return tps, eng.metrics.snapshot()
 
 
 def run(n_requests: int = 8, max_new: int = 16) -> Dict:
@@ -124,14 +125,16 @@ def run(n_requests: int = 8, max_new: int = 16) -> Dict:
 
     # ---- serving throughput ------------------------------------------ #
     rows: List[Dict] = []
+    snap = None
     for tag, p, kvd in (("fp", params, ""), ("int8", q8, "int8"),
                         ("int4", q4, "int8")):
+        tps, snap = _engine_toks_per_s(
+            model, p, cfg, kv_cache_dtype=kvd,
+            n_requests=n_requests, max_new=max_new)
         rows.append({
             "precision": tag,
             "kv_cache_dtype": kvd or str(cfg.dtype),
-            "tok_per_s": _engine_toks_per_s(
-                model, p, cfg, kv_cache_dtype=kvd,
-                n_requests=n_requests, max_new=max_new),
+            "tok_per_s": tps,
             "weight_bytes": (s_fp if tag == "fp" else
                              s_8 if tag == "int8" else s_4)["weight_bytes"],
         })
@@ -151,6 +154,9 @@ def run(n_requests: int = 8, max_new: int = 16) -> Dict:
                               "bound_int4": INT4_LOGIT_BOUND},
         "greedy_match_33": {"int8_int8kv": match8, "int4_int8kv": match4},
         "rows": rows,
+        # final registry snapshot of the last serving engine; popped into
+        # the artifact envelope's telemetry section by main()
+        "telemetry": snap,
     }
 
 
@@ -197,7 +203,8 @@ def main(argv=None):
             "quantization",
             run=schema.run_meta(smoke=args.smoke,
                                 arch=payload["arch"]),
-            metrics=metrics, data=payload))
+            metrics=metrics, data=payload,
+            telemetry=payload.pop("telemetry", None)))
     return payload
 
 

@@ -41,14 +41,16 @@ def warm_engine(eng: Engine, cfg) -> None:
 
 
 def run(n_requests: int = 12, max_new: int = 16,
-        batch_sizes=(1, 2, 4, 8)) -> List[Dict]:
+        batch_sizes=(1, 2, 4, 8), trace_out: str = ""):
     cfg = get_arch("llama3.2-1b", variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rows = []
+    rows: List[Dict] = []
+    snap = None
+    eng = None
     for max_batch in batch_sizes:
         eng = Engine(model, params, max_batch=max_batch, cache_len=96,
-                     sampler=Sampler())
+                     sampler=Sampler(), recorder=bool(trace_out))
         warm_engine(eng, cfg)
         rng = np.random.default_rng(0)
         t0 = time.perf_counter()
@@ -75,7 +77,13 @@ def run(n_requests: int = 12, max_new: int = 16,
                      "prefill_jit_entries": st["prefill_jit_entries"],
                      "decode_steps": st["decode_steps"],
                      "wall_s": wall})
-    return rows
+        # final registry snapshot (last engine measured) rides along in
+        # the artifact's telemetry section — steady_compiles must be 0
+        snap = eng.metrics.snapshot()
+    if trace_out and eng is not None:
+        eng.export_trace(trace_out)
+        print(f"wrote {trace_out}")
+    return rows, snap
 
 
 def main(argv=None):
@@ -84,12 +92,16 @@ def main(argv=None):
                     help="~30s CI mode: fewer requests, one batch size")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="JSON output path ('' to skip)")
+    ap.add_argument("--trace-out", default="",
+                    help="export a Chrome trace-event JSON of the last "
+                         "measured engine (open at ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        rows = run(n_requests=6, max_new=8, batch_sizes=(4,))
+        rows, snap = run(n_requests=6, max_new=8, batch_sizes=(4,),
+                         trace_out=args.trace_out)
     else:
-        rows = run()
+        rows, snap = run(trace_out=args.trace_out)
 
     print("serving engine v2: continuous batching throughput")
     print(f"{'batch':>5s} {'tok/s':>10s} {'p50 ms':>8s} {'p99 ms':>8s} "
@@ -114,7 +126,7 @@ def main(argv=None):
         schema.write(args.out, schema.payload(
             "serving_engine", run=schema.run_meta(
                 smoke=args.smoke, arch="llama3.2-1b-reduced"),
-            metrics=metrics, data={"rows": rows}))
+            metrics=metrics, data={"rows": rows}, telemetry=snap))
     return rows
 
 

@@ -85,18 +85,21 @@ def _one_run(model, params, cfg, mesh, n_requests, max_new,
         "wall_s": wall,
         "param_bytes_per_device": _param_bytes_per_device(eng),
         "programs": eng.program_cache_sizes(),
+        "telemetry": eng.metrics.snapshot(),
     }
 
 
 def run(n_requests: int = 8, max_new: int = 16,
-        layouts=("1,8", "2,4")) -> List[Dict]:
+        layouts=("1,8", "2,4")):
     cfg = get_arch("llama3.2-1b", variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rows = []
+    skip = ("tokens", "telemetry")
     base = _one_run(model, params, cfg, None, n_requests, max_new)
     rows.append({"mesh": "single", **{k: v for k, v in base.items()
-                                      if k != "tokens"}})
+                                      if k not in skip}})
+    snap = base["telemetry"]
     for layout in layouts:
         r = _one_run(model, params, cfg, layout, n_requests, max_new)
         assert r["tokens"] == base["tokens"], \
@@ -104,8 +107,9 @@ def run(n_requests: int = 8, max_new: int = 16,
         assert all(v == 1 for v in r["programs"].values()), \
             f"step program recompiled on mesh {layout}: {r['programs']}"
         rows.append({"mesh": layout, "greedy_match": True,
-                     **{k: v for k, v in r.items() if k != "tokens"}})
-    return rows
+                     **{k: v for k, v in r.items() if k not in skip}})
+        snap = r["telemetry"]
+    return rows, snap
 
 
 def main(argv=None):
@@ -117,9 +121,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.smoke:
-        rows = run(n_requests=4, max_new=8, layouts=("2,4",))
+        rows, snap = run(n_requests=4, max_new=8, layouts=("2,4",))
     else:
-        rows = run()
+        rows, snap = run()
 
     print("sharded serving: mesh layouts vs single device "
           f"({len(jax.devices())} host-platform devices, greedy)")
@@ -148,7 +152,7 @@ def main(argv=None):
                                 arch="llama3.2-1b-reduced", greedy=True,
                                 n_devices=len(jax.devices()),
                                 max_batch=4),
-            metrics=metrics, data={"rows": rows}))
+            metrics=metrics, data={"rows": rows}, telemetry=snap))
     return rows
 
 

@@ -60,23 +60,24 @@ def _one_run(model, params, cfg, n_requests, max_new, **kw):
     st["decode_s"] = decode_s
     st["steps"] = eng._steps - warm_steps
     st["wall_s"] = wall
-    return timed, st
+    return timed, st, eng.metrics.snapshot()
 
 
 def run(n_requests: int = 12, max_new: int = 16, trials: int = 3,
-        gammas=(2, 4), drafts=("int8@1",), extra=("fp@1",)) -> List[Dict]:
+        gammas=(2, 4), drafts=("int8@1",), extra=("fp@1",)):
     cfg = get_arch("llama3.2-1b", variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rows = []
+    rows: List[Dict] = []
     baseline_tokens = None
+    snap = None
 
     def bench(label, **kw):
-        nonlocal baseline_tokens
+        nonlocal baseline_tokens, snap
         runs = []
         for _ in range(trials):
-            timed, st = _one_run(model, params, cfg, n_requests, max_new,
-                                 **kw)
+            timed, st, snap = _one_run(model, params, cfg, n_requests,
+                                       max_new, **kw)
             n_tok = sum(len(t) for t in timed.values())
             runs.append((n_tok / st["decode_s"], st))
             if baseline_tokens is None:
@@ -107,7 +108,7 @@ def run(n_requests: int = 12, max_new: int = 16, trials: int = 3,
             bench(f"spec draft={d} gamma={g}", draft=d, spec_gamma=g)
     for d in extra:
         bench(f"spec draft={d} gamma=4", draft=d, spec_gamma=4)
-    return rows
+    return rows, snap
 
 
 def main(argv=None):
@@ -122,10 +123,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.smoke:
-        rows = run(n_requests=4, max_new=12, trials=1, gammas=(2,),
-                   extra=())
+        rows, snap = run(n_requests=4, max_new=12, trials=1, gammas=(2,),
+                         extra=())
     else:
-        rows = run()
+        rows, snap = run()
 
     print("speculative decoding: fused draft-verify vs plain decode "
           "(batch=1, greedy)")
@@ -166,7 +167,7 @@ def main(argv=None):
             run=schema.run_meta(smoke=args.smoke,
                                 arch="llama3.2-1b-reduced", greedy=True,
                                 max_batch=1),
-            metrics=metrics, data={"rows": rows}))
+            metrics=metrics, data={"rows": rows}, telemetry=snap))
     return rows
 
 

@@ -1,0 +1,84 @@
+"""CI telemetry gate: validate bench artifacts + serving trace.
+
+  PYTHONPATH=src python -m benchmarks.check_telemetry \
+      BENCH_serving.json [BENCH_*.json ...] [--trace trace.json]
+
+For every BENCH_*.json argument:
+
+* the envelope must pass ``schema.validate_payload`` (v1 or v2);
+* when a ``telemetry`` section is present, its
+  ``counters["steady_compiles"]`` must be 0 — a steady-state recompile
+  in a warmed bench means an input shape escaped its bucket or a jitted
+  program picked up a fresh signature mid-stream (the recompile
+  watchdog, docs/observability.md#recompile-watchdog).
+
+With ``--trace`` the Chrome trace-event JSON must pass
+``serving/tracing.validate_chrome_trace`` and contain at least one
+complete per-request span (``req <uid>``).
+
+Exit code 0 = all clean; 1 = any violation (printed to stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from benchmarks import schema
+from repro.serving import tracing
+
+
+def check_artifact(path: str) -> List[str]:
+    errs = [f"{path}: {e}" for e in schema.validate_payload(path)]
+    with open(path) as f:
+        pl = json.load(f)
+    tel = pl.get("telemetry")
+    if isinstance(tel, dict):
+        steady = tel.get("counters", {}).get("steady_compiles", 0)
+        if steady:
+            errs.append(f"{path}: {steady} steady-state recompile(s) — "
+                        "a jitted program compiled after warmup "
+                        "(see docs/observability.md#recompile-watchdog)")
+    return errs
+
+
+def check_trace(path: str) -> List[str]:
+    errs = [f"{path}: {e}" for e in tracing.validate_chrome_trace(path)]
+    if errs:
+        return errs
+    with open(path) as f:
+        trace = json.load(f)
+    spans = tracing.complete_spans(trace)
+    if not spans:
+        errs.append(f"{path}: no complete per-request spans "
+                    "('req <uid>' X events)")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="*",
+                    help="BENCH_*.json paths to validate")
+    ap.add_argument("--trace", default="",
+                    help="Chrome trace-event JSON to validate")
+    args = ap.parse_args(argv)
+
+    errs: List[str] = []
+    for path in args.artifacts:
+        errs += check_artifact(path)
+    if args.trace:
+        errs += check_trace(args.trace)
+
+    if errs:
+        for e in errs:
+            print(f"check_telemetry: {e}", file=sys.stderr)
+        return 1
+    n = len(args.artifacts) + bool(args.trace)
+    print(f"check_telemetry: {n} artifact(s) clean "
+          "(schema valid, no steady-state recompiles)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

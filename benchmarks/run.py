@@ -52,7 +52,8 @@ def bench_kernels(csv):
 def bench_serving(csv):
     from benchmarks.bench_serving import run
     print(f"\n== serving engine throughput ==")
-    for r in run():
+    rows, _ = run()
+    for r in rows:
         csv.append((f"serve_b{r['max_batch']}",
                     r["decode_ms_p50"] * 1e3,
                     f"{r['tok_per_s']:.1f}tok/s"))

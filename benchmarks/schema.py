@@ -16,13 +16,20 @@ trajectory is machine-comparable across PRs without per-bench parsing:
      "trials": [361.8, 394.1, 407.9]},   // per-trial values when repeated
     ...
   ],
-  "data": { ... }                 // bench-specific detail (rows, sweeps)
+  "data": { ... },                // bench-specific detail (rows, sweeps)
+  "telemetry": { ... }            // optional: final MetricsRegistry
+                                  // snapshot of the bench's engine
+                                  // (serving/telemetry.py — counters,
+                                  // gauges, histograms, series,
+                                  // collected component stats)
 }
 ```
 
 `metrics` is the cross-PR comparison surface: a dashboard (or the next
 PR's reviewer) can diff `BENCH_x.json["metrics"]` without knowing the
-bench. `data` keeps each bench's full row-level output.
+bench. `data` keeps each bench's full row-level output. Schema v2 added
+the optional `telemetry` section; v1 artifacts (no telemetry) remain
+valid — `validate_payload` accepts both.
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ import platform
 import sys
 from typing import Any, Dict, List, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 def run_meta(smoke: bool = False, **extra) -> Dict[str, Any]:
@@ -58,9 +65,53 @@ def metric(name: str, unit: str, value,
 
 def payload(bench: str, *, run: Dict[str, Any],
             metrics: List[Dict[str, Any]],
-            data: Dict[str, Any]) -> Dict[str, Any]:
-    return {"bench": bench, "schema_version": SCHEMA_VERSION,
-            "run": run, "metrics": metrics, "data": data}
+            data: Dict[str, Any],
+            telemetry: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    pl = {"bench": bench, "schema_version": SCHEMA_VERSION,
+          "run": run, "metrics": metrics, "data": data}
+    if telemetry is not None:
+        pl["telemetry"] = telemetry
+    return pl
+
+
+def validate_payload(pl: Any) -> List[str]:
+    """Structural validation of one BENCH_*.json payload (or a path to
+    one): returns a list of problems, empty when the artifact matches
+    the envelope (v1 or v2). Used by ``benchmarks/check_telemetry.py``
+    in CI and by ``tests/test_telemetry.py``."""
+    if isinstance(pl, str):
+        import json
+        with open(pl) as f:
+            pl = json.load(f)
+    errs: List[str] = []
+    if not isinstance(pl, dict):
+        return ["payload is not an object"]
+    if not isinstance(pl.get("bench"), str) or not pl.get("bench"):
+        errs.append("missing/empty 'bench'")
+    if pl.get("schema_version") not in (1, SCHEMA_VERSION):
+        errs.append(f"unknown schema_version "
+                    f"{pl.get('schema_version')!r}")
+    if not isinstance(pl.get("run"), dict):
+        errs.append("'run' is not an object")
+    metrics = pl.get("metrics")
+    if not isinstance(metrics, list):
+        errs.append("'metrics' is not a list")
+    else:
+        for i, m in enumerate(metrics):
+            if not isinstance(m, dict) or not all(
+                    k in m for k in ("name", "unit", "value")):
+                errs.append(f"metric {i}: needs name/unit/value")
+    if not isinstance(pl.get("data"), dict):
+        errs.append("'data' is not an object")
+    tel = pl.get("telemetry")
+    if tel is not None:
+        if not isinstance(tel, dict):
+            errs.append("'telemetry' is not an object")
+        else:
+            for sec in ("counters", "gauges", "histograms"):
+                if not isinstance(tel.get(sec), dict):
+                    errs.append(f"telemetry.{sec} missing/not an object")
+    return errs
 
 
 def write(path: str, pl: Dict[str, Any]) -> None:

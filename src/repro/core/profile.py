@@ -20,40 +20,47 @@ class StageProfile:
     compute_ms: float
     output_bytes: int
     n_params: int
+    compile_ms: float = 0.0   # first (tracing+XLA) call minus steady median
 
 
 def profile_stages(stages: Sequence[Service], inputs: Any, *,
                    iters: int = 5) -> List[StageProfile]:
-    """Run the pipeline stage by stage, timing each (median of iters)."""
+    """Run the pipeline stage by stage, timing each (median of iters).
+    The first call is timed too: ``compile_ms`` is its excess over the
+    steady median — the one-off trace+XLA cost a cold service pays."""
     out: List[StageProfile] = []
     x = inputs
     for s in stages:
         fn = jax.jit(s.fn)
-        jax.block_until_ready(fn(s.params, x))        # compile
+        t0 = time.perf_counter()
+        y = jax.block_until_ready(fn(s.params, x))    # compile + first run
+        first_ms = (time.perf_counter() - t0) * 1e3
         times = []
         for _ in range(iters):
             t0 = time.perf_counter()
             y = jax.block_until_ready(fn(s.params, x))
             times.append(time.perf_counter() - t0)
         times.sort()
-        y = fn(s.params, x)
+        steady_ms = times[len(times) // 2] * 1e3
         out.append(StageProfile(
             stage=s.name,
-            compute_ms=times[len(times) // 2] * 1e3,
+            compute_ms=steady_ms,
             output_bytes=tree_nbytes(y),
-            n_params=s.n_params))
+            n_params=s.n_params,
+            compile_ms=max(0.0, first_ms - steady_ms)))
         x = y
     return out
 
 
 def format_profile(profiles: List[StageProfile]) -> str:
     total = sum(p.compute_ms for p in profiles)
-    lines = [f"{'stage':40s} {'ms':>10s} {'%':>6s} {'out bytes':>12s} "
-             f"{'params':>10s}"]
+    lines = [f"{'stage':40s} {'ms':>10s} {'%':>6s} {'compile ms':>11s} "
+             f"{'out bytes':>12s} {'params':>10s}"]
     for p in profiles:
         lines.append(
             f"{p.stage:40s} {p.compute_ms:10.2f} "
             f"{100 * p.compute_ms / max(total, 1e-9):5.1f}% "
+            f"{p.compile_ms:11.1f} "
             f"{p.output_bytes:12,d} {p.n_params:10,d}")
     lines.append(f"{'TOTAL':40s} {total:10.2f}")
     return "\n".join(lines)

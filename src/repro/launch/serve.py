@@ -80,6 +80,19 @@ def main(argv=None):
                          "variant)")
     ap.add_argument("--json", default="",
                     help="optional path to dump latency stats as JSON")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(request-lifecycle spans; load in Perfetto — "
+                         "see docs/observability.md)")
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="append periodic registry snapshots as JSONL "
+                         "(training/metrics.MetricsLogger format)")
+    ap.add_argument("--trace-dir", default="",
+                    help="capture a jax.profiler device trace of the "
+                         "first decode steps into this directory")
+    ap.add_argument("--log-every", type=float, default=0.0,
+                    help="seconds between one-line progress summaries "
+                         "while serving (0 = off)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch, variant=args.variant)
@@ -107,7 +120,9 @@ def main(argv=None):
                     else args.prefix_cache_tokens,
                     paged=args.paged, page_size=args.page_size,
                     num_pages=args.num_pages or None,
-                    mesh=args.mesh or None)
+                    mesh=args.mesh or None,
+                    recorder=bool(args.trace_out),
+                    trace_dir=args.trace_dir)
 
     rng = np.random.default_rng(args.seed)
     fe = cfg.frontend
@@ -123,9 +138,50 @@ def main(argv=None):
                               prompt=rng.integers(0, cfg.vocab, L),
                               max_new_tokens=args.max_new,
                               embeddings=emb))
-    responses = engine.run()
+    logger = None
+    if args.metrics_jsonl:
+        from repro.training.metrics import MetricsLogger
+        logger = MetricsLogger(args.metrics_jsonl,
+                               run_name=f"serve-{cfg.name}")
+
+    def _progress():
+        snap = engine.metrics.snapshot()
+        c, gz = snap["counters"], snap["gauges"]
+        fields = dict(steps=c.get("steps_total", 0),
+                      tokens=c.get("tokens_emitted", 0),
+                      active=gz.get("active_slots", 0),
+                      queued=gz.get("queue_depth", 0),
+                      compiles=c.get("compiles_total", 0))
+        if logger is not None:
+            logger.log("serve", **fields)
+        if args.log_every:
+            dt = time.perf_counter() - t0
+            print(f"[{dt:6.1f}s] steps={fields['steps']} "
+                  f"tokens={fields['tokens']} active={fields['active']} "
+                  f"queued={fields['queued']} "
+                  f"compiles={fields['compiles']}")
+
+    if args.log_every or logger is not None:
+        # hand-rolled drain loop so we can emit periodic summaries
+        next_log = t0 + (args.log_every or 1.0)
+        while engine.has_work:
+            engine.tick(args.sync_every)
+            if time.perf_counter() >= next_log:
+                _progress()
+                next_log = time.perf_counter() + (args.log_every or 1.0)
+        _progress()
+    responses = engine.run()          # finalize (stops device profiler)
     wall = time.perf_counter() - t0
     stats = engine.latency_stats()
+    if logger is not None:
+        logger.log("final", wall_s=wall, **{
+            k: v for k, v in stats.items()
+            if isinstance(v, (int, float))})
+        logger.close()
+    if args.trace_out:
+        engine.export_trace(args.trace_out)
+        print(f"chrome trace written to {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")
     print(f"arch={cfg.name} requests={args.requests} "
           f"batch={args.max_batch}")
     if engine.mesh is not None:

@@ -50,6 +50,21 @@ decode step with zero steady-state host<->device traffic, the bounded
 speculative step (``draft=``/``spec_gamma=``; chunked admission then
 runs as its own extend program right before the spec step, advancing
 target and draft caches in lockstep with the draft one position behind).
+
+Telemetry (``docs/observability.md``): every host-side stat lives in
+one ``serving/telemetry.MetricsRegistry`` (``Engine.metrics``) —
+counters (tokens emitted, steps by kind, admissions, spec
+accept/emit), gauges sampled at each poll (active slots, free pages,
+KV bytes per live token), bounded-reservoir histograms (TTFT, ITL) and
+the per-step wall/kind series ``latency_stats()`` is built on. Request
+lifecycles route through a ``Recorder`` (no-op by default; pass
+``recorder=True`` for a ``serving/tracing.Tracer`` and export a
+Perfetto-loadable Chrome trace with ``Engine.export_trace(path)``).
+Every jitted program is watched for XLA compiles: after
+``reset_stats()``/``mark_steady()`` arms the watchdog, a steady-state
+compile raises ``telemetry.RecompileWarning`` and increments the
+``steady_compiles`` counter CI fails on. ``trace_dir=`` additionally
+captures a ``jax.profiler`` device trace over a short step window.
 """
 from __future__ import annotations
 
@@ -65,7 +80,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models.model import Model
-from repro.serving import paged_kv
+from repro.serving import paged_kv, telemetry
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, Response
 from repro.serving.sampler import Sampler
@@ -103,7 +118,9 @@ class Engine:
                  prefix_cache_tokens: Optional[int] = None,
                  mesh: Any = None,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 recorder: Any = None, trace_dir: str = "",
+                 profile_steps: int = 8):
         """``params`` may be a quantized tree (``quant.quantize_params``):
         projections route through the fused dequantize-matmul inside the
         same jitted prefill/decode programs, nothing else changes.
@@ -162,6 +179,17 @@ class Engine:
         parity with the contiguous layout plus provisioning headroom.
         Composes with int8 KV, speculative decoding (the draft cache
         stays contiguous), chunked admission and mesh sharding.
+
+        ``recorder`` enables request-lifecycle tracing: ``True`` builds
+        a ``serving/tracing.Tracer`` (export with
+        ``Engine.export_trace(path)``), or pass any
+        ``telemetry.Recorder`` instance. None/False keeps the no-op
+        default — host bookkeeping only, zero per-step device work, and
+        greedy outputs / compiled-program counts bit-identical either
+        way (the metrics registry itself is always on; it is pure host
+        state). ``trace_dir`` additionally captures a ``jax.profiler``
+        device trace of ``profile_steps`` engine steps (the window
+        starts at step 1, after the first compile).
         """
         if kv_cache_dtype not in ("", "int8"):
             raise ValueError(f"unsupported kv_cache_dtype "
@@ -219,15 +247,40 @@ class Engine:
             self._param_sh = _SH.param_shardings(self.params, self.mesh)
             self.params = jax.device_put(self.params, self._param_sh)
 
+        # --- telemetry -------------------------------------------------- #
+        # the registry is the single host-side stats store: counters,
+        # gauges, histograms and the aligned per-step series that
+        # latency_stats()/benchmarks read (step_times/step_kinds below
+        # are live views into it). The recorder is the request-lifecycle
+        # event sink: a no-op by default, a tracing.Tracer on request.
+        self.metrics = telemetry.MetricsRegistry()
+        if recorder is True:
+            from repro.serving.tracing import Tracer
+            recorder = Tracer()
+        self.recorder: telemetry.Recorder = recorder or telemetry.Recorder()
+        self._watchdog = telemetry.CompileWatchdog(self.metrics,
+                                                   self.recorder)
+        self._step_series = self.metrics.get_series("step_wall_s")
+        self._kind_series = self.metrics.get_series("step_kind")
+        self._kinds_base = 0           # global step of step_kinds[0]
+        self._c_tokens = self.metrics.counter("tokens_emitted")
+        self._c_steps = self.metrics.counter("steps_total", persist=True)
+        self._c_admissions = self.metrics.counter("chunked_admissions")
+        self._c_spec_emitted = self.metrics.counter("spec_tokens_emitted")
+        self._c_spec_steps = self.metrics.counter("spec_active_steps")
+        self._h_ttft = self.metrics.histogram("ttft_s")
+        self._h_itl = self.metrics.histogram("itl_s")
+        self._trace_dir = trace_dir
+        self._profile_steps = max(1, int(profile_steps))
+        self._prof_on = self._prof_done = False
+        self._prof_base = 0
+        self._kv_nbytes = None         # lazy: KV bytes of the cache tree
+
         # host-side scheduling state
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.requests: Dict[int, Request] = {}
         self.responses: Dict[int, Response] = {}
-        self.step_times: List[float] = []
-        self.step_kinds: List[str] = []   # "plain"|"mixed"|"admit"|"spec",
-        # aligned with step_times — lets benchmarks separate steady
-        # decode from steps that also carried admission work
 
         # device-resident decode state (never read back in steady state)
         self.key = jax.random.PRNGKey(seed)
@@ -300,7 +353,6 @@ class Engine:
         # step(), pruned with the trace — _step_wall_base is the global
         # step index of entry 0)
         self._step_wall_base = 0
-        self._itl: Dict[int, List[float]] = {}    # per-request ITL samples
         self._await_first: List[Request] = []     # chunked admissions whose
         # first token exists on device but has no host timestamp yet
         self._drop_compile_step = True            # step_times[0] is compile
@@ -317,8 +369,6 @@ class Engine:
         self._draft_model: Optional[Model] = None
         self._draft_params = None
         self.draft_cache = None
-        self._spec_emitted = 0         # harvested tokens over spec steps
-        self._spec_active_steps = 0    # (step, active slot) pairs harvested
         if self.spec_gamma:
             if not model.supports_speculative:
                 raise ValueError(
@@ -394,7 +444,6 @@ class Engine:
             else:
                 self.prefix_cache = PrefixCache(pct, self.prefill_chunk)
         self._admit: Optional[_Admission] = None
-        self._chunked_admissions = 0
 
         self._step_fn = self._build_spec_step() if self.spec_gamma \
             else self._build_step()
@@ -402,11 +451,50 @@ class Engine:
         self._mixed_fn = None          # fused decode+chunk, built lazily
         self._admit_chunk_fn = None    # spec-mode chunk program, lazy
         self._slot_jits: Dict[Tuple, Any] = {}   # reset/materialize/extract
+        # live component stats surface through snapshot() collectors
+        if self.prefix_cache is not None:
+            self.metrics.add_collector(self.prefix_cache.stats)
+        if self.paged:
+            self.metrics.add_collector(self._paged.stats)
+
+    # ------------------------------------------------------------ #
+    # host-side step series (live views into the metrics registry)
+    # ------------------------------------------------------------ #
+    @property
+    def step_times(self) -> List[float]:
+        """Per-step wall clock, aligned with ``step_kinds``. The list is
+        the registry's ``step_wall_s`` series storage itself — appends
+        and in-place rewrites (burst averaging) hit the same object."""
+        return self._step_series.values
+
+    @step_times.setter
+    def step_times(self, v) -> None:
+        self._step_series.values[:] = list(v)
+
+    @property
+    def step_kinds(self) -> List[str]:
+        """"plain"|"mixed"|"admit"|"spec" per step, aligned with
+        ``step_times`` — lets benchmarks separate steady decode from
+        steps that also carried admission work."""
+        return self._kind_series.values
+
+    @step_kinds.setter
+    def step_kinds(self, v) -> None:
+        self._kind_series.values[:] = list(v)
+
+    def _record_step(self, kind: str) -> None:
+        """One engine step happened: advance the global counter and the
+        registry's per-kind counters + aligned kind series (the wall
+        entry is appended by ``step()`` once timing is known)."""
+        self._kind_series.append(kind)
+        self.metrics.counter("steps_" + kind).inc()
+        self._c_steps.inc()
+        self._steps += 1
 
     # ------------------------------------------------------------ #
     # jitted programs
     # ------------------------------------------------------------ #
-    def _jit(self, fn, donate=(), in_sh=None, out_sh=None):
+    def _jit(self, fn, donate=(), in_sh=None, out_sh=None, name=""):
         """``jax.jit`` with the engine's mesh wiring. Off-mesh this is a
         plain jit. On a mesh, every program gets explicit
         ``in_shardings``/``out_shardings`` (donated buffers keep their
@@ -414,9 +502,15 @@ class Engine:
         re-laid-out between steps) and is *traced* inside the
         activation-rules context — ``shard_activation`` call sites in
         the models become real constraints and ``kernels.dispatch``
-        routes Pallas ops to their partitionable jnp references."""
+        routes Pallas ops to their partitionable jnp references.
+
+        Every program is wrapped by the recompile watchdog: a call that
+        grows the jit cache records a compile event (program ``name``,
+        elapsed wall) into the registry, and — once the engine is
+        steady (``reset_stats``/``mark_steady``) — raises a
+        ``telemetry.RecompileWarning``."""
         if self.mesh is None:
-            return jax.jit(fn, donate_argnums=donate)
+            return self._watch(jax.jit(fn, donate_argnums=donate), name)
         jitted = jax.jit(fn, donate_argnums=donate,
                          in_shardings=in_sh, out_shardings=out_sh)
         mesh, rules = self.mesh, self._act_rules
@@ -426,7 +520,31 @@ class Engine:
             with activation_sharding(mesh, rules):
                 return jitted(*args)
         wrapped._jit = jitted        # compile-count introspection (tests)
-        return wrapped
+        return self._watch(wrapped, name)
+
+    def _watch(self, fn, name: str):
+        """Recompile-watchdog wrapper: detect compiles by jit-cache
+        growth around each call (a compile blocks the dispatching call,
+        so its wall time is the observed elapsed). Adds two cache-size
+        probes and two clock reads per call — host-only, no effect on
+        the compiled programs themselves."""
+        inner = getattr(fn, "_jit", fn)
+        probe = getattr(inner, "_cache_size", None)
+        if probe is None:            # jax without cache introspection
+            return fn
+        watchdog = self._watchdog
+
+        def watched(*args):
+            before = probe()
+            t0 = time.perf_counter()
+            out = fn(*args)
+            if probe() > before:
+                t1 = time.perf_counter()
+                watchdog.record(name or getattr(fn, "__name__", "jit"),
+                                t1 - t0, self._steps, t1)
+            return out
+        watched._jit = inner         # program_cache_sizes introspection
+        return watched
 
     def program_cache_sizes(self) -> Dict[str, int]:
         """Compiled-specialization count per fused-step program. Under a
@@ -483,7 +601,7 @@ class Engine:
             r, tok, vec = self._repl, self._tok_sh, self._vec_sh
             in_sh = (self._param_sh, self._cache_sh, tok, vec, vec, vec, r)
             out_sh = (tok, self._cache_sh, vec, vec, r)
-        return self._jit(step, donate, in_sh, out_sh)
+        return self._jit(step, donate, in_sh, out_sh, name="step")
 
     @staticmethod
     def _slot_extend(model, params, cache, slot, chunk, n, last_only=True,
@@ -583,7 +701,7 @@ class Engine:
             in_sh = (self._param_sh, self._cache_sh, tok, vec, vec, vec,
                      r, r, r, r, r, r, r)
             out_sh = (tok, tok, vec, self._cache_sh, vec, vec, vec, r)
-        return self._jit(mixed, donate, in_sh, out_sh)
+        return self._jit(mixed, donate, in_sh, out_sh, name="mixed")
 
     def _build_admit_chunk(self):
         """Spec-mode chunk program: advance one admitting request by up to
@@ -631,7 +749,7 @@ class Engine:
                      r, r, r, r, r, r, r, r)
             out_sh = (tok, tok, tok, vec, self._cache_sh,
                       self._draft_cache_sh, vec, vec, vec, r)
-        return self._jit(admit, donate, in_sh, out_sh)
+        return self._jit(admit, donate, in_sh, out_sh, name="admit_chunk")
 
     def _build_spec_step(self):
         """One fused draft–verify–accept program (static shapes):
@@ -751,7 +869,7 @@ class Engine:
             # tok's (batch, None) spec also covers the (B, gamma+1) block
             out_sh = (tok, tok, tok, vec, self._cache_sh,
                       self._draft_cache_sh, vec, vec, r)
-        return self._jit(spec, donate, in_sh, out_sh)
+        return self._jit(spec, donate, in_sh, out_sh, name="spec_step")
 
     def _get_prefill(self, bucket: int, masked: bool, has_emb: bool,
                      for_draft: bool = False):
@@ -790,7 +908,9 @@ class Engine:
             in_sh = (self._draft_param_sh if for_draft else self._param_sh,
                      r, r, (r if has_emb else None), r, cache_sh, r)
             out_sh = (r, cache_sh)
-        fn = self._jit(prefill, donate, in_sh, out_sh)
+        fn = self._jit(prefill, donate, in_sh, out_sh,
+                       name=f"prefill[{bucket}"
+                            f"{'d' if for_draft else ''}]")
         self._prefill_jits[kf] = fn
         return fn
 
@@ -879,7 +999,8 @@ class Engine:
                 # so a later materialize of the same entry is copy-only
                 in_sh = (self._cache_sh, r)
                 out_sh = self._kv_slice_shardings(P)
-        jitted = self._jit(fn, donate, in_sh, out_sh)
+        jitted = self._jit(fn, donate, in_sh, out_sh,
+                           name=f"{kind}[{P}]")
         self._slot_jits[jkey] = jitted
         return jitted
 
@@ -949,7 +1070,8 @@ class Engine:
         if self.mesh is not None:
             in_sh = (self._cache_sh, self._repl, self._repl)
             out_sh = self._cache_sh
-        jitted = self._jit(fn, donate, in_sh, out_sh)
+        jitted = self._jit(fn, donate, in_sh, out_sh,
+                           name=f"pagecopy[{k}]")
         self._slot_jits[jkey] = jitted
         return jitted
 
@@ -1005,6 +1127,8 @@ class Engine:
                 f"embeddings) and fit the KV ring ({len(req.prompt)} "
                 f"tokens vs {self.kv_len - self._prefix})")
         req.submitted_s = time.perf_counter()
+        if self.recorder.enabled:
+            self.recorder.on_submit(req)
         self.queue.append(req)
         self.requests[req.uid] = req
         self.responses[req.uid] = Response(uid=req.uid,
@@ -1074,6 +1198,8 @@ class Engine:
             self._depth_ub[b] = base
             self._admit = _Admission(req=req, slot=b, base=base,
                                      length=len(req.prompt))
+            if self.recorder.enabled:
+                self.recorder.on_admission(req, b, base, "chunked")
             return
         if kv is not None:
             if base < ent_len:
@@ -1090,6 +1216,8 @@ class Engine:
                     self.draft_cache, bb)
         self._admit = _Admission(req=req, slot=b, base=base,
                                  length=len(req.prompt))
+        if self.recorder.enabled:
+            self.recorder.on_admission(req, b, base, "chunked")
 
     def _prefill_direct(self, req: Request, b: int) -> None:
         """Legacy monolithic admission: one whole-prompt slot-direct
@@ -1097,6 +1225,8 @@ class Engine:
         ``prefill_chunk=0`` baseline, and the fallback for requests the
         extend path cannot serve)."""
         req.started_s = time.perf_counter()
+        if self.recorder.enabled:
+            self.recorder.on_admission(req, b, 0, "prefill")
         L = len(req.prompt)
         # prompts longer than the KV ring (sliding-window caches) fall
         # back to exact-length ring prefill, which rewrites the full row
@@ -1117,6 +1247,11 @@ class Engine:
         # the only per-request host sync: the first sampled token
         tok = int(first[0])
         req.first_token_s = time.perf_counter()
+        self._h_ttft.observe(req.first_token_s - req.submitted_s)
+        self._c_tokens.inc()
+        if self.recorder.enabled:
+            self.recorder.on_first_token(req, req.first_token_s)
+            self.recorder.on_emit(req, b, 1, req.first_token_s)
         resp = self.responses[req.uid]
         resp.tokens.append(tok)
         if req.max_new_tokens <= 1 or (req.eos_id is not None
@@ -1126,6 +1261,9 @@ class Engine:
                 req.eos_id is not None and tok == req.eos_id) \
                 else "length"
             req.finished_s = time.perf_counter()
+            if self.recorder.enabled:
+                self.recorder.on_finish(req, resp.finish_reason,
+                                        req.finished_s)
             return  # slot stays free
         if self.spec_gamma:
             # the draft needs the prompt context too: same bucketed
@@ -1205,8 +1343,7 @@ class Engine:
                                    self.tokens, self.remaining,
                                    self.active, self.eos, self.key)
         self._trace.append(self.tokens[:, 0])
-        self.step_kinds.append("plain")
-        self._steps += 1
+        self._record_step("plain")
 
     def _step_spec(self) -> None:
         if self.paged:
@@ -1226,8 +1363,7 @@ class Engine:
             self.draft_cache, self.tokens, self.prev, self.remaining,
             self.active, self.eos, self.key)
         self._trace.append((block, n_emit))
-        self.step_kinds.append("spec")
-        self._steps += 1
+        self._record_step("spec")
 
     def _chunk_args(self, adm: _Admission) -> Tuple[np.ndarray, int, bool]:
         C = self.prefill_chunk
@@ -1257,11 +1393,13 @@ class Engine:
             jnp.int32(req.max_new_tokens),
             jnp.int32(-1 if req.eos_id is None else int(req.eos_id)))
         self._trace.append((block, n_emit))
-        self.step_kinds.append("mixed")
+        if self.recorder.enabled:
+            self.recorder.on_chunk(req, adm.slot, adm.base, adm.base + n,
+                                   bool(last))
         adm.base += n
         if last:
             self._complete_admission(adm)
-        self._steps += 1
+        self._record_step("mixed")
 
     def _step_admit_chunk(self, adm: _Admission) -> None:
         """Dispatch the spec-mode admission chunk program (target +
@@ -1287,11 +1425,13 @@ class Engine:
             jnp.int32(-1 if req.eos_id is None else int(req.eos_id)),
             jnp.int32(int(req.prompt[-1])))
         self._trace.append((block, n_emit))
-        self.step_kinds.append("admit")
+        if self.recorder.enabled:
+            self.recorder.on_chunk(req, adm.slot, adm.base, adm.base + n,
+                                   bool(last))
         adm.base += n
         if last:
             self._complete_admission(adm)
-        self._steps += 1
+        self._record_step("admit")
 
     def _complete_admission(self, adm: _Admission) -> None:
         """The chunk just dispatched covers the end of the prompt: the
@@ -1304,7 +1444,7 @@ class Engine:
         self.slots[b] = adm.req
         self._slot_start[b] = self._steps
         self._await_first.append(adm.req)
-        self._chunked_admissions += 1
+        self._c_admissions.inc()
         self._admit = None
         if self.prefix_cache is not None:
             P = self.prefix_cache.wants(adm.req.prompt)
@@ -1323,6 +1463,9 @@ class Engine:
         for req in self._await_first:
             if not req.first_token_s:
                 req.first_token_s = now
+                self._h_ttft.observe(now - req.submitted_s)
+                if self.recorder.enabled:
+                    self.recorder.on_first_token(req, now)
         self._await_first.clear()
 
     def _poll(self) -> None:
@@ -1335,6 +1478,7 @@ class Engine:
         harvested tokens, so host and device slot state agree by
         construction."""
         if not self._trace:
+            self._sample_occupancy()
             return
         occupied = [(b, self._slot_start[b] - self._trace_base)
                     for b, r in enumerate(self.slots) if r is not None]
@@ -1376,8 +1520,8 @@ class Engine:
                     c = int(cnt[b])
                     if self.spec_gamma \
                             and blk.shape[1] == self.spec_gamma + 1:
-                        self._spec_emitted += c
-                        self._spec_active_steps += int(c > 0)
+                        self._c_spec_emitted.inc(c)
+                        self._c_spec_steps.inc(int(c > 0))
                     for tok in blk[b, :c]:
                         col.append(int(tok))
                         gaps.append(gap / c if gap is not None else None)
@@ -1413,6 +1557,37 @@ class Engine:
                     entries = [e["kv"] for e
                                in self.prefix_cache._entries.values()]
                 self._paged.check_invariants(entries)
+        self._sample_occupancy()
+
+    def _sample_occupancy(self) -> None:
+        """Refresh the poll-time gauges (live occupancy, pool pressure,
+        KV bytes per live token) and feed the recorder's counter lanes.
+        Host arithmetic only — the page allocator and slot table are
+        host-authoritative, nothing is read back from device."""
+        m = self.metrics
+        active = self.active_slots
+        m.gauge("active_slots").set(active)
+        m.gauge("queue_depth").set(len(self.queue))
+        pool: Dict[str, float] = {}
+        if self.paged:
+            ps = self._paged.stats()
+            pool["kv_pages_live"] = ps["kv_pages_live"]
+            pool["kv_pages_free"] = ps["kv_pages_free"]
+            m.gauge("kv_pages_free").set(ps["kv_pages_free"])
+            live_tok = ps["kv_pages_live"] * self.page_size
+        else:
+            live_tok = sum(
+                len(r.prompt) + len(self.responses[r.uid].tokens)
+                for r in self.slots if r is not None)
+        if live_tok:
+            if self._kv_nbytes is None:
+                self._kv_nbytes = sum(
+                    x.size * x.dtype.itemsize
+                    for x in jax.tree.leaves(self.cache))
+            m.gauge("kv_bytes_per_live_token").set(
+                self._kv_nbytes / live_tok)
+        if self.recorder.enabled:
+            self.recorder.on_poll(time.perf_counter(), active, pool)
 
     def _harvest(self, b: int, col: List[int],
                  gaps: Optional[List[Optional[float]]] = None) -> None:
@@ -1427,10 +1602,11 @@ class Engine:
         done = False
         if gaps is None:
             gaps = [None] * len(col)
+        n0 = len(resp.tokens)
         for tok, gap in zip(col, gaps):
             tok = int(tok)
             if resp.tokens and gap is not None:
-                self._itl.setdefault(req.uid, []).append(gap)
+                self._h_itl.observe(gap)
             resp.tokens.append(tok)
             if (req.eos_id is not None and tok == req.eos_id):
                 resp.finish_reason = "eos"
@@ -1440,9 +1616,18 @@ class Engine:
                 resp.finish_reason = "length"
                 done = True
                 break
+        appended = len(resp.tokens) - n0
+        if appended:
+            self._c_tokens.inc(appended)
+            if self.recorder.enabled:
+                self.recorder.on_emit(req, b, appended,
+                                      time.perf_counter())
         if done:
             resp.finished = True
             req.finished_s = time.perf_counter()
+            if self.recorder.enabled:
+                self.recorder.on_finish(req, resp.finish_reason,
+                                        req.finished_s)
             self.slots[b] = None
             if self.paged:
                 # the stream's pages return to the free list; pages a
@@ -1473,7 +1658,7 @@ class Engine:
         if not (self.active_slots or self._admit is not None):
             self._poll()
             return 0
-        t0 = time.perf_counter()
+        t0 = t_begin = time.perf_counter()
         # steps run outside tick (raw .step() calls) have no wall stamp;
         # backfill so gap indexing stays aligned with the step counter
         while len(self._step_wall) + self._step_wall_base < self._steps:
@@ -1506,8 +1691,20 @@ class Engine:
                 self.step_times[i] = dt
             for i in range(m):
                 self._step_wall.append(t0 + dt * (i + 1))
+        if self.recorder.enabled and self._steps > ran0:
+            # finalised per-step spans for the trace's steps lane: each
+            # step ends at its wall stamp and starts at its
+            # predecessor's (the burst entry for the first)
+            spans = []
+            for g in range(ran0, self._steps):
+                w = g - self._step_wall_base
+                start = self._step_wall[w - 1] if w > 0 else t_begin
+                spans.append((start, self._step_wall[w],
+                              self.step_kinds[g - self._kinds_base]))
+            self.recorder.on_steps(spans)
         self._stamp_first_tokens(t1)
         self._poll()
+        self._maybe_profile()
         return self._steps - ran0
 
     def run(self, max_steps: int = 100_000,
@@ -1520,43 +1717,89 @@ class Engine:
             if made == 0 and not self.has_work:
                 break
         self._poll()   # partial tokens for interrupted slots
+        self._stop_profile()
         return self.responses
 
     def reset_stats(self) -> None:
         """Forget timing and finished-request history (compiled programs,
         cache state and prefix-cache *entries* are kept) — for benchmarks
-        that warm an engine up and then measure a fresh stream."""
-        self.step_times = []
-        self.step_kinds = []
-        self._itl = {}
+        that warm an engine up and then measure a fresh stream. Also
+        *arms* the recompile watchdog: the warm-then-measure boundary is
+        where steady state begins, so any later XLA compile raises
+        ``telemetry.RecompileWarning``."""
+        self.metrics.reset()
+        self._kinds_base = self._steps
         self._drop_compile_step = False
         for uid in [u for u, r in self.responses.items() if r.finished]:
             del self.responses[uid]
             del self.requests[uid]
-        self._spec_emitted = 0
-        self._spec_active_steps = 0
-        self._chunked_admissions = 0
         if self.prefix_cache is not None:
             pc = self.prefix_cache
             pc.hits = pc.misses = pc.hit_tokens = pc.evictions = 0
         if self.paged:
             pk = self._paged
             pk.alias_pages = pk.cow_splits = pk.pages_released = 0
+        self._watchdog.arm()
+
+    def mark_steady(self) -> None:
+        """Arm the recompile watchdog without touching stats: every
+        later XLA compile is treated as a steady-state regression
+        (structured ``RecompileWarning`` + ``steady_compiles`` counter).
+        ``reset_stats()`` arms it implicitly."""
+        self._watchdog.arm()
+
+    # ------------------------------------------------------------ #
+    # trace / profiler export
+    # ------------------------------------------------------------ #
+    def export_trace(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Export the recorded request-lifecycle trace as a Chrome
+        trace-event object (written as JSON to ``path`` when given) —
+        see ``serving/tracing.py`` for the lane layout. Requires a
+        tracing recorder (``Engine(..., recorder=True)``)."""
+        exp = getattr(self.recorder, "export_chrome_trace", None)
+        if exp is None:
+            raise RuntimeError(
+                "export_trace needs a tracing recorder: build the "
+                "engine with recorder=True (or a tracing.Tracer)")
+        return exp(path)
+
+    def _maybe_profile(self) -> None:
+        """Drive the optional ``jax.profiler`` device-trace window
+        (``trace_dir=``): start after the first step (so the first
+        compile doesn't dominate the capture), stop after
+        ``profile_steps`` steps. Failures (profiler unavailable,
+        directory not writable) disable the capture, never the run."""
+        if not self._trace_dir or self._prof_done:
+            return
+        if not self._prof_on:
+            if self._steps >= 1:
+                try:
+                    jax.profiler.start_trace(self._trace_dir)
+                    self._prof_on = True
+                    self._prof_base = self._steps
+                except Exception:
+                    self._prof_done = True
+        elif self._steps - self._prof_base >= self._profile_steps:
+            self._stop_profile()
+
+    def _stop_profile(self) -> None:
+        if self._prof_on:
+            try:
+                jax.block_until_ready(self.tokens)
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+            self._prof_on = False
+            self._prof_done = True
 
     # ------------------------------------------------------------ #
     @staticmethod
     def _pct_stats(stats: Dict[str, float], prefix: str, samples,
                    pcts: Tuple[int, ...]) -> None:
-        """Add mean/percentile keys for one latency stream — only when it
-        actually produced samples. An empty stream contributes *no* keys
-        (rather than fabricated 0.0 latencies that would poison benchmark
-        artifacts): consumers treat a missing key as "no data"."""
-        arr = np.asarray(samples, np.float64)
-        if arr.size == 0:
-            return
-        stats[f"{prefix}_mean"] = float(arr.mean() * 1e3)
-        for p in pcts:
-            stats[f"{prefix}_p{p}"] = float(np.percentile(arr, p) * 1e3)
+        """Delegates to :func:`telemetry.pct_stats` — the one percentile
+        implementation (same keys, same empty-sample omission contract);
+        kept as a method for callers that reach it through the engine."""
+        telemetry.pct_stats(stats, prefix, samples, pcts)
 
     def latency_stats(self) -> Dict[str, float]:
         """Latency summary. The ``decode_ms_*`` / ``ttft_ms_*`` /
@@ -1571,17 +1814,14 @@ class Engine:
             "prefill_jit_entries": len(self._prefill_jits),
             "decode_steps": self._steps,
             "prefill_chunk": self.prefill_chunk,
-            "chunked_admissions": self._chunked_admissions,
+            "chunked_admissions": self._c_admissions.value,
         }
-        self._pct_stats(stats, "decode_ms", self.step_times[drop:],
-                        (50, 99))
-        self._pct_stats(stats, "ttft_ms",
-                        [r.first_token_s - r.submitted_s
-                         for r in self.requests.values()
-                         if r.first_token_s], (50, 95, 99))
-        self._pct_stats(stats, "itl_ms",
-                        [g for lst in self._itl.values() for g in lst],
-                        (50, 95, 99))
+        telemetry.pct_stats(stats, "decode_ms", self.step_times[drop:],
+                            (50, 99))
+        telemetry.pct_stats(stats, "ttft_ms", self._h_ttft.values,
+                            (50, 95, 99))
+        telemetry.pct_stats(stats, "itl_ms", self._h_itl.values,
+                            (50, 95, 99))
         if self.prefix_cache is not None:
             stats.update(self.prefix_cache.stats())
         if self.paged:
@@ -1589,10 +1829,11 @@ class Engine:
         if self.spec_gamma:
             # every harvested (step, active slot) pair emitted 1 + n_acc
             # tokens; acceptance rate = mean(n_acc) / gamma
-            n = max(self._spec_active_steps, 1)
+            emitted = self._c_spec_emitted.value
+            steps = self._c_spec_steps.value
+            n = max(steps, 1)
             stats["spec_gamma"] = self.spec_gamma
-            stats["spec_tokens_per_step"] = self._spec_emitted / n
+            stats["spec_tokens_per_step"] = emitted / n
             stats["spec_acceptance_rate"] = \
-                (self._spec_emitted - self._spec_active_steps) \
-                / (self.spec_gamma * n)
+                (emitted - steps) / (self.spec_gamma * n)
         return stats
