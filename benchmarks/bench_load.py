@@ -66,17 +66,22 @@ def make_workload(cfg, n_requests: int, seed: int, long_frac: float,
     return arrivals, prompts, max_new
 
 
-def serve_stream(eng: Engine, arrivals, prompts, max_new: int) -> Dict:
+def serve_stream(eng: Engine, arrivals, prompts, max_new: int,
+                 deadline_s: Optional[float] = None) -> Dict:
     """Open-loop driver: submit each request at its arrival time, advance
     the engine with ``tick`` in between. Wall clock is real — queueing
-    delay lands in TTFT exactly as a user would see it."""
+    delay lands in TTFT exactly as a user would see it. With
+    ``deadline_s`` every request carries that budget and the report adds
+    goodput-under-deadline: only streams that finished normally before
+    expiry count (docs/robustness.md)."""
     t0 = time.perf_counter()
     i, n = 0, len(prompts)
     while i < n or eng.has_work:
         now = time.perf_counter() - t0
         while i < n and arrivals[i] <= now:
             eng.submit(Request(uid=i, prompt=prompts[i],
-                               max_new_tokens=max_new))
+                               max_new_tokens=max_new,
+                               deadline_s=deadline_s))
             i += 1
         if not eng.has_work:
             time.sleep(min(0.002, max(0.0, arrivals[i] - now)))
@@ -89,6 +94,12 @@ def serve_stream(eng: Engine, arrivals, prompts, max_new: int) -> Dict:
     st["decode_tok_per_s"] = st["tokens_generated"] / decode_s \
         if decode_s else 0.0
     st["wall_tok_per_s"] = st["tokens_generated"] / wall if wall else 0.0
+    if deadline_s is not None:
+        ok = [r for u, r in eng.responses.items() if u >= 0 and r.ok]
+        st["deadline_s"] = deadline_s
+        st["deadline_met_frac"] = len(ok) / n if n else 0.0
+        st["goodput_tok_per_s"] = (
+            sum(r.n_generated for r in ok) / wall if wall else 0.0)
     return st
 
 
@@ -174,7 +185,8 @@ def steady_decode(model, params, cfg, chunk: int, trials: int = 3) -> Dict:
 def run(n_requests: int = 48, long_frac: float = 0.3,
         rate_hz: float = 5.0, max_new: int = 24, chunk: int = 32,
         prefix_tokens: int = 4096, max_batch: int = 4,
-        cache_len: int = 384, seed: int = 0) -> Dict:
+        cache_len: int = 384, seed: int = 0,
+        deadline_frac: float = 0.0) -> Dict:
     cfg = get_arch("llama3.2-1b", variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -189,16 +201,34 @@ def run(n_requests: int = 48, long_frac: float = 0.3,
                                      prefix_cache_tokens=prefix_tokens))]
     rows: List[Dict] = []
     outputs: Dict[str, Dict[int, List[int]]] = {}
-    snap = None
+    snap, deadline_s = None, None
     for name, kw in modes:
         eng = Engine(model, params, max_batch=max_batch,
                      cache_len=cache_len, sampler=Sampler(),
                      sync_every=4, **kw)
         _warm(eng, cfg, long_len, 64, max_new)
-        st = serve_stream(eng, arrivals, prompts, max_new)
+        if deadline_frac and deadline_s is None:
+            # calibrate once, on the first warmed engine, so every mode
+            # races the SAME absolute budget: deadline = frac x
+            # (probe TTFT + max_new decode steps at the warmed p50)
+            probe = Request(uid=-99,
+                            prompt=np.asarray(prompts[0][:8], np.int32),
+                            max_new_tokens=max_new)
+            eng.submit(probe)
+            eng.run()
+            p50 = telemetry.percentile(eng.step_times, 50) \
+                if eng.step_times else 0.0
+            ttft = probe.first_token_s - probe.submitted_s
+            deadline_s = deadline_frac * (ttft + max_new * p50)
+            eng.reset_stats()
+        st = serve_stream(eng, arrivals, prompts, max_new,
+                          deadline_s=deadline_s)
         snap = eng.metrics.snapshot()
+        # under deadlines, modes legitimately time out different
+        # requests: the greedy-identity gate compares survivors only
         outputs[name] = {u: list(r.tokens)
-                         for u, r in eng.responses.items() if u >= 0}
+                        for u, r in eng.responses.items()
+                        if u >= 0 and (deadline_s is None or r.ok)}
         # latency key groups are absent when a stream had no samples
         row = {"mode": name, **{k: st.get(k, float("nan")) for k in (
             "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
@@ -207,7 +237,8 @@ def run(n_requests: int = 48, long_frac: float = 0.3,
             "wall_tok_per_s", "tokens_generated", "n_finished",
             "decode_steps", "wall_s", "chunked_admissions")}}
         for k in ("prefix_hits", "prefix_hit_tokens", "prefix_entries",
-                  "prefix_tokens"):
+                  "prefix_tokens", "deadline_s", "deadline_met_frac",
+                  "goodput_tok_per_s", "timeouts", "preemptions"):
             if k in st:
                 row[k] = st[k]
         rows.append(row)
@@ -221,10 +252,16 @@ def run(n_requests: int = 48, long_frac: float = 0.3,
     steady["stall_plain_step_ms_p50"] = steady_stall["plain_step_ms_p50"]
 
     # continuous batching is a scheduling change, not a model change:
-    # greedy outputs must be token-identical in every mode
+    # greedy outputs must be token-identical in every mode (under a
+    # deadline, over the requests that met it in both modes)
     for name in ("chunked", "chunked+prefix"):
-        assert outputs[name] == outputs["stall"], \
-            f"greedy output diverged in mode {name!r}"
+        if deadline_s is None:
+            assert outputs[name] == outputs["stall"], \
+                f"greedy output diverged in mode {name!r}"
+        else:
+            for u in set(outputs[name]) & set(outputs["stall"]):
+                assert outputs[name][u] == outputs["stall"][u], \
+                    f"greedy output diverged in mode {name!r}, uid {u}"
     for row in rows:
         row["greedy_match"] = True
     return {
@@ -232,7 +269,9 @@ def run(n_requests: int = 48, long_frac: float = 0.3,
                      "long_frac": long_frac, "long_len": list(long_len),
                      "max_new": max_new, "max_batch": max_batch,
                      "cache_len": cache_len, "prefill_chunk": chunk,
-                     "prefix_cache_tokens": prefix_tokens, "seed": seed},
+                     "prefix_cache_tokens": prefix_tokens, "seed": seed,
+                     "deadline_frac": deadline_frac,
+                     "deadline_s": deadline_s},
         "rows": rows,
         "steady": steady,
         # final registry snapshot of the last mode's engine; popped into
@@ -250,12 +289,18 @@ def main(argv=None):
     ap.add_argument("--min-itl-p99-improvement", type=float, default=0.0,
                     help="assert chunked p99 ITL is at least this factor "
                          "below the stall baseline (0 = report only)")
+    ap.add_argument("--deadline-frac", type=float, default=0.0,
+                    help="give every request a deadline of this fraction "
+                         "of its estimated unloaded service time (probe "
+                         "TTFT + max_new x warmed step p50) and report "
+                         "goodput-under-deadline per mode (0 = off)")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        data = run(n_requests=2, long_frac=1.0, rate_hz=20.0, max_new=6)
+        data = run(n_requests=2, long_frac=1.0, rate_hz=20.0, max_new=6,
+                   deadline_frac=args.deadline_frac)
     else:
-        data = run()
+        data = run(deadline_frac=args.deadline_frac)
 
     print("load benchmark: Poisson arrivals, mixed prompt lengths "
           "(stall vs chunked prefill)")
@@ -271,6 +316,15 @@ def main(argv=None):
     imp = by["stall"]["itl_ms_p99"] / max(by["chunked"]["itl_ms_p99"],
                                           1e-9)
     print(f"  p99 ITL improvement (stall -> chunked): {imp:.2f}x")
+    if args.deadline_frac:
+        dl = data["workload"]["deadline_s"]
+        print(f"  goodput under a {dl * 1e3:.0f}ms deadline "
+              f"({args.deadline_frac}x unloaded service time):")
+        for r in data["rows"]:
+            print(f"    {r['mode']:>15s}: "
+                  f"{r['goodput_tok_per_s']:8.1f} tok/s good, "
+                  f"met {r['deadline_met_frac'] * 100:5.1f}%, "
+                  f"timeouts={r['timeouts']}")
     print(f"  steady decode (serving config, chunk on): "
           f"{data['steady']['steady_decode_tok_per_s']:.1f} tok/s "
           f"(plain-step p50 {data['steady']['plain_step_ms_p50']:.2f}ms, "
@@ -302,6 +356,12 @@ def main(argv=None):
                    schema.metric(
                        "prefix_hit_tokens", "tokens",
                        by["chunked+prefix"].get("prefix_hit_tokens", 0))]
+        if args.deadline_frac:
+            metrics += [
+                schema.metric("goodput_tok_per_s_chunked", "tok/s",
+                              by["chunked"]["goodput_tok_per_s"]),
+                schema.metric("deadline_met_frac_chunked", "frac",
+                              by["chunked"]["deadline_met_frac"])]
         schema.write(args.out, schema.payload(
             "load", run=schema.run_meta(smoke=args.smoke,
                                         arch="llama3.2-1b-reduced",

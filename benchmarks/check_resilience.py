@@ -1,0 +1,138 @@
+"""CI resilience gate: a deterministic chaos smoke against the engine.
+
+  PYTHONPATH=src python -m benchmarks.check_resilience
+
+One fixed-seed scenario on the paged + prefix-cache engine:
+
+* a fault-free run records the expected greedy tokens;
+* the chaos run is warmed (programs compiled, ``reset_stats()`` arms the
+  recompile watchdog), then replays the same workload under an injected
+  schedule — a NaN strike on one slot, repeated forced page-pool
+  exhaustions, a host stall — plus a request with an expired deadline.
+
+Gate conditions (exit 1 on any violation, printed to stderr):
+
+* exactly one stream errors (the NaN target), exactly one times out;
+* every surviving stream's greedy tokens match the fault-free run
+  (preemption replay and NaN containment are exact);
+* nothing leaks: no active slots, empty queue, zero live KV pages after
+  draining the prefix cache, allocator invariants hold;
+* ``steady_compiles == 0`` — injection must never recompile a program
+  (the no-op-invisibility contract of serving/faults.py).
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving.engine import Engine
+from repro.serving.faults import Faults
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+SEED = 0
+NAN_SLOT = 1
+
+
+def _workload(cfg, uid0: int, deadline_uid: bool):
+    rng = np.random.default_rng(SEED + 7)
+    head = rng.integers(0, cfg.vocab, 16)
+    reqs = []
+    for i, n in enumerate((5, 9, 12, 7)):
+        body = rng.integers(0, cfg.vocab, n)
+        prompt = np.concatenate([head, body]) if i % 2 else body
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=10))
+    if deadline_uid:
+        # expires before admission: the deterministic timeout case
+        reqs.append(Request(uid=uid0 + 90,
+                            prompt=rng.integers(0, cfg.vocab, 6),
+                            max_new_tokens=4, deadline_s=1e-6))
+    return reqs
+
+
+def _engine(model, params, **kw):
+    return Engine(model, params, max_batch=2, cache_len=64,
+                  sampler=Sampler(), prefill_chunk=8,
+                  prefix_cache_tokens=256, paged=True, page_size=8, **kw)
+
+
+def main(argv=None) -> int:
+    cfg = get_arch("llama3.2-1b", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+
+    # -- expected tokens: the fault-free run ------------------------- #
+    clean = _engine(model, params)
+    for r in _workload(cfg, 0, deadline_uid=False):
+        clean.submit(r)
+    want = {u: list(r.tokens) for u, r in clean.run().items()}
+
+    # -- chaos run: warm, arm the watchdog, inject ------------------- #
+    eng = _engine(model, params, faults=Faults(seed=SEED))
+    for r in _workload(cfg, 1000, deadline_uid=False):   # warm pass
+        eng.submit(r)
+    eng.run()
+    eng.reset_stats()                   # compile from here = failure
+    (eng.faults
+     .on("nan_logits", step=eng._steps + 4, slot=NAN_SLOT)
+     .on("page_alloc", step=eng._steps + 7, times=4)
+     .on("slow_step", step=eng._steps + 2, delay_s=0.002))
+    for r in _workload(cfg, 0, deadline_uid=True):
+        eng.submit(r)
+    resp = eng.run()
+
+    errs: List[str] = []
+    by_reason: Dict[str, int] = {}
+    for r in resp.values():
+        by_reason[r.finish_reason] = by_reason.get(r.finish_reason, 0) + 1
+    if by_reason.get("error", 0) != 1:
+        errs.append(f"expected exactly 1 errored stream (NaN target), "
+                    f"got finish reasons {by_reason}")
+    if by_reason.get("timeout", 0) != 1:
+        errs.append(f"expected exactly 1 timeout, got {by_reason}")
+    for u, r in resp.items():
+        if r.ok and r.tokens != want.get(u):
+            errs.append(f"survivor uid {u} diverged from the fault-free "
+                        f"run: {r.tokens} != {want.get(u)}")
+
+    st = eng.latency_stats()
+    if st.get("faults_injected", 0) < 3:
+        errs.append(f"schedule under-fired: faults_injected="
+                    f"{st.get('faults_injected')} < 3")
+    if eng.has_work or any(s is not None for s in eng.slots):
+        errs.append("engine leaked work: queue or slot table non-empty")
+    while eng.prefix_cache.drop_lru():
+        pass
+    if eng._paged.live_pages != 0:
+        errs.append(f"leaked KV pages: {eng._paged.live_pages} live "
+                    "after drain")
+    try:
+        eng._paged.check_invariants()
+    except AssertionError as e:
+        errs.append(f"allocator invariants violated: {e}")
+    steady = eng.metrics.snapshot()["counters"].get("steady_compiles", 0)
+    if steady:
+        errs.append(f"{steady} steady-state recompile(s) during chaos — "
+                    "fault injection changed a program shape")
+
+    if errs:
+        for e in errs:
+            print(f"check_resilience: {e}", file=sys.stderr)
+        return 1
+    print(f"check_resilience: chaos smoke clean — "
+          f"{sum(1 for r in resp.values() if r.ok)} survivors "
+          f"token-identical, reasons={by_reason}, "
+          f"preemptions={st.get('preemptions', 0)}, "
+          f"faults_injected={st.get('faults_injected', 0)}, "
+          f"0 leaked pages/slots, steady_compiles=0")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

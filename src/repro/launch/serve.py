@@ -14,6 +14,7 @@ import numpy as np
 from repro.configs import ARCHS, get_arch
 from repro.models.model import build
 from repro.serving.engine import Engine
+from repro.serving.faults import Faults
 from repro.serving.request import Request
 from repro.serving.sampler import Sampler
 
@@ -93,6 +94,17 @@ def main(argv=None):
     ap.add_argument("--log-every", type=float, default=0.0,
                     help="seconds between one-line progress summaries "
                          "while serving (0 = off)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault schedule, e.g. "
+                         "'nan_logits@12/1,page_alloc@30x2' (grammar: "
+                         "site[@step][/slot][xN][+delay][%%prob]; see "
+                         "repro/serving/faults.py). '' defers to the "
+                         "REPRO_FAULTS env var")
+    ap.add_argument("--faults-seed", type=int, default=0,
+                    help="seed for the --faults schedule's dice")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none); "
+                         "expired requests finish with reason 'timeout'")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch, variant=args.variant)
@@ -122,7 +134,9 @@ def main(argv=None):
                     num_pages=args.num_pages or None,
                     mesh=args.mesh or None,
                     recorder=bool(args.trace_out),
-                    trace_dir=args.trace_dir)
+                    trace_dir=args.trace_dir,
+                    faults=(Faults.parse(args.faults, seed=args.faults_seed)
+                            if args.faults else None))
 
     rng = np.random.default_rng(args.seed)
     fe = cfg.frontend
@@ -137,7 +151,8 @@ def main(argv=None):
         engine.submit(Request(uid=uid,
                               prompt=rng.integers(0, cfg.vocab, L),
                               max_new_tokens=args.max_new,
-                              embeddings=emb))
+                              embeddings=emb,
+                              deadline_s=args.deadline or None))
     logger = None
     if args.metrics_jsonl:
         from repro.training.metrics import MetricsLogger
@@ -204,6 +219,15 @@ def main(argv=None):
     print(f"itl ms: mean={g('itl_ms_mean'):.2f} "
           f"p50={g('itl_ms_p50'):.2f} p95={g('itl_ms_p95'):.2f} "
           f"p99={g('itl_ms_p99'):.2f}")
+    n_ok = sum(1 for r in responses.values() if r.ok)
+    if n_ok != len(responses) or stats.get("preemptions") \
+            or stats.get("faults_injected"):
+        print(f"resilience: ok={n_ok}/{len(responses)} "
+              f"timeouts={stats.get('timeouts', 0)} "
+              f"cancelled={stats.get('cancellations', 0)} "
+              f"errors={stats.get('slot_errors', 0)} "
+              f"preemptions={stats.get('preemptions', 0)} "
+              f"faults_injected={stats.get('faults_injected', 0)}")
     print(f"prefill jit entries={stats['prefill_jit_entries']}")
     if engine.prefill_chunk:
         line = (f"continuous batching: chunk={stats['prefill_chunk']} "

@@ -65,6 +65,20 @@ Every jitted program is watched for XLA compiles: after
 compile raises ``telemetry.RecompileWarning`` and increments the
 ``steady_compiles`` counter CI fails on. ``trace_dir=`` additionally
 captures a ``jax.profiler`` device trace over a short step window.
+
+Resilience (``docs/robustness.md``): requests carry ``deadline_s`` and
+``priority``; ``Engine.cancel(uid)`` and per-poll deadline enforcement
+finish streams with ``finish_reason`` "cancelled"/"timeout", releasing
+their slot and pages immediately. Under slot or page pressure the
+engine preempts a victim (lowest priority, then latest deadline) and
+requeues it; on re-admission the generated prefix is replayed through
+the chunked-extend path, so the resumed stream's output is identical
+to an unpreempted run. An on-device NaN/inf guard at every sampler
+boundary contains a poisoned slot to a ``finish_reason="error"``
+finish while the rest of the fused batch continues. All of it is
+exercised by the deterministic fault registry in ``serving/faults.py``
+(``Engine(faults=...)`` / ``REPRO_FAULTS``), a zero-overhead no-op by
+default.
 """
 from __future__ import annotations
 
@@ -80,12 +94,20 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models.model import Model
+from repro.serving import faults as faults_mod
 from repro.serving import paged_kv, telemetry
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, Response
 from repro.serving.sampler import Sampler
 
 MIN_BUCKET = 8
+
+#: Sentinel "token" the fused steps emit for a slot whose sampler logits
+#: were not finite (NaN/inf): the on-device guard deactivates only that
+#: row, and the host harvest turns the sentinel into finish_reason
+#: "error" without appending it. Real token ids are >= 0 and the no-EOS
+#: sentinel is -1, so -2 is unambiguous.
+ERR_TOKEN = -2
 
 
 def bucket_length(n: int, cap: int, lo: int = MIN_BUCKET) -> int:
@@ -96,15 +118,45 @@ def bucket_length(n: int, cap: int, lo: int = MIN_BUCKET) -> int:
     return min(b, cap)
 
 
+def _guarded_sample(sampler, key, logits):
+    """NaN/inf containment at the sampler boundary. Rows whose logits
+    are not finite emit :data:`ERR_TOKEN` instead of sampling garbage
+    (argmax/categorical over NaN is undefined) and the caller marks only
+    those rows done — the rest of the fused batch is unaffected (samples
+    are per-row functions of per-row logits). Finite rows are
+    bit-identical to an unguarded call: the ``where`` masks select the
+    original logits elementwise."""
+    bad = ~jnp.all(jnp.isfinite(logits), axis=-1)                # (B,)
+    safe = jnp.where(bad[:, None], 0.0, logits)
+    nxt = jnp.where(bad, jnp.int32(ERR_TOKEN), sampler(key, safe))
+    return nxt, bad
+
+
+def _finite_rows(logits):
+    """Replace non-finite logit rows with zeros (draft-side guard: the
+    proposals sampled from a poisoned draft row are garbage, but the
+    target verify rejects them — zeroing just keeps the sampling and
+    accept-ratio math well-defined)."""
+    ok = jnp.all(jnp.isfinite(logits), axis=-1, keepdims=True)
+    return jnp.where(ok, logits, 0.0)
+
+
 @dataclasses.dataclass
 class _Admission:
-    """One in-flight chunked admission: the prompt enters the cache
-    ``prefill_chunk`` tokens per fused step, starting at ``base`` (> 0
-    when a prefix-cache hit pre-populated the slot)."""
+    """One in-flight chunked admission: the effective token stream
+    enters the cache ``prefill_chunk`` tokens per fused step, starting
+    at ``base`` (> 0 when a prefix-cache hit pre-populated the slot).
+    ``tokens`` is the prompt plus — when resuming a preempted request —
+    the ``n_done`` tokens it had already generated: replaying them
+    through the same extend path makes the resumed stream token-
+    identical to an unpreempted run (greedy)."""
     req: Request
     slot: int
     base: int
     length: int
+    tokens: np.ndarray = None
+    n_done: int = 0
+    resumed: bool = False
 
 
 class Engine:
@@ -119,6 +171,7 @@ class Engine:
                  mesh: Any = None,
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
+                 faults: Any = None,
                  recorder: Any = None, trace_dir: str = "",
                  profile_steps: int = 8):
         """``params`` may be a quantized tree (``quant.quantize_params``):
@@ -179,6 +232,15 @@ class Engine:
         parity with the contiguous layout plus provisioning headroom.
         Composes with int8 KV, speculative decoding (the draft cache
         stays contiguous), chunked admission and mesh sharding.
+
+        ``faults`` enables deterministic fault injection
+        (``serving/faults.py``): a ``Faults`` schedule, a spec string
+        for ``Faults.parse`` (``"nan_logits@12/1,page_alloc@30"``), or
+        None to follow the ``REPRO_FAULTS`` env var. The default is the
+        zero-overhead ``NoFaults`` no-op: programs, outputs and
+        ``program_cache_sizes()`` are bit-identical with it (the NaN
+        site injects through the always-present ``poison`` input, never
+        a recompiled program variant).
 
         ``recorder`` enables request-lifecycle tracing: ``True`` builds
         a ``serving/tracing.Tracer`` (export with
@@ -270,17 +332,36 @@ class Engine:
         self._c_spec_steps = self.metrics.counter("spec_active_steps")
         self._h_ttft = self.metrics.histogram("ttft_s")
         self._h_itl = self.metrics.histogram("itl_s")
+        self._c_preempt = self.metrics.counter("preemptions")
+        self._c_timeout = self.metrics.counter("timeouts")
+        self._c_cancel = self.metrics.counter("cancellations")
+        self._c_faults = self.metrics.counter("faults_injected")
+        self._c_errors = self.metrics.counter("slot_errors")
         self._trace_dir = trace_dir
         self._profile_steps = max(1, int(profile_steps))
         self._prof_on = self._prof_done = False
         self._prof_base = 0
         self._kv_nbytes = None         # lazy: KV bytes of the cache tree
 
+        # --- fault injection (docs/robustness.md) --------------------- #
+        # deterministic seeded schedule; the default NoFaults is a
+        # zero-overhead no-op (same contract as the Recorder)
+        if faults is None:
+            faults = faults_mod.from_env()
+        elif isinstance(faults, str):
+            faults = faults_mod.Faults.parse(faults)
+        elif faults is False:
+            faults = faults_mod.NoFaults()
+        self.faults = faults
+        if self.faults.enabled:
+            self.metrics.add_collector(self.faults.stats)
+
         # host-side scheduling state
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.requests: Dict[int, Request] = {}
         self.responses: Dict[int, Response] = {}
+        self._deadline_armed = False   # any live request has deadline_s
 
         # device-resident decode state (never read back in steady state)
         self.key = jax.random.PRNGKey(seed)
@@ -290,6 +371,13 @@ class Engine:
         self.remaining = jnp.zeros((max_batch,), jnp.int32)
         self.active = jnp.zeros((max_batch,), bool)
         self.eos = jnp.full((max_batch,), -1, jnp.int32)
+        # fault-poison lane: an always-present additive input to every
+        # step program's sampler logits (0.0 = exact identity for finite
+        # values). The nan_logits site sets one row to NaN for one step;
+        # because it is a program *input*, injection never recompiles
+        # and a fault-free engine's programs are bit-identical.
+        self.poison = self._poison_zero = jnp.zeros((max_batch,),
+                                                    jnp.float32)
 
         # --- paged KV cache ------------------------------------------- #
         self.paged = bool(paged)
@@ -338,6 +426,9 @@ class Engine:
             self.remaining = jax.device_put(self.remaining, self._vec_sh)
             self.active = jax.device_put(self.active, self._vec_sh)
             self.eos = jax.device_put(self.eos, self._vec_sh)
+            self._poison_zero = jax.device_put(self._poison_zero,
+                                               self._vec_sh)
+            self.poison = self._poison_zero
             self.key = jax.device_put(self.key, self._repl)
 
         # per-step sampled-token trace: device arrays, harvested lazily.
@@ -573,24 +664,30 @@ class Engine:
         model, sampler = self.model, self.sampler
 
         if self.paged:
-            def step(params, cache, tokens, remaining, active, eos, key):
+            def step(params, cache, tokens, remaining, active, eos, key,
+                     poison):
                 logits, cache = model.extend_into_cache(
                     params, tokens, cache, active.astype(jnp.int32),
                     last_only=True)
                 key, sk = jax.random.split(key)
-                nxt = sampler(sk, logits[:, 0].astype(jnp.float32))
-                done = active & ((remaining <= 1) | (nxt == eos))
+                nxt, bad = _guarded_sample(
+                    sampler, sk,
+                    logits[:, 0].astype(jnp.float32) + poison[:, None])
+                done = active & (bad | (remaining <= 1) | (nxt == eos))
                 new_active = active & ~done
                 remaining = jnp.where(active, remaining - 1, remaining)
                 new_tokens = jnp.where(active, nxt, tokens[:, 0])
                 return (new_tokens[:, None], cache, remaining, new_active,
                         key)
         else:
-            def step(params, cache, tokens, remaining, active, eos, key):
+            def step(params, cache, tokens, remaining, active, eos, key,
+                     poison):
                 logits, cache = model.decode_step(params, tokens, cache)
                 key, sk = jax.random.split(key)
-                nxt = sampler(sk, logits[:, -1].astype(jnp.float32))  # (B,)
-                done = active & ((remaining <= 1) | (nxt == eos))
+                nxt, bad = _guarded_sample(                        # (B,)
+                    sampler, sk,
+                    logits[:, -1].astype(jnp.float32) + poison[:, None])
+                done = active & (bad | (remaining <= 1) | (nxt == eos))
                 new_active = active & ~done
                 remaining = jnp.where(active, remaining - 1, remaining)
                 return nxt[:, None], cache, remaining, new_active, key
@@ -599,7 +696,8 @@ class Engine:
         in_sh = out_sh = None
         if self.mesh is not None:
             r, tok, vec = self._repl, self._tok_sh, self._vec_sh
-            in_sh = (self._param_sh, self._cache_sh, tok, vec, vec, vec, r)
+            in_sh = (self._param_sh, self._cache_sh, tok, vec, vec, vec, r,
+                     vec)
             out_sh = (tok, self._cache_sh, vec, vec, r)
         return self._jit(step, donate, in_sh, out_sh, name="step")
 
@@ -666,7 +764,7 @@ class Engine:
         is_paged = self.paged
 
         def mixed(params, cache, tokens, remaining, active, eos, key,
-                  chunk, a_slot, a_len, a_last, a_rem, a_eos):
+                  chunk, a_slot, a_len, a_last, a_rem, a_eos, poison):
             B = tokens.shape[0]
             bidx = jnp.arange(B)
             is_admit = bidx == a_slot
@@ -679,10 +777,11 @@ class Engine:
             logits = jnp.where(is_admit[:, None], ch_logits[0, 0][None],
                                dec_logits[:, 0])
             key, sk = jax.random.split(key)
-            nxt = sampler(sk, logits.astype(jnp.float32))       # (B,)
+            nxt, bad = _guarded_sample(                         # (B,)
+                sampler, sk, logits.astype(jnp.float32) + poison[:, None])
             arm = is_admit & a_last
             emit = active | arm
-            done = emit & ((jnp.where(arm, a_rem, remaining) <= 1)
+            done = emit & (bad | (jnp.where(arm, a_rem, remaining) <= 1)
                            | (nxt == jnp.where(arm, a_eos, eos)))
             new_active = emit & ~done
             new_remaining = jnp.where(
@@ -699,7 +798,7 @@ class Engine:
         if self.mesh is not None:
             r, tok, vec = self._repl, self._tok_sh, self._vec_sh
             in_sh = (self._param_sh, self._cache_sh, tok, vec, vec, vec,
-                     r, r, r, r, r, r, r)
+                     r, r, r, r, r, r, r, vec)
             out_sh = (tok, tok, vec, self._cache_sh, vec, vec, vec, r)
         return self._jit(mixed, donate, in_sh, out_sh, name="mixed")
 
@@ -718,7 +817,7 @@ class Engine:
 
         def admit(params, dparams, cache, dcache, tokens, prev, remaining,
                   active, eos, key, chunk, a_slot, a_len, d_len, a_last,
-                  a_rem, a_eos, a_prev):
+                  a_rem, a_eos, a_prev, poison):
             B = tokens.shape[0]
             bidx = jnp.arange(B)
             is_admit = bidx == a_slot
@@ -728,9 +827,11 @@ class Engine:
             _, dcache = self._slot_extend(
                 draft, dparams, dcache, a_slot, chunk, d_len)
             key, sk = jax.random.split(key)
-            nxt = sampler(sk, logits[:, 0].astype(jnp.float32))  # (1,)
+            nxt, bad = _guarded_sample(                          # (1,)
+                sampler, sk,
+                logits[:, 0].astype(jnp.float32) + poison[a_slot])
             arm = is_admit & a_last
-            done = arm & ((a_rem <= 1) | (nxt[0] == a_eos))
+            done = arm & (bad[0] | (a_rem <= 1) | (nxt[0] == a_eos))
             new_active = active | (arm & ~done)
             new_remaining = jnp.where(arm, a_rem - 1, remaining)
             new_eos = jnp.where(arm, a_eos, eos)
@@ -746,7 +847,7 @@ class Engine:
             r, tok, vec = self._repl, self._tok_sh, self._vec_sh
             in_sh = (self._param_sh, self._draft_param_sh, self._cache_sh,
                      self._draft_cache_sh, tok, tok, vec, vec, vec, r,
-                     r, r, r, r, r, r, r, r)
+                     r, r, r, r, r, r, r, r, vec)
             out_sh = (tok, tok, tok, vec, self._cache_sh,
                       self._draft_cache_sh, vec, vec, vec, r)
         return self._jit(admit, donate, in_sh, out_sh, name="admit_chunk")
@@ -791,16 +892,18 @@ class Engine:
         draft, gamma = self._draft_model, self.spec_gamma
 
         def spec(params, dparams, cache, dcache, tokens, prev, remaining,
-                 active, eos, key):
+                 active, eos, key, poison):
             B = tokens.shape[0]
             act1 = active.astype(jnp.int32)
             # 1) draft proposals (and their full logit rows, for the
-            #    stochastic accept ratio p/q)
+            #    stochastic accept ratio p/q). _finite_rows keeps a
+            #    NaN-poisoned draft row well-defined — the target verify
+            #    is the authority and simply rejects its proposals
             window = jnp.concatenate([prev, tokens], axis=1)   # (B, 2)
             dl, dcache = draft.extend_into_cache(dparams, window, dcache,
                                                  2 * act1)
             d_toks, d_logits = [], []
-            cur_logits = dl[:, -1].astype(jnp.float32)
+            cur_logits = _finite_rows(dl[:, -1].astype(jnp.float32))
             for i in range(gamma):
                 key, sk = jax.random.split(key)
                 t = sampler(sk, cur_logits)
@@ -809,7 +912,8 @@ class Engine:
                 if i + 1 < gamma:
                     dl, dcache = draft.extend_into_cache(
                         dparams, t[:, None], dcache, act1)
-                    cur_logits = dl[:, -1].astype(jnp.float32)
+                    cur_logits = _finite_rows(
+                        dl[:, -1].astype(jnp.float32))
             draft_tokens = jnp.stack(d_toks, axis=1)          # (B, g)
             draft_logits = jnp.stack(d_logits, axis=1)        # (B, g, V)
 
@@ -819,11 +923,18 @@ class Engine:
             t_logits, cache = model.extend_into_cache(
                 params, seq, cache, (gamma + 1) * act1)
 
-            # 3) accept prefix + resample first rejection (on device)
+            # 3) accept prefix + resample first rejection (on device).
+            #    A row whose target logits are not finite emits the
+            #    single ERR_TOKEN sentinel (n_acc forced to 0) and is
+            #    marked done below — containment mirrors _guarded_sample
+            t32 = t_logits.astype(jnp.float32) + poison[:, None, None]
+            bad = active & ~jnp.all(jnp.isfinite(t32), axis=(1, 2))
             key, sk = jax.random.split(key)
             block, n_acc = sampler.speculative(
                 sk, draft_tokens, draft_logits,
-                t_logits.astype(jnp.float32))
+                jnp.where(bad[:, None, None], 0.0, t32))
+            block = jnp.where(bad[:, None], jnp.int32(ERR_TOKEN), block)
+            n_acc = jnp.where(bad, 0, n_acc)
             n_emit = jnp.where(active, n_acc + 1, 0)          # (B,)
 
             # 4) per-row rollback to the accepted depth. verify advanced
@@ -844,7 +955,7 @@ class Engine:
             idx = jnp.arange(gamma + 1)[None, :]
             emitted = idx < n_emit[:, None]
             eos_hit = jnp.any(emitted & (block == eos[:, None]), axis=1)
-            done = active & ((remaining <= n_emit) | eos_hit)
+            done = active & (bad | (remaining <= n_emit) | eos_hit)
             new_active = active & ~done
             remaining = jnp.where(
                 active, jnp.maximum(remaining - n_emit, 0), remaining)
@@ -865,7 +976,8 @@ class Engine:
         if self.mesh is not None:
             r, tok, vec = self._repl, self._tok_sh, self._vec_sh
             in_sh = (self._param_sh, self._draft_param_sh, self._cache_sh,
-                     self._draft_cache_sh, tok, tok, vec, vec, vec, r)
+                     self._draft_cache_sh, tok, tok, vec, vec, vec, r,
+                     vec)
             # tok's (batch, None) spec also covers the (B, gamma+1) block
             out_sh = (tok, tok, tok, vec, self._cache_sh,
                       self._draft_cache_sh, vec, vec, r)
@@ -891,7 +1003,8 @@ class Engine:
             if masked:
                 batch["length"] = length
             logits, cache1 = model.prefill(params, batch, cache1)
-            first = sampler(key, logits[:, -1].astype(jnp.float32))  # (1,)
+            first, _ = _guarded_sample(                              # (1,)
+                sampler, key, logits[:, -1].astype(jnp.float32))
             cache = jax.tree.map(
                 lambda full, u: lax.dynamic_update_slice_in_dim(
                     full, u, b, axis=1), cache, cache1)
@@ -1023,25 +1136,54 @@ class Engine:
     # ------------------------------------------------------------ #
     # paged provisioning (host allocator <-> device page pools)
     # ------------------------------------------------------------ #
-    def _provision(self, slot: int, start: int, n: int) -> None:
+    def _provision(self, slot: int, start: int, n: int) -> bool:
         """Make the pages behind positions [start, start+n) of ``slot``
         privately writable before a dispatched step (allocate missing
-        pages, CoW-split shared ones). Exhaustion first reclaims LRU
-        prefix entries; if the pool is still short it is a hard error —
-        a live slot's write must never be dropped or redirected."""
+        pages, CoW-split shared ones). Exhaustion — real or injected via
+        the ``page_alloc`` fault site — degrades instead of crashing
+        (docs/robustness.md): reclaim LRU prefix entries, then poll (a
+        finished slot may be sitting on pages), then preempt-and-requeue
+        the lowest-priority victim; only a pool that genuinely cannot
+        hold the live set raises. Returns False when degradation polled
+        or preempted: the poll's shrink may have reclaimed headroom
+        provisioned for *other* slots this round, so callers must
+        rebuild their provisioning pass."""
+        clean, polled = True, False
         while True:
-            try:
-                copies = self._paged.prepare_write(slot, start, n)
-                break
-            except paged_kv.PagePoolExhausted as e:
-                if self.prefix_cache is not None \
-                        and self.prefix_cache.drop_lru():
-                    continue
-                raise RuntimeError(
-                    f"KV page pool exhausted mid-decode (slot {slot}, "
-                    f"positions [{start}, {start + n})): {e}") from e
+            forced = self.faults.enabled and self._fire(
+                "page_alloc", step=self._steps, slot=slot)
+            if not forced:
+                try:
+                    copies = self._paged.prepare_write(slot, start, n)
+                    break
+                except paged_kv.PagePoolExhausted:
+                    pass
+            if self.prefix_cache is not None \
+                    and self.prefix_cache.drop_lru():
+                continue
+            clean = False
+            if not polled:
+                polled = True
+                self._poll()
+                continue
+            if self._preempt_one(exclude={slot}):
+                continue
+            if forced:
+                # the injected exhaustion outlived every degradation
+                # rung; unlike a real one it freed nothing, so consult
+                # the actual pool before declaring the ladder dead
+                try:
+                    copies = self._paged.prepare_write(slot, start, n)
+                    break
+                except paged_kv.PagePoolExhausted:
+                    pass
+            raise RuntimeError(
+                f"KV page pool exhausted mid-decode (slot {slot}, "
+                f"positions [{start}, {start + n})) with no resumable "
+                f"victim to preempt")
         if copies:
             self._copy_pages(copies)
+        return clean
 
     def _copy_pages(self, copies) -> None:
         """Copy-on-write splits: duplicate the shared pool pages on
@@ -1099,7 +1241,7 @@ class Engine:
         preserved — nothing behind it is admitted either)."""
         if not self.paged:
             return True
-        need = len(req.prompt)
+        need = self._eff_len(req)
         while not self._paged.can_admit(need):
             if self.prefix_cache is None \
                     or not self.prefix_cache.drop_lru():
@@ -1120,13 +1262,13 @@ class Engine:
     # scheduling
     # ------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
-        if self.paged and not self._chunk_eligible(req):
-            raise ValueError(
-                "paged KV serving admits requests through chunked "
-                "prefill only: prompts must be token-only (no frontend "
-                f"embeddings) and fit the KV ring ({len(req.prompt)} "
-                f"tokens vs {self.kv_len - self._prefix})")
+        """Validate and enqueue. Malformed requests raise ``ValueError``
+        here with the violated constraint spelled out — never a shape
+        error deep inside a jitted program or a silently wedged slot."""
+        self._validate(req)
         req.submitted_s = time.perf_counter()
+        if req.deadline_s is not None:
+            self._deadline_armed = True
         if self.recorder.enabled:
             self.recorder.on_submit(req)
         self.queue.append(req)
@@ -1134,12 +1276,67 @@ class Engine:
         self.responses[req.uid] = Response(uid=req.uid,
                                            prompt_len=len(req.prompt))
 
+    def _validate(self, req: Request) -> None:
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(
+                f"request {req.uid}: prompt must be a non-empty 1-D "
+                f"token array, got shape {prompt.shape}")
+        if prompt.dtype.kind not in "iu":
+            raise ValueError(
+                f"request {req.uid}: prompt must hold integer token "
+                f"ids, got dtype {prompt.dtype}")
+        if req.max_new_tokens <= 0:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be positive, "
+                f"got {req.max_new_tokens}")
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            raise ValueError(
+                f"request {req.uid}: deadline_s must be positive, got "
+                f"{req.deadline_s}")
+        old = self.responses.get(req.uid)
+        if old is not None and not old.finished:
+            raise ValueError(
+                f"request uid {req.uid} is already in flight")
+        L = int(prompt.size)
+        cap = self.kv_len - self._prefix
+        if self.paged and not self._chunk_eligible(req):
+            raise ValueError(
+                "paged KV serving admits requests through chunked "
+                "prefill only: prompts must be token-only (no frontend "
+                f"embeddings) and fit the KV ring ({L} tokens vs {cap})")
+        if L > cap and not self.model.cfg.sliding_window:
+            # sliding-window caches legitimately serve longer prompts
+            # through the exact-length ring prefill; a full-attention
+            # cache cannot — the ring would silently wrap over context
+            raise ValueError(
+                f"request {req.uid}: prompt of {L} tokens exceeds the "
+                f"KV capacity of {cap} (cache_len={self.cache_len}"
+                + (f" minus a {self._prefix}-token frontend prefix"
+                   if self._prefix else "")
+                + "); raise cache_len or shorten the prompt")
+        if req.embeddings is not None:
+            emb = np.asarray(req.embeddings)
+            if emb.ndim != 2:
+                raise ValueError(
+                    f"request {req.uid}: embeddings must be 2-D "
+                    f"(n_tokens, d_model), got shape {emb.shape}")
+
     def _free_slot(self) -> Optional[int]:
         admitting = self._admit.slot if self._admit is not None else -1
         for b in range(self.max_batch):
             if self.slots[b] is None and b != admitting:
                 return b
         return None
+
+    def _eff_len(self, req: Request) -> int:
+        """Length of the request's *effective* token stream: the prompt
+        plus any tokens generated before a preemption (replayed through
+        admission on resume)."""
+        resp = self.responses.get(req.uid)
+        if resp is None or resp.finished:
+            return len(req.prompt)
+        return len(req.prompt) + len(resp.tokens)
 
     def _chunk_eligible(self, req: Request) -> bool:
         """Whether this request can be admitted through the fused
@@ -1149,38 +1346,75 @@ class Engine:
         than the KV ring (exact-length ring prefill rewrites the row)."""
         return (self.prefill_chunk > 0 and self._extend_ok
                 and req.embeddings is None
-                and len(req.prompt) <= self.kv_len - self._prefix)
+                and self._eff_len(req) <= self.kv_len - self._prefix)
 
     def _fill_free_slots(self) -> None:
-        """Admission scheduler (FIFO): chunk-eligible requests start a
-        chunked admission (at most one in flight — 'advance one admitting
-        request per step'); everything else takes the legacy monolithic
-        prefill immediately."""
+        """Admission scheduler (FIFO head): chunk-eligible requests
+        start a chunked admission (at most one in flight — 'advance one
+        admitting request per step'); everything else takes the legacy
+        monolithic prefill immediately. A head-of-queue request that
+        outranks a live stream may preempt it when the slot table or
+        page pool is short — the victim requeues right *behind* the
+        displacing request (never ahead: that would livelock) and
+        resumes later with its output unchanged."""
         while self.queue:
+            req = self.queue[0]
             b = self._free_slot()
             if b is None:
+                if self._outranked(req) and self._preempt_one(
+                        below=req.priority, requeue_pos=1):
+                    continue
                 return
-            req = self.queue[0]
             if self._chunk_eligible(req):
                 if self._admit is not None:
                     return            # one chunked admission at a time
                 if not self._admit_fits(req):
-                    return            # page backpressure: head waits
+                    # page backpressure: the head waits, unless it
+                    # outranks a live stream whose pages can serve it
+                    if self._outranked(req) and self._preempt_one(
+                            below=req.priority, requeue_pos=1):
+                        continue
+                    return
                 self.queue.popleft()
                 self._start_chunked(req, b)
                 continue
             self.queue.popleft()
             self._prefill_direct(req, b)
 
+    def _outranked(self, req: Request) -> bool:
+        """Cheap pre-check (no device sync) for priority displacement:
+        some occupied slot runs at strictly lower priority than ``req``.
+        A chunked admission in flight blocks displacement for
+        chunk-eligible heads — they could not admit into the freed slot
+        anyway until it drains."""
+        if self._admit is not None and self._chunk_eligible(req):
+            return False
+        return any(r is not None and r.priority < req.priority
+                   for r in self.slots)
+
     def _start_chunked(self, req: Request, b: int) -> None:
         """Begin a chunked admission: probe the prefix cache, then either
         materialise the hit into slot ``b`` (one on-device
         dynamic_update_slice copy) or reset the slot row; the fused mixed
-        step takes it from there, ``prefill_chunk`` tokens per step."""
-        req.started_s = time.perf_counter()
+        step takes it from there, ``prefill_chunk`` tokens per step.
+
+        A preempted request re-admits through this same path: its
+        effective stream is the prompt plus the tokens it had already
+        generated, replayed chunk by chunk — teacher-forcing the model
+        through its own earlier output, so the token sampled on arming
+        (and every one after) matches the unpreempted run."""
+        req.started_s = req.started_s or time.perf_counter()
+        done = self.responses[req.uid].tokens
+        eff = np.asarray(req.prompt, np.int32)
+        if done:
+            eff = np.concatenate([eff, np.asarray(done, np.int32)])
+        adm = _Admission(req=req, slot=b, base=0, length=len(eff),
+                         tokens=eff, n_done=len(done),
+                         resumed=bool(done))
         base, kv, ent_len = 0, None, 0
         if self.prefix_cache is not None:
-            kv, ent_len, base = self.prefix_cache.lookup(req.prompt)
+            kv, ent_len, base = self.prefix_cache.lookup(eff)
+            adm.base = base
         bb = jnp.int32(b)
         if self.paged:
             # a prefix hit is a page alias: point the fresh slot's block
@@ -1196,8 +1430,7 @@ class Engine:
                 self.draft_cache = self._get_slot_fn("reset")(
                     self.draft_cache, bb)
             self._depth_ub[b] = base
-            self._admit = _Admission(req=req, slot=b, base=base,
-                                     length=len(req.prompt))
+            self._admit = adm
             if self.recorder.enabled:
                 self.recorder.on_admission(req, b, base, "chunked")
             return
@@ -1214,8 +1447,7 @@ class Engine:
             if self.spec_gamma:
                 self.draft_cache = self._get_slot_fn("reset")(
                     self.draft_cache, bb)
-        self._admit = _Admission(req=req, slot=b, base=base,
-                                 length=len(req.prompt))
+        self._admit = adm
         if self.recorder.enabled:
             self.recorder.on_admission(req, b, base, "chunked")
 
@@ -1223,11 +1455,18 @@ class Engine:
         """Legacy monolithic admission: one whole-prompt slot-direct
         bucketed prefill (stalls decode for the duration — the
         ``prefill_chunk=0`` baseline, and the fallback for requests the
-        extend path cannot serve)."""
-        req.started_s = time.perf_counter()
+        extend path cannot serve). A preempted request resumes here with
+        its generated tokens appended to the prompt (same replay
+        contract as ``_start_chunked``)."""
+        req.started_s = req.started_s or time.perf_counter()
         if self.recorder.enabled:
             self.recorder.on_admission(req, b, 0, "prefill")
-        L = len(req.prompt)
+        resp = self.responses[req.uid]
+        prompt = np.asarray(req.prompt, np.int32)
+        if resp.tokens:            # resume: replay the generated prefix
+            prompt = np.concatenate(
+                [prompt, np.asarray(resp.tokens, np.int32)])
+        L = len(prompt)
         # prompts longer than the KV ring (sliding-window caches) fall
         # back to exact-length ring prefill, which rewrites the full row
         cap = self.kv_len - self._prefix
@@ -1235,7 +1474,7 @@ class Engine:
         Lb = bucket_length(L, cap) if (masked and self._pad_buckets) \
             else L
         toks = np.zeros((1, Lb), np.int32)
-        toks[0, :L] = np.asarray(req.prompt, np.int32)
+        toks[0, :L] = prompt
         emb = None
         if req.embeddings is not None:
             emb = jnp.asarray(req.embeddings)[None]
@@ -1246,16 +1485,24 @@ class Engine:
                                jnp.int32(b), self.cache, sk)
         # the only per-request host sync: the first sampled token
         tok = int(first[0])
-        req.first_token_s = time.perf_counter()
-        self._h_ttft.observe(req.first_token_s - req.submitted_s)
+        now = time.perf_counter()
+        if tok == ERR_TOKEN:
+            # NaN/inf logits in the prefill itself: contained to this
+            # request — the slot was never armed and stays free
+            self._c_errors.inc()
+            self._finish_request(req, "error", now)
+            return
+        if not req.first_token_s:
+            req.first_token_s = now
+            self._h_ttft.observe(req.first_token_s - req.submitted_s)
+            if self.recorder.enabled:
+                self.recorder.on_first_token(req, req.first_token_s)
         self._c_tokens.inc()
         if self.recorder.enabled:
-            self.recorder.on_first_token(req, req.first_token_s)
-            self.recorder.on_emit(req, b, 1, req.first_token_s)
-        resp = self.responses[req.uid]
+            self.recorder.on_emit(req, b, 1, now)
         resp.tokens.append(tok)
-        if req.max_new_tokens <= 1 or (req.eos_id is not None
-                                       and tok == req.eos_id):
+        if len(resp.tokens) >= req.max_new_tokens or (
+                req.eos_id is not None and tok == req.eos_id):
             resp.finished = True
             resp.finish_reason = "eos" if (
                 req.eos_id is not None and tok == req.eos_id) \
@@ -1283,15 +1530,174 @@ class Engine:
                 self._draft_params, jnp.asarray(dtoks),
                 jnp.asarray([dlen], jnp.int32), emb, jnp.int32(b),
                 self.draft_cache, sk)
-            self.prev = self.prev.at[b, 0].set(int(req.prompt[-1]))
+            self.prev = self.prev.at[b, 0].set(int(prompt[-1]))
         self.tokens = self.tokens.at[b, 0].set(tok)
         self.remaining = self.remaining.at[b].set(
-            req.max_new_tokens - 1)
+            req.max_new_tokens - len(resp.tokens))
         self.active = self.active.at[b].set(True)
         self.eos = self.eos.at[b].set(
             -1 if req.eos_id is None else int(req.eos_id))
         self.slots[b] = req
         self._slot_start[b] = self._steps
+
+    # ------------------------------------------------------------ #
+    # lifecycle control: cancel / deadlines / preempt-and-requeue
+    # (docs/robustness.md)
+    # ------------------------------------------------------------ #
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request in any live state — queued, mid-chunked-
+        admission, or actively decoding. Tokens already produced stay in
+        the response; the slot and (paged) its pages are released
+        immediately and ``finish_reason`` reads ``"cancelled"``. Returns
+        True if the request was live, False when it is unknown or had
+        already finished."""
+        req = self.requests.get(uid)
+        resp = self.responses.get(uid)
+        if req is None or resp is None or resp.finished:
+            return False
+        now = time.perf_counter()
+        if req in self.queue:
+            self.queue.remove(req)
+            self._finish_request(req, "cancelled", now)
+            self._c_cancel.inc()
+            return True
+        if self._admit is not None and self._admit.req.uid == uid:
+            self._abort_admission("cancelled", now)
+            self._c_cancel.inc()
+            return True
+        for b, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                self._poll()       # commit tokens already produced...
+                if resp.finished:  # ...which may have finished it first
+                    return False
+                self._release_active_slot(b)
+                self._finish_request(req, "cancelled",
+                                     time.perf_counter())
+                self._c_cancel.inc()
+                return True
+        return False
+
+    def _finish_request(self, req: Request, reason: str,
+                        now: float) -> None:
+        resp = self.responses[req.uid]
+        resp.finished = True
+        resp.finish_reason = reason
+        req.finished_s = now
+        if self.recorder.enabled:
+            self.recorder.on_finish(req, reason, now)
+
+    def _release_active_slot(self, b: int) -> None:
+        """Host+device teardown of an occupied slot, keeping its
+        harvested tokens: deactivate the device row (masked steps then
+        neither write KV nor advance it), detach the request, and — when
+        paged — return its pages to the pool immediately."""
+        self.active = self.active.at[b].set(False)
+        self.slots[b] = None
+        self._slot_start[b] = self._steps
+        if self.paged:
+            self._paged.release_slot(b)
+            self._depth_ub[b] = 0
+
+    def _abort_admission(self, reason: str, now: float) -> None:
+        """Tear down the in-flight chunked admission (its slot was never
+        attached, so only provisioned pages need releasing)."""
+        adm, self._admit = self._admit, None
+        if self.paged:
+            self._paged.release_slot(adm.slot)
+            self._depth_ub[adm.slot] = 0
+        self._finish_request(adm.req, reason, now)
+
+    def _enforce_deadlines(self, include_active: bool = True) -> None:
+        """Finish every request past its absolute deadline with
+        ``finish_reason="timeout"`` (keeping partial tokens). Runs at
+        tick boundaries: before admission with ``include_active=False``
+        (queued/admitting only — an active slot may hold tokens not yet
+        harvested) and right after each poll with the full sweep."""
+        now = time.perf_counter()
+        for req in [r for r in self.queue if r.deadline_abs() <= now]:
+            self.queue.remove(req)
+            self._finish_request(req, "timeout", now)
+            self._c_timeout.inc()
+        if self._admit is not None \
+                and self._admit.req.deadline_abs() <= now:
+            self._abort_admission("timeout", now)
+            self._c_timeout.inc()
+        if not include_active:
+            return
+        for b, r in enumerate(self.slots):
+            if r is not None and r.deadline_abs() <= now:
+                self._release_active_slot(b)
+                self._finish_request(r, "timeout", now)
+                self._c_timeout.inc()
+
+    def _select_victim(self, exclude=(),
+                       below: Optional[int] = None) -> Optional[int]:
+        """Pick the slot to preempt: lowest priority first, then latest
+        deadline (no deadline counts as latest — most slack), then
+        lowest slot index. Only streams that can actually resume qualify
+        (the effective stream must still fit the KV ring with room to
+        decode). ``below`` restricts victims to priorities strictly
+        below it (priority-displacement admission)."""
+        best = None
+        for b, r in enumerate(self.slots):
+            if r is None or b in exclude:
+                continue
+            if below is not None and r.priority >= below:
+                continue
+            if self._eff_len(r) + 1 > self.kv_len - self._prefix:
+                continue           # too long to replay: not resumable
+            key = (r.priority, -r.deadline_abs(), b)
+            if best is None or key < best[0]:
+                best = (key, b)
+        return None if best is None else best[1]
+
+    def _preempt_one(self, exclude=(), below: Optional[int] = None,
+                     requeue_pos: int = 0) -> bool:
+        """Preempt-and-requeue one victim stream. Polls first so every
+        token the device already produced is committed, then releases
+        the victim's slot and pages and requeues it (position 0 = queue
+        front; 1 = right behind a displacing higher-priority head). On
+        re-admission the generated prefix is replayed, so the resumed
+        stream's output is identical to an unpreempted run (greedy).
+        Returns False when no resumable victim exists."""
+        self._poll()
+        b = self._select_victim(exclude=exclude, below=below)
+        if b is None:
+            return False
+        req = self.slots[b]
+        self._release_active_slot(b)
+        req.preemptions += 1
+        self._c_preempt.inc()
+        if self.recorder.enabled:
+            self.recorder.on_preempt(req, b, time.perf_counter())
+        pos = min(requeue_pos, len(self.queue))
+        if pos <= 0:
+            self.queue.appendleft(req)
+        else:
+            self.queue.insert(pos, req)
+        return True
+
+    def _fire(self, site: str, **ctx):
+        """Ask the fault registry whether ``site`` should fail here
+        (None when nothing is scheduled). Fired faults count into the
+        ``faults_injected`` counter and the recorder's fault lane."""
+        spec = self.faults.fire(site, **ctx)
+        if spec is not None:
+            self._c_faults.inc()
+            if self.recorder.enabled:
+                self.recorder.on_fault(site, self._steps,
+                                       time.perf_counter())
+        return spec
+
+    def _set_poison(self, b: int) -> None:
+        """Arm the ``nan_logits`` fault: poison row ``b``'s sampler
+        logits for the next dispatched step. Input-only — the step
+        programs never recompile."""
+        self.poison = self._poison_zero.at[b % self.max_batch].set(
+            float("nan"))
+
+    def _clear_poison(self) -> None:
+        self.poison = self._poison_zero
 
     # ------------------------------------------------------------ #
     # decode
@@ -1303,6 +1709,15 @@ class Engine:
         transferred."""
         t0 = time.perf_counter()
         n0 = self._steps
+        poisoned = False
+        if self.faults.enabled:
+            spec = self._fire("slow_step", step=self._steps)
+            if spec is not None and spec.delay_s > 0:
+                time.sleep(spec.delay_s)
+            spec = self._fire("nan_logits", step=self._steps)
+            if spec is not None:
+                self._set_poison(spec.slot or 0)
+                poisoned = True
         if self._admit is None and self.prefill_chunk and self.queue:
             # pipeline the next admission mid-burst (chunk-eligible
             # head-of-queue only; legacy prefills wait for the burst
@@ -1323,25 +1738,37 @@ class Engine:
             self._step_mixed(adm)
         else:
             self._step_plain()
+        if poisoned:
+            self._clear_poison()
         made = self._steps - n0
         dt = (time.perf_counter() - t0) / max(made, 1)
         for _ in range(made):
             self.step_times.append(dt)
 
+    def _provision_decode_rows(self, per_row: int) -> bool:
+        """Provision ``per_row`` decode writes for every occupied slot
+        (an upper bound — rows the device already finished write
+        nothing; the poll's shrink reclaims the overshoot). A degraded
+        ``_provision`` (poll/preempt inside its ladder) may have shrunk
+        headroom provisioned earlier in the same pass, so one False
+        aborts the round; callers loop until a round runs clean."""
+        for b, r in enumerate(self.slots):
+            if r is not None:
+                if not self._provision(b, self._depth_ub[b], per_row):
+                    return False
+                self._depth_ub[b] += per_row
+        return True
+
     def _step_plain(self) -> None:
         if self.paged:
-            # provision one decode write per occupied slot (an upper
-            # bound — rows the device already finished write nothing;
-            # the poll's shrink reclaims the overshoot)
-            for b, r in enumerate(self.slots):
-                if r is not None:
-                    self._provision(b, self._depth_ub[b], 1)
-                    self._depth_ub[b] += 1
+            while not self._provision_decode_rows(1):
+                pass
             self._push_block_tables()
         (self.tokens, self.cache, self.remaining, self.active,
          self.key) = self._step_fn(self.params, self.cache,
                                    self.tokens, self.remaining,
-                                   self.active, self.eos, self.key)
+                                   self.active, self.eos, self.key,
+                                   self.poison)
         self._trace.append(self.tokens[:, 0])
         self._record_step("plain")
 
@@ -1350,18 +1777,15 @@ class Engine:
             # a spec step writes up to gamma+1 positions per active row
             # (verify window); rollback keeps the committed prefix and
             # the poll's shrink drops pages past it
-            g1 = self.spec_gamma + 1
-            for b, r in enumerate(self.slots):
-                if r is not None:
-                    self._provision(b, self._depth_ub[b], g1)
-                    self._depth_ub[b] += g1
+            while not self._provision_decode_rows(self.spec_gamma + 1):
+                pass
             self._push_block_tables()
         (self.tokens, self.prev, block, n_emit, self.cache,
          self.draft_cache, self.remaining, self.active,
          self.key) = self._step_fn(
             self.params, self._draft_params, self.cache,
             self.draft_cache, self.tokens, self.prev, self.remaining,
-            self.active, self.eos, self.key)
+            self.active, self.eos, self.key, self.poison)
         self._trace.append((block, n_emit))
         self._record_step("spec")
 
@@ -1369,8 +1793,7 @@ class Engine:
         C = self.prefill_chunk
         n = min(C, adm.length - adm.base)
         chunk = np.zeros((C,), np.int32)
-        chunk[:n] = np.asarray(adm.req.prompt[adm.base:adm.base + n],
-                               np.int32)
+        chunk[:n] = adm.tokens[adm.base:adm.base + n]
         return chunk, n, adm.base + n >= adm.length
 
     def _step_mixed(self, adm: _Admission) -> None:
@@ -1378,11 +1801,11 @@ class Engine:
         chunk, n, last = self._chunk_args(adm)
         req = adm.req
         if self.paged:
-            for b, r in enumerate(self.slots):
-                if r is not None:
-                    self._provision(b, self._depth_ub[b], 1)
-                    self._depth_ub[b] += 1
-            self._provision(adm.slot, adm.base, n)
+            while True:
+                if not self._provision_decode_rows(1):
+                    continue
+                if self._provision(adm.slot, adm.base, n):
+                    break
             self._depth_ub[adm.slot] = adm.base + n
             self._push_block_tables()
         (self.tokens, block, n_emit, self.cache, self.remaining,
@@ -1390,8 +1813,9 @@ class Engine:
             self.params, self.cache, self.tokens, self.remaining,
             self.active, self.eos, self.key, jnp.asarray(chunk),
             jnp.int32(adm.slot), jnp.int32(n), jnp.asarray(bool(last)),
-            jnp.int32(req.max_new_tokens),
-            jnp.int32(-1 if req.eos_id is None else int(req.eos_id)))
+            jnp.int32(req.max_new_tokens - adm.n_done),
+            jnp.int32(-1 if req.eos_id is None else int(req.eos_id)),
+            self.poison)
         self._trace.append((block, n_emit))
         if self.recorder.enabled:
             self.recorder.on_chunk(req, adm.slot, adm.base, adm.base + n,
@@ -1411,7 +1835,8 @@ class Engine:
             # target chunk only — the draft cache stays contiguous; the
             # spec step dispatched right after provisions decode rows
             # (including a slot this chunk just armed)
-            self._provision(adm.slot, adm.base, n)
+            while not self._provision(adm.slot, adm.base, n):
+                pass
             self._depth_ub[adm.slot] = adm.base + n
             self._push_block_tables()
         (self.tokens, self.prev, block, n_emit, self.cache,
@@ -1421,9 +1846,9 @@ class Engine:
             self.tokens, self.prev, self.remaining, self.active, self.eos,
             self.key, jnp.asarray(chunk), jnp.int32(adm.slot),
             jnp.int32(n), jnp.int32(d_n), jnp.asarray(bool(last)),
-            jnp.int32(req.max_new_tokens),
+            jnp.int32(req.max_new_tokens - adm.n_done),
             jnp.int32(-1 if req.eos_id is None else int(req.eos_id)),
-            jnp.int32(int(req.prompt[-1])))
+            jnp.int32(int(adm.tokens[-1])), self.poison)
         self._trace.append((block, n_emit))
         if self.recorder.enabled:
             self.recorder.on_chunk(req, adm.slot, adm.base, adm.base + n,
@@ -1446,7 +1871,10 @@ class Engine:
         self._await_first.append(adm.req)
         self._c_admissions.inc()
         self._admit = None
-        if self.prefix_cache is not None:
+        # resumed admissions skip publication: their prompt prefix was
+        # published (if wanted) on first admission, and the effective
+        # stream's tail is request-specific output, not a shared prefix
+        if self.prefix_cache is not None and not adm.resumed:
             P = self.prefix_cache.wants(adm.req.prompt)
             if P and P <= self.kv_len:
                 if self.paged:
@@ -1605,6 +2033,14 @@ class Engine:
         n0 = len(resp.tokens)
         for tok, gap in zip(col, gaps):
             tok = int(tok)
+            if tok == ERR_TOKEN:
+                # the on-device NaN/inf guard tripped for this row: the
+                # sentinel is not a real token — finish with "error";
+                # everything harvested before it stands
+                resp.finish_reason = "error"
+                self._c_errors.inc()
+                done = True
+                break
             if resp.tokens and gap is not None:
                 self._h_itl.observe(gap)
             resp.tokens.append(tok)
@@ -1654,9 +2090,13 @@ class Engine:
         for callers that interleave submissions with service
         (``benchmarks/bench_load.py``); ``run`` is a drain loop on top."""
         k = self.sync_every if steps is None else max(1, steps)
+        if self._deadline_armed:
+            self._enforce_deadlines(include_active=False)
         self._fill_free_slots()
         if not (self.active_slots or self._admit is not None):
             self._poll()
+            if self._deadline_armed:
+                self._enforce_deadlines()
             return 0
         t0 = t_begin = time.perf_counter()
         # steps run outside tick (raw .step() calls) have no wall stamp;
@@ -1704,6 +2144,8 @@ class Engine:
             self.recorder.on_steps(spans)
         self._stamp_first_tokens(t1)
         self._poll()
+        if self._deadline_armed:
+            self._enforce_deadlines()
         self._maybe_profile()
         return self._steps - ran0
 
@@ -1815,6 +2257,11 @@ class Engine:
             "decode_steps": self._steps,
             "prefill_chunk": self.prefill_chunk,
             "chunked_admissions": self._c_admissions.value,
+            "preemptions": self._c_preempt.value,
+            "timeouts": self._c_timeout.value,
+            "cancellations": self._c_cancel.value,
+            "slot_errors": self._c_errors.value,
+            "faults_injected": self._c_faults.value,
         }
         telemetry.pct_stats(stats, "decode_ms", self.step_times[drop:],
                             (50, 99))

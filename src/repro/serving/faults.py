@@ -1,0 +1,204 @@
+"""Deterministic, seeded fault injection for the serving stack.
+
+Resilience claims are untestable without a way to *cause* the failures
+they guard against. This module is the single fault switchboard: a
+registry of named **sites** — places in the engine, transport and
+checkpoint layers that ask "should I fail here?" — driven by a seeded
+schedule so every chaos run is reproducible bit-for-bit.
+
+Design follows the ``telemetry.Recorder`` pattern: the default
+(:class:`NoFaults`) is a no-op whose ``enabled`` flag short-circuits
+every hook to one attribute read, so an engine built without faults has
+bit-identical programs, outputs and compiled-program counts to one built
+with them (asserted in ``tests/test_chaos.py``). Injection never changes
+*program shapes*: the NaN site, for example, fires through the engine's
+always-present ``poison`` input rather than a recompiled variant.
+
+Fault sites
+-----------
+``page_alloc``           one KV page-pool allocation reports exhaustion
+                         (the engine degrades: prefix reclaim, then
+                         preemptive requeue, never a crash mid-decode);
+``nan_logits``           slot ``k``'s sampler logits are poisoned to NaN
+                         at engine step ``n`` (the on-device guard must
+                         contain it to that slot);
+``slow_step``            ``delay_s`` of host stall before a step
+                         dispatch (exercises deadline enforcement);
+``transport_drop``       one ``Transport.fetch``/``push`` attempt fails
+                         (exercises retry + backoff);
+``transport_latency``    ``delay_s`` added to a transfer's modelled
+                         seconds (exercises timeouts);
+``truncated_checkpoint`` a just-written checkpoint loses its tail
+                         (``truncate_file``; exercises fail-fast load
+                         validation).
+
+Usage::
+
+    faults = (Faults(seed=0)
+              .on("nan_logits", step=12, slot=1)
+              .on("page_alloc", step=30, times=2))
+    eng = Engine(model, params, faults=faults)
+
+or via the environment (picked up when ``Engine(faults=None)``)::
+
+    REPRO_FAULTS="nan_logits@12/1,page_alloc@30x2,slow_step@5+0.05"
+
+Grammar: comma-separated ``site[@step][/slot][xN][+delay][%prob]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["FaultSpec", "NoFaults", "Faults", "SITES", "truncate_file",
+           "from_env", "ENV_VAR"]
+
+ENV_VAR = "REPRO_FAULTS"
+
+SITES = frozenset({
+    "page_alloc", "nan_logits", "slow_step",
+    "transport_drop", "transport_latency", "truncated_checkpoint",
+})
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scheduled fault. ``step``/``attempt``/``op`` are *filters*
+    (``None`` = match any call of the site); ``slot`` and ``delay_s``
+    are *payloads* the firing site consumes; ``times`` bounds how often
+    the spec fires (-1 = unlimited) and ``p`` makes firing probabilistic
+    against the registry's seeded stream."""
+    site: str
+    step: Optional[int] = None      # engine-step filter
+    attempt: Optional[int] = None   # transport-attempt filter
+    op: Optional[str] = None        # transport op filter ("fetch"/"push")
+    slot: Optional[int] = None      # payload: target batch slot
+    delay_s: float = 0.0            # payload: injected stall seconds
+    times: int = 1                  # max firings (-1 = unlimited)
+    p: float = 1.0                  # per-eligible-call fire probability
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r} "
+                             f"(sites: {sorted(SITES)})")
+
+    @property
+    def exhausted(self) -> bool:
+        return self.times >= 0 and self.fired >= self.times
+
+    def matches(self, ctx: Dict[str, Any]) -> bool:
+        for key in ("step", "attempt", "op"):
+            want = getattr(self, key)
+            if want is not None and ctx.get(key) != want:
+                return False
+        return True
+
+
+class NoFaults:
+    """The default: nothing ever fires. ``enabled`` is the hot-path
+    short-circuit (one attribute read per site check)."""
+    enabled = False
+
+    def fire(self, site: str, **ctx) -> Optional[FaultSpec]:
+        return None
+
+    def stats(self) -> Dict[str, float]:
+        return {}
+
+
+class Faults(NoFaults):
+    """A seeded fault schedule. ``fire(site, **ctx)`` returns the first
+    matching, non-exhausted :class:`FaultSpec` (consuming one of its
+    ``times``) or ``None``. All randomness (the ``p < 1`` dice) comes
+    from one seeded generator, and the engine calls sites in a fixed
+    host order — identical schedules replay identically."""
+    enabled = True
+
+    def __init__(self, seed: int = 0,
+                 specs: Optional[List[FaultSpec]] = None):
+        self.seed = int(seed)
+        self.specs: List[FaultSpec] = list(specs or [])
+        self._rng = np.random.default_rng(self.seed)
+        self.fired_total = 0
+        self.fired_by_site: Dict[str, int] = {}
+
+    def on(self, site: str, **kw) -> "Faults":
+        """Schedule a fault (chainable): ``Faults().on("nan_logits",
+        step=12, slot=1).on("page_alloc", times=2)``."""
+        self.specs.append(FaultSpec(site=site, **kw))
+        return self
+
+    def fire(self, site: str, **ctx) -> Optional[FaultSpec]:
+        for spec in self.specs:
+            if spec.site != site or spec.exhausted \
+                    or not spec.matches(ctx):
+                continue
+            if spec.p < 1.0 and self._rng.random() >= spec.p:
+                continue
+            spec.fired += 1
+            self.fired_total += 1
+            self.fired_by_site[site] = self.fired_by_site.get(site, 0) + 1
+            return spec
+        return None
+
+    def stats(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"faults_fired_total": self.fired_total}
+        for site, n in sorted(self.fired_by_site.items()):
+            out[f"faults_fired_{site}"] = n
+        return out
+
+    # ---------------------------------------------------------------- #
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "Faults":
+        """Parse the compact schedule grammar (see module docstring):
+        comma-separated ``site[@step][/slot][xN][+delay][%prob]``."""
+        f = cls(seed=seed)
+        pat = re.compile(
+            r"^(?P<site>[a-z_]+)"
+            r"(?:@(?P<step>\d+))?"
+            r"(?:/(?P<slot>\d+))?"
+            r"(?:x(?P<times>-?\d+))?"
+            r"(?:\+(?P<delay>[0-9.]+))?"
+            r"(?:%(?P<p>[0-9.]+))?$")
+        for entry in filter(None, (e.strip() for e in text.split(","))):
+            m = pat.match(entry)
+            if m is None:
+                raise ValueError(f"bad fault spec {entry!r} (grammar: "
+                                 "site[@step][/slot][xN][+delay][%prob])")
+            g = m.groupdict()
+            f.on(g["site"],
+                 step=None if g["step"] is None else int(g["step"]),
+                 slot=None if g["slot"] is None else int(g["slot"]),
+                 times=1 if g["times"] is None else int(g["times"]),
+                 delay_s=float(g["delay"] or 0.0),
+                 p=float(g["p"] or 1.0))
+        return f
+
+
+def from_env(env: Optional[Dict[str, str]] = None):
+    """Resolve the ambient fault schedule: ``REPRO_FAULTS`` parsed when
+    set (``REPRO_FAULTS_SEED`` seeds it), else the :class:`NoFaults`
+    singleton-ish default."""
+    e = os.environ if env is None else env
+    text = e.get(ENV_VAR, "")
+    if not text:
+        return NoFaults()
+    return Faults.parse(text, seed=int(e.get(ENV_VAR + "_SEED", "0")))
+
+
+def truncate_file(path, keep_frac: float = 0.5) -> int:
+    """The ``truncated_checkpoint`` fault's effect: chop a file to
+    ``keep_frac`` of its bytes (simulating a crash mid-write / partial
+    transfer). Returns the new size."""
+    p = Path(path)
+    size = p.stat().st_size
+    keep = max(0, int(size * keep_frac))
+    with open(p, "r+b") as fh:
+        fh.truncate(keep)
+    return keep

@@ -286,6 +286,13 @@ class Recorder:
     def on_finish(self, req, reason: str, ts: float) -> None:
         pass
 
+    def on_preempt(self, req, slot: int, ts: float) -> None:
+        """``req`` evicted from ``slot`` and requeued (it will resume by
+        replaying its generated prefix — docs/robustness.md)."""
+
+    def on_fault(self, site: str, step: int, ts: float) -> None:
+        """A scheduled fault fired at ``site`` (serving/faults.py)."""
+
     def on_steps(self, spans: List[Tuple[float, float, str]]) -> None:
         """Finalised step timings for one burst: (start, end, kind)."""
 

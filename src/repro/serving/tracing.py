@@ -40,6 +40,7 @@ __all__ = ["Tracer", "validate_chrome_trace", "complete_spans"]
 QUEUE_TID = 0
 STEP_TID = 900
 COMPILE_TID = 901
+FAULT_TID = 902
 _PID = 1
 
 
@@ -53,6 +54,7 @@ class Tracer(Recorder):
         self.steps: List[Tuple[float, float, str]] = []
         self.polls: List[Tuple[float, int, Dict[str, float]]] = []
         self.compiles: List[Tuple[float, str, float, bool]] = []
+        self.faults: List[Tuple[float, str, int]] = []
 
     # -- Recorder hooks ------------------------------------------------ #
     def on_submit(self, req) -> None:
@@ -61,7 +63,7 @@ class Tracer(Recorder):
             "submitted": time.perf_counter(), "admitted": None,
             "slot": None, "kind": "", "base": 0, "chunks": [],
             "first_token": None, "emits": [], "finished": None,
-            "reason": "", "generated": 0}
+            "reason": "", "generated": 0, "preempts": []}
 
     def on_admission(self, req, slot: int, base: int, kind: str) -> None:
         r = self.requests.get(req.uid)
@@ -94,6 +96,14 @@ class Tracer(Recorder):
         if r is not None:
             r["finished"] = ts
             r["reason"] = reason
+
+    def on_preempt(self, req, slot: int, ts: float) -> None:
+        r = self.requests.get(req.uid)
+        if r is not None:
+            r["preempts"].append((ts, slot))
+
+    def on_fault(self, site: str, step: int, ts: float) -> None:
+        self.faults.append((ts, site, step))
 
     def on_steps(self, spans: List[Tuple[float, float, str]]) -> None:
         self.steps.extend(spans)
@@ -134,6 +144,8 @@ class Tracer(Recorder):
             meta(1 + b, f"slot {b}")
         meta(STEP_TID, "steps")
         meta(COMPILE_TID, "compiles")
+        if self.faults:
+            meta(FAULT_TID, "faults")
 
         for r in self.requests.values():
             uid = r["uid"]
@@ -161,7 +173,13 @@ class Tracer(Recorder):
                                 "admission": r["kind"],
                                 "prefix_reused": r["base"],
                                 "generated": r["generated"],
+                                "preemptions": len(r["preempts"]),
                                 "finish": r["reason"] or "evicted"}})
+            for (t, pslot) in r["preempts"]:
+                ev.append({"name": "preempt", "ph": "i",
+                           "ts": self._us(t), "pid": _PID,
+                           "tid": 1 + pslot, "s": "t",
+                           "args": {"uid": uid}})
             for (t, lo, hi, last) in r["chunks"]:
                 ev.append({"name": f"chunk {lo}:{hi}", "ph": "i",
                            "ts": self._us(t), "pid": _PID, "tid": tid,
@@ -185,6 +203,10 @@ class Tracer(Recorder):
             ev.append({"name": kind, "ph": "X", "ts": self._us(start),
                        "dur": max(0.0, round((end - start) * 1e6, 1)),
                        "pid": _PID, "tid": STEP_TID})
+        for (t, site, step) in self.faults:
+            ev.append({"name": f"fault {site}", "ph": "i",
+                       "ts": self._us(t), "pid": _PID, "tid": FAULT_TID,
+                       "s": "t", "args": {"site": site, "step": step}})
         for (t, name, elapsed, steady) in self.compiles:
             ev.append({"name": f"compile {name}", "ph": "X",
                        "ts": self._us(max(t, self.t0)),

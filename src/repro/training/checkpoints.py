@@ -2,6 +2,17 @@
 
 Containers are restricted to nested dicts (all our param trees are), so the
 tree is reconstructible from '/'-joined leaf paths without pickling.
+
+Resilience (docs/robustness.md): saves are **atomic** — payload and
+manifest are written to temp files and ``os.replace``d into place, so a
+crash mid-write leaves either the previous checkpoint or none, never a
+half-written one a later load would trust. Loads **fail fast** with
+:class:`CheckpointError`: a truncated/corrupt archive, a manifest whose
+leaf inventory disagrees with the payload (missing/extra leaves, shape
+or dtype drift), or a content-hash mismatch all name the checkpoint and
+the violated constraint instead of surfacing as a shape error deep in
+the first training step (regression-tested against the
+``truncated_checkpoint`` fault site in ``repro.serving.faults``).
 """
 from __future__ import annotations
 
@@ -13,6 +24,11 @@ from typing import Any, Dict
 
 import jax
 import numpy as np
+
+
+class CheckpointError(IOError):
+    """A checkpoint failed to load: truncated/corrupt payload, manifest
+    mismatch, or content-hash mismatch."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -48,32 +64,84 @@ def tree_hash(tree) -> str:
     return h.hexdigest()
 
 
+def _atomic_write(path: Path, write_fn) -> None:
+    """Write through a same-directory temp file + ``os.replace`` so the
+    destination is only ever absent, the old version, or complete."""
+    tmp = path.parent / f".{path.name}.tmp-{os.getpid()}"
+    try:
+        write_fn(tmp)
+        os.replace(tmp, path)
+    finally:
+        if tmp.exists():
+            tmp.unlink()
+
+
 def save_pytree(path: os.PathLike, tree, extra: dict | None = None) -> str:
-    """Writes <path>.npz and <path>.json; returns the content hash."""
+    """Writes <path>.npz and <path>.json atomically; returns the
+    content hash."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(str(path) + ".npz", **flat)
+    def _write_npz(tmp: Path) -> None:
+        with tmp.open("wb") as fh:
+            np.savez(fh, **flat)
+    _atomic_write(Path(str(path) + ".npz"), _write_npz)
     digest = tree_hash(tree)
     manifest = {"hash": digest,
                 "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                            for k, v in flat.items()}}
     manifest.update(extra or {})
-    with open(str(path) + ".json", "w") as f:
-        json.dump(manifest, f, indent=1)
+    _atomic_write(Path(str(path) + ".json"),
+                  lambda tmp: tmp.write_text(json.dumps(manifest, indent=1)))
     return digest
+
+
+def _validate_manifest(path: Path, manifest: dict,
+                       flat: Dict[str, np.ndarray]) -> None:
+    leaves = manifest.get("leaves")
+    if not isinstance(leaves, dict):
+        return                      # pre-manifest checkpoint: hash-only
+    missing = sorted(set(leaves) - set(flat))
+    extra = sorted(set(flat) - set(leaves))
+    if missing or extra:
+        raise CheckpointError(
+            f"checkpoint {path}: payload leaves disagree with manifest "
+            f"(missing={missing[:3]}, unexpected={extra[:3]})")
+    for key, want in leaves.items():
+        arr = flat[key]
+        if list(arr.shape) != list(want.get("shape", [])):
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {key!r} has shape "
+                f"{list(arr.shape)}, manifest says {want.get('shape')}")
+        if str(arr.dtype) != want.get("dtype"):
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {key!r} has dtype "
+                f"{arr.dtype}, manifest says {want.get('dtype')}")
 
 
 def load_pytree(path: os.PathLike, verify: bool = True):
     path = Path(path)
-    with np.load(str(path) + ".npz") as z:
-        flat = {k: z[k] for k in z.files}
+    try:
+        with np.load(str(path) + ".npz") as z:
+            flat = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:         # truncated zip, bad member, ...
+        raise CheckpointError(
+            f"checkpoint {path}: payload unreadable "
+            f"(truncated or corrupt archive): {e}") from e
     tree = _unflatten(flat)
     if verify and Path(str(path) + ".json").exists():
-        with open(str(path) + ".json") as f:
-            manifest = json.load(f)
+        try:
+            with open(str(path) + ".json") as f:
+                manifest = json.load(f)
+        except ValueError as e:
+            raise CheckpointError(
+                f"checkpoint {path}: manifest unreadable: {e}") from e
+        _validate_manifest(path, manifest, flat)
         if manifest.get("hash") and manifest["hash"] != tree_hash(tree):
-            raise IOError(f"checkpoint {path}: content hash mismatch")
+            raise CheckpointError(
+                f"checkpoint {path}: content hash mismatch")
     return tree
 
 

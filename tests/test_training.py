@@ -3,6 +3,7 @@ equivalence, checkpoint state roundtrip, loss decrease end-to-end."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
 from repro.data.pipeline import batches_for
@@ -80,3 +81,51 @@ def test_train_state_checkpoint_roundtrip(tmp_path):
 def test_global_norm():
     t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
     assert abs(float(global_norm(t)) - 5.0) < 1e-6
+
+
+def test_checkpoint_load_fails_fast_on_truncation(tmp_path):
+    """Regression for the truncated-checkpoint fault site: a crash
+    mid-write (simulated by chopping the payload) must surface as a
+    named CheckpointError at load, never as a shape error later."""
+    from repro.serving.faults import truncate_file
+    from repro.training.checkpoints import (CheckpointError, load_pytree,
+                                            save_pytree)
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+            "b": {"x": np.ones(3, np.float32)}}
+    save_pytree(tmp_path / "ck", tree)
+    truncate_file(tmp_path / "ck.npz", 0.5)
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        load_pytree(tmp_path / "ck")
+
+
+def test_checkpoint_manifest_validates_structure(tmp_path):
+    import json
+    from repro.training.checkpoints import (CheckpointError, load_pytree,
+                                            save_pytree)
+    tree = {"w": np.ones((4, 4), np.float32)}
+    save_pytree(tmp_path / "ck", tree)
+    man = json.loads((tmp_path / "ck.json").read_text())
+    man["leaves"]["w"]["shape"] = [2, 2]
+    (tmp_path / "ck.json").write_text(json.dumps(man))
+    with pytest.raises(CheckpointError, match="shape"):
+        load_pytree(tmp_path / "ck")
+    man["leaves"]["w"]["shape"] = [4, 4]
+    man["leaves"]["w"]["dtype"] = "float64"
+    (tmp_path / "ck.json").write_text(json.dumps(man))
+    with pytest.raises(CheckpointError, match="dtype"):
+        load_pytree(tmp_path / "ck")
+    man["leaves"]["ghost"] = {"shape": [1], "dtype": "float32"}
+    (tmp_path / "ck.json").write_text(json.dumps(man))
+    with pytest.raises(CheckpointError, match="disagree with manifest"):
+        load_pytree(tmp_path / "ck")
+
+
+def test_checkpoint_save_is_atomic(tmp_path):
+    """No temp litter, and a re-save replaces in place (os.replace)."""
+    from repro.training.checkpoints import load_pytree, save_pytree
+    save_pytree(tmp_path / "ck", {"w": np.zeros(4, np.float32)})
+    save_pytree(tmp_path / "ck", {"w": np.ones(4, np.float32)})
+    assert [p.name for p in tmp_path.iterdir()
+            if p.name.startswith(".")] == []
+    np.testing.assert_array_equal(load_pytree(tmp_path / "ck")["w"],
+                                  np.ones(4, np.float32))

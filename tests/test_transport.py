@@ -87,3 +87,64 @@ def test_cli_roundtrip(tmp_path):
           "--placement", "local", "--batch", "2"])
     main(["--zoo", zoo, "deploy", "--name", "pipe",
           "--placement", "split:1", "--batch", "2"])
+
+
+# ------------------------------------------------------------------ #
+# resilience: retries, timeouts, atomicity (docs/robustness.md)
+# ------------------------------------------------------------------ #
+def test_fetch_retries_injected_drops(remote, tmp_path):
+    from repro.serving.faults import Faults
+    root, _ = remote
+    f = Faults(seed=0).on("transport_drop", op="fetch", times=2)
+    t = RepoTransport(root, backoff_s=0.001, faults=f)
+    report = t.fetch("label_decoder", "0.1.0", tmp_path / "cache")
+    assert report.retries == 2
+    assert report.nbytes > 0
+    assert (tmp_path / "cache/label_decoder/0.1.0/manifest.json").exists()
+
+
+def test_fetch_exhausts_retries_and_leaves_no_partial(remote, tmp_path):
+    from repro.core.transport import TransportError
+    from repro.serving.faults import Faults
+    root, _ = remote
+    f = Faults(seed=0).on("transport_drop", op="fetch", times=-1)
+    t = RepoTransport(root, backoff_s=0.001, max_retries=2, faults=f)
+    with pytest.raises(TransportError, match="after 3 attempts"):
+        t.fetch("label_decoder", "0.1.0", tmp_path / "cache")
+    # atomic: a failed transfer never leaves a half-copied service that
+    # a later pull would mistake for a cache hit
+    assert not (tmp_path / "cache/label_decoder/0.1.0").exists()
+    report = RepoTransport(root).fetch("label_decoder", "0.1.0",
+                                       tmp_path / "cache")
+    assert not report.cached and report.retries == 0
+
+
+def test_injected_latency_trips_timeout_then_recovers(remote, tmp_path):
+    from repro.serving.faults import Faults
+    root, _ = remote
+    f = Faults(seed=0).on("transport_latency", op="fetch",
+                          delay_s=0.2, times=1)
+    t = RepoTransport(root, timeout_s=0.05, backoff_s=0.001, faults=f)
+    report = t.fetch("label_decoder", "0.1.0", tmp_path / "cache")
+    assert report.retries == 1          # attempt 0 timed out, 1 landed
+
+
+def test_push_retries_injected_drop(remote, tmp_path):
+    from repro.serving.faults import Faults
+    root, _ = remote
+    RepoTransport(root).fetch("label_decoder", "0.1.0", tmp_path / "cache")
+    f = Faults(seed=0).on("transport_drop", op="push", times=1)
+    t = RepoTransport(tmp_path / "other", backoff_s=0.001, faults=f)
+    report = t.push("label_decoder", "0.1.0", tmp_path / "cache")
+    assert report.retries == 1
+    assert (tmp_path / "other/label_decoder/0.1.0/manifest.json").exists()
+
+
+def test_backoff_is_deterministic_and_bounded():
+    t1 = RepoTransport("/nonexistent", backoff_s=0.01, jitter_seed=3)
+    t2 = RepoTransport("/nonexistent", backoff_s=0.01, jitter_seed=3)
+    seq1 = [t1._backoff(k) for k in range(4)]
+    seq2 = [t2._backoff(k) for k in range(4)]
+    assert seq1 == seq2                 # seeded jitter replays
+    for k, d in enumerate(seq1):        # exponential envelope, jittered
+        assert 0.5 * 0.01 * 2 ** k <= d <= 0.01 * 2 ** k
