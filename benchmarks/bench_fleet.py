@@ -1,0 +1,325 @@
+"""Fleet serving benchmark: goodput-under-SLO through a replica failure.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet [--smoke] \
+      [--out BENCH_fleet.json]
+
+A multi-tenant Poisson trace (each tenant's prompts share that tenant's
+system head, so prefix-affinity routing has something to exploit) is
+served twice by an N-replica :class:`~repro.serving.fleet.Fleet` over
+the *same* arrival schedule:
+
+* ``clean`` — no faults: the baseline goodput-under-SLO;
+* ``chaos`` — the same trace with ``replica_crash`` injected once half
+  the arrivals are in: the dead replica's in-flight requests fail over
+  to survivors by replay, and the report adds a goodput *timeline* so
+  the failure window is visible — the acceptance bar is graceful
+  degradation (goodput dips, never collapses to zero, and every request
+  still reaches a terminal state).
+
+Every request carries the same SLO deadline (calibrated once from a
+warmed probe: ``slo_frac x (TTFT + max_new x step p50)``); goodput
+counts only tokens of streams that finished normally within it. The
+artifact (``BENCH_fleet.json``, unified envelope of
+``benchmarks/schema.py``) is consumed by ``benchmarks/check_fleet.py
+--bench`` as the graceful-degradation CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks import schema
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving import telemetry
+from repro.serving.faults import Faults
+from repro.serving.fleet import Fleet
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+WINDOW_S = 0.5          # goodput timeline bucket width
+FAIL_WINDOW_S = 2.0     # "failure window": this long after the kill
+
+
+def make_tenant_workload(cfg, n_requests: int, tenants: int, seed: int,
+                         rate_hz: float, max_new: int,
+                         head_len: int = 16, body_len=(4, 14)):
+    """Merged multi-tenant Poisson trace: arrival times plus prompts,
+    where every prompt starts with its tenant's shared head (the
+    affinity/prefix-reuse signal)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    heads = [rng.integers(0, cfg.vocab, head_len) for _ in range(tenants)]
+    tenant = rng.integers(0, tenants, n_requests)
+    prompts = [np.concatenate([heads[tenant[i]],
+                               rng.integers(0, cfg.vocab,
+                                            int(rng.integers(*body_len)))])
+               for i in range(n_requests)]
+    return arrivals, prompts, [int(t) for t in tenant], max_new
+
+
+def warm_fleet(fl: Fleet, cfg, prompts, max_new: int) -> None:
+    """Compile every program the timed stream can hit, on **every**
+    replica: the actual workload prompts (so shared-tenant prefix
+    *hits* occur during warm — the slot-reset program is keyed on the
+    hit length), plus a replay-length variant per distinct length
+    (prompt + generated suffix — the shape failover re-admits). Ends
+    with ``reset_stats()``, which arms each replica's recompile
+    watchdog."""
+    rng = np.random.default_rng(321)
+    donors, seen = [], set()
+    for p in prompts:
+        key = np.asarray(p).tobytes()
+        if key not in seen:
+            seen.add(key)
+            donors.append(np.asarray(p))
+    by_len = {len(p): p for p in donors}
+    donors += [np.concatenate([p, rng.integers(0, cfg.vocab, max_new)])
+               for p in by_len.values()]
+    for rep in fl.replicas:
+        uid = -1
+        for p in donors:
+            rep.engine.submit(Request(uid=uid, prompt=p,
+                                      max_new_tokens=4))
+            uid -= 1
+        rep.engine.run()
+    fl.reset_stats()
+
+
+def calibrate_slo(fl: Fleet, prompt, max_new: int,
+                  slo_frac: float) -> float:
+    """One warmed probe on replica 0: SLO = slo_frac x (probe TTFT +
+    max_new decode steps at the warmed p50)."""
+    eng = fl.replicas[0].engine
+    probe = Request(uid=-99, prompt=np.asarray(prompt[:8], np.int32),
+                    max_new_tokens=max_new)
+    eng.submit(probe)
+    eng.run()
+    p50 = telemetry.percentile(eng.step_times, 50) \
+        if eng.step_times else 0.0
+    ttft = probe.first_token_s - probe.submitted_s
+    fl.reset_stats()
+    return slo_frac * (ttft + max_new * p50)
+
+
+def serve_fleet_stream(fl: Fleet, arrivals, prompts, max_new: int,
+                       deadline_s: float,
+                       kill: Optional[Tuple[float, int]] = None) -> Dict:
+    """Open-loop driver against the fleet facade. ``kill=(frac, rid)``
+    schedules a ``replica_crash`` on ``rid`` for the tick after
+    ``frac`` of the arrivals are submitted — armed only once ``rid``
+    actually holds in-flight work, so the kill always migrates live
+    streams instead of landing on an idle replica."""
+    t0 = time.perf_counter()
+    i, n = 0, len(prompts)
+    kill_s, kill_idx = None, (int(kill[0] * n) if kill else None)
+
+    def _victim_busy(rid: int) -> bool:
+        return any(not e.resp.finished
+                   and any(a.rid == rid for a in e.live)
+                   for e in fl._entries.values())
+
+    while i < n or fl.has_work:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            fl.submit(Request(uid=i, prompt=prompts[i],
+                              max_new_tokens=max_new,
+                              deadline_s=deadline_s))
+            i += 1
+        if kill_idx is not None and i >= kill_idx \
+                and (_victim_busy(kill[1]) or i >= n):
+            fl.faults.on("replica_crash", step=fl._ticks + 1,
+                         slot=kill[1])
+            kill_s, kill_idx = time.perf_counter() - t0, None
+        if not fl.has_work:
+            time.sleep(min(0.002, max(0.0, arrivals[i] - now)))
+            continue
+        fl.tick()
+    wall = time.perf_counter() - t0
+
+    resp = fl.responses
+    good = [r for u, r in resp.items() if u >= 0 and r.ok]
+    reasons: Dict[str, int] = {}
+    for u, r in resp.items():
+        if u >= 0:
+            reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    # goodput timeline: good tokens bucketed by finish time
+    n_win = int(np.ceil(wall / WINDOW_S)) or 1
+    timeline = [0.0] * n_win
+    for u, r in resp.items():
+        if u < 0 or not r.ok:
+            continue
+        t_fin = fl._entries[u].req.finished_s - t0
+        w = min(n_win - 1, max(0, int(t_fin / WINDOW_S)))
+        timeline[w] += r.n_generated
+    timeline = [round(t / WINDOW_S, 2) for t in timeline]
+
+    st = fl.latency_stats()
+    out = {
+        "wall_s": wall,
+        "n_requests": n,
+        "n_finished": sum(1 for u, r in resp.items()
+                          if u >= 0 and r.finished),
+        "n_terminal_missing": sum(1 for u, r in resp.items()
+                                  if u >= 0 and not r.finished),
+        "reasons": reasons,
+        "deadline_s": deadline_s,
+        "deadline_met_frac": len(good) / n if n else 0.0,
+        "goodput_tok_per_s": (sum(r.n_generated for r in good) / wall
+                              if wall else 0.0),
+        "goodput_timeline_tok_per_s": timeline,
+        "window_s": WINDOW_S,
+        "kill_s": kill_s,
+        "outputs": {u: list(r.tokens) for u, r in resp.items()
+                    if u >= 0 and r.ok},
+        "replica_states": {r.rid: r.state for r in fl.replicas},
+    }
+    for k in ("dispatches", "failovers", "requests_migrated",
+              "replica_deaths", "hedges_issued", "hedges_won",
+              "hedges_wasted", "router_drops", "redispatches",
+              "fleet_timeouts", "fleet_errors", "affinity_hits"):
+        out[k] = st.get(k, 0)
+    out["affinity_hits"] = fl.router.affinity_hits
+    telemetry.pct_stats(out, "fleet_ttft_ms", fl._ttft.samples,
+                        (50, 95, 99))
+    if kill_s is not None:
+        lo, hi = kill_s, kill_s + FAIL_WINDOW_S
+        toks = 0.0
+        for u, r in resp.items():
+            if u < 0 or not r.ok:
+                continue
+            t_fin = fl._entries[u].req.finished_s - t0
+            if lo <= t_fin < hi:
+                toks += r.n_generated
+        out["failure_window_goodput_tok_per_s"] = toks / FAIL_WINDOW_S
+    return out
+
+
+def run(n_requests: int = 36, tenants: int = 3, replicas: int = 3,
+        rate_hz: float = 6.0, max_new: int = 16, slo_frac: float = 6.0,
+        hedge: bool = False, seed: int = 0,
+        kill_frac: float = 0.5, kill_rid: int = 0) -> Dict:
+    cfg = get_arch("llama3.2-1b", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    arrivals, prompts, tenant, max_new = make_tenant_workload(
+        cfg, n_requests, tenants, seed, rate_hz, max_new)
+    ek = dict(max_batch=2, cache_len=96, sampler=Sampler(),
+              prefill_chunk=8, prefix_cache_tokens=512,
+              paged=True, page_size=8, sync_every=4)
+
+    rows: List[Dict] = []
+    deadline_s = None
+    for name, kill in (("clean", None),
+                       ("chaos", (kill_frac, kill_rid))):
+        # both runs carry an (initially empty) schedule; the chaos run's
+        # driver adds the replica_crash once half the arrivals are in
+        fl = Fleet(model, params, replicas=replicas, engine_kwargs=ek,
+                   hedge=hedge, faults=Faults(seed=seed))
+        warm_fleet(fl, cfg, prompts, max_new)
+        if deadline_s is None:
+            deadline_s = calibrate_slo(fl, prompts[0], max_new, slo_frac)
+        row = serve_fleet_stream(fl, arrivals, prompts, max_new,
+                                 deadline_s, kill=kill)
+        row["mode"] = name
+        # per-replica recompiles-after-warm; killed replicas excluded
+        # (their replacement engine is a fresh compile universe)
+        row["steady_compiles"] = sum(
+            n for rid, n in fl.steady_compiles().items()
+            if fl.replicas[rid].state != "dead")
+        rows.append(row)
+
+    # survivors of both runs must be token-identical: failover replay
+    # and hedging dedup are scheduling changes, not model changes
+    a, b = rows[0]["outputs"], rows[1]["outputs"]
+    diverged = [u for u in set(a) & set(b) if a[u] != b[u]]
+    for row in rows:
+        row["greedy_match"] = not diverged
+        row.pop("outputs")
+    assert not diverged, f"chaos run diverged on uids {diverged}"
+
+    return {
+        "workload": {"n_requests": n_requests, "tenants": tenants,
+                     "replicas": replicas, "rate_hz": rate_hz,
+                     "max_new": max_new, "slo_frac": slo_frac,
+                     "deadline_s": deadline_s, "hedge": hedge,
+                     "seed": seed, "kill_frac": kill_frac,
+                     "kill_rid": kill_rid, "window_s": WINDOW_S,
+                     "failure_window_s": FAIL_WINDOW_S},
+        "rows": rows,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small trace, 3 replicas")
+    ap.add_argument("--out", default="BENCH_fleet.json",
+                    help="JSON output path ('' to skip)")
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--hedge", action="store_true",
+                    help="enable tail-latency hedging in both runs")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        data = run(n_requests=12, tenants=2, replicas=args.replicas,
+                   rate_hz=8.0, max_new=12, hedge=args.hedge)
+    else:
+        data = run(replicas=args.replicas, hedge=args.hedge)
+
+    by = {r["mode"]: r for r in data["rows"]}
+    print(f"fleet benchmark: {data['workload']['replicas']} replicas, "
+          f"{data['workload']['tenants']} tenants, SLO "
+          f"{data['workload']['deadline_s'] * 1e3:.0f}ms")
+    for r in data["rows"]:
+        print(f"  {r['mode']:>6s}: goodput {r['goodput_tok_per_s']:7.1f} "
+              f"tok/s, met {r['deadline_met_frac'] * 100:5.1f}%, "
+              f"migrated={r['requests_migrated']}, "
+              f"deaths={r['replica_deaths']}, "
+              f"affinity_hits={r['affinity_hits']}, "
+              f"reasons={r['reasons']}")
+    ch = by["chaos"]
+    if ch.get("failure_window_goodput_tok_per_s") is not None:
+        print(f"  failure window ({data['workload']['failure_window_s']}s "
+              f"after kill at {ch['kill_s']:.1f}s): "
+              f"{ch['failure_window_goodput_tok_per_s']:.1f} tok/s good")
+    print(f"  goodput timeline (chaos, {ch['window_s']}s windows): "
+          f"{ch['goodput_timeline_tok_per_s']}")
+
+    if args.out:
+        metrics = [
+            schema.metric("goodput_tok_per_s_clean", "tok/s",
+                          by["clean"]["goodput_tok_per_s"]),
+            schema.metric("goodput_tok_per_s_chaos", "tok/s",
+                          by["chaos"]["goodput_tok_per_s"]),
+            schema.metric("deadline_met_frac_clean", "frac",
+                          by["clean"]["deadline_met_frac"]),
+            schema.metric("deadline_met_frac_chaos", "frac",
+                          by["chaos"]["deadline_met_frac"]),
+            schema.metric("requests_migrated", "requests",
+                          by["chaos"]["requests_migrated"]),
+            schema.metric("failure_window_goodput_tok_per_s", "tok/s",
+                          by["chaos"].get(
+                              "failure_window_goodput_tok_per_s", 0.0)),
+            schema.metric("affinity_hits_clean", "hits",
+                          by["clean"]["affinity_hits"]),
+        ]
+        schema.write(args.out, schema.payload(
+            "fleet", run=schema.run_meta(smoke=args.smoke,
+                                         arch="llama3.2-1b-reduced",
+                                         greedy=True),
+            metrics=metrics, data=data,
+            # gated by check_telemetry: a steady-state recompile on a
+            # surviving replica means chaos changed a program shape
+            telemetry={"counters": {"steady_compiles": sum(
+                r["steady_compiles"] for r in data["rows"])},
+                "gauges": {}, "histograms": {}}))
+    return data
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""CI fleet gate: seeded replica-kill chaos on a 3-replica fleet.
+
+  PYTHONPATH=src python -m benchmarks.check_fleet [--bench BENCH_fleet.json]
+
+One fixed-seed scenario:
+
+* a fault-free single **engine** run records the expected greedy tokens
+  (greedy output is scheduling-invariant, so one engine is the ground
+  truth for any fleet arrangement);
+* a 3-replica fleet is warmed per replica (``reset_stats()`` arms every
+  recompile watchdog), then serves the same workload under an injected
+  schedule — ``replica_crash`` mid-run on the busiest replica plus a
+  ``router_drop`` on the failover re-dispatch itself — so live requests
+  really are migrated, and one migrated request is additionally lost in
+  flight and recovered by the probe.
+
+Gate conditions (exit 1 on any violation, printed to stderr):
+
+* **zero lost requests**: every submitted uid reaches a terminal state;
+* **survivors token-identical**: every normally-finished stream matches
+  the fault-free engine run — including the migrated ones (failover
+  resume-by-replay is exact);
+* ``requests_migrated >= 1`` (the kill actually hit in-flight work) and
+  the dead replica stays dead;
+* nothing leaks on the survivors: no queued/active work, zero live KV
+  pages after draining prefix caches, allocator invariants hold;
+* ``steady_compiles == 0`` **per replica** — chaos recompiled nothing.
+
+With ``--bench BENCH_fleet.json`` it additionally validates the bench
+artifact (schema envelope) and the graceful-degradation claim: goodput
+under SLO in the failure window stays above zero and every chaos-run
+request reached a terminal state.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving.engine import Engine
+from repro.serving.faults import Faults
+from repro.serving.fleet import DEAD, Fleet
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+SEED = 0
+KILL_RID = 0
+KILL_TICK = 2
+
+_EK = dict(max_batch=2, cache_len=64, sampler=Sampler(),
+           prefill_chunk=8, prefix_cache_tokens=256,
+           paged=True, page_size=8)
+
+
+def _workload(cfg, uid0: int = 0):
+    rng = np.random.default_rng(SEED + 7)
+    head = rng.integers(0, cfg.vocab, 16)
+    reqs = []
+    for i, n in enumerate((5, 9, 12, 7, 10, 6)):
+        body = rng.integers(0, cfg.vocab, n)
+        prompt = np.concatenate([head, body]) if i % 2 else body
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=20))
+    return reqs
+
+
+def _warm(fl: Fleet, cfg) -> None:
+    """Per replica: run every workload prompt shape plus its
+    replay-length variant, then arm the watchdogs."""
+    rng = np.random.default_rng(SEED + 99)
+    donors = []
+    for r in _workload(cfg):
+        donors.append(np.asarray(r.prompt))
+        donors.append(np.concatenate(
+            [np.asarray(r.prompt),
+             rng.integers(0, cfg.vocab, r.max_new_tokens)]))
+    for rep in fl.replicas:
+        uid = -1
+        for p in donors:
+            rep.engine.submit(Request(uid=uid, prompt=p,
+                                      max_new_tokens=4))
+            uid -= 1
+        rep.engine.run()
+    fl.reset_stats()
+
+
+def check_bench(path: str, errs: List[str]) -> None:
+    from benchmarks import schema
+    problems = schema.validate_payload(path)
+    errs.extend(f"{path}: {p}" for p in problems)
+    if problems:
+        return
+    with open(path) as f:
+        pl = json.load(f)
+    rows = {r["mode"]: r for r in pl["data"]["rows"]}
+    ch = rows.get("chaos")
+    if ch is None:
+        errs.append(f"{path}: no chaos row")
+        return
+    if ch.get("n_terminal_missing", 1) != 0:
+        errs.append(f"{path}: chaos run lost "
+                    f"{ch.get('n_terminal_missing')} request(s)")
+    if ch.get("replica_deaths", 0) < 1:
+        errs.append(f"{path}: chaos run killed no replica")
+    fw = ch.get("failure_window_goodput_tok_per_s")
+    if fw is None or fw <= 0:
+        errs.append(f"{path}: goodput collapsed to zero in the failure "
+                    f"window (got {fw}) — degradation is not graceful")
+    if not ch.get("greedy_match", False):
+        errs.append(f"{path}: chaos survivors diverged from the clean "
+                    "run")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="",
+                    help="also validate a BENCH_fleet.json artifact's "
+                         "graceful-degradation claim")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch("llama3.2-1b", variant="reduced")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+
+    # -- expected tokens: the fault-free single-engine run ----------- #
+    clean = Engine(model, params, **_EK)
+    for r in _workload(cfg, uid0=1000):
+        clean.submit(Request(uid=r.uid - 1000, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens))
+    want = {u: list(r.tokens) for u, r in clean.run().items()}
+
+    # -- chaos fleet: warm, arm watchdogs, inject --------------------- #
+    faults = (Faults(seed=SEED)
+              .on("replica_crash", step=KILL_TICK, slot=KILL_RID)
+              .on("router_drop", step=KILL_TICK))
+    fl = Fleet(model, params, replicas=3, engine_kwargs=_EK,
+               faults=faults)
+    _warm(fl, cfg)
+    for r in _workload(cfg):
+        fl.submit(r)
+    resp = fl.run()
+
+    errs: List[str] = []
+    st = fl.latency_stats()
+
+    missing = [u for u, r in resp.items() if not r.finished]
+    if missing:
+        errs.append(f"lost requests (no terminal state): {missing}")
+    not_ok = {u: r.finish_reason for u, r in resp.items() if not r.ok}
+    if not_ok:
+        errs.append(f"requests finished abnormally: {not_ok}")
+    for u, r in resp.items():
+        if r.ok and list(r.tokens) != want.get(u):
+            errs.append(f"uid {u} diverged from the fault-free run: "
+                        f"{r.tokens} != {want.get(u)}")
+
+    if st.get("replica_deaths", 0) != 1:
+        errs.append(f"expected exactly 1 replica death, got "
+                    f"{st.get('replica_deaths')}")
+    if fl.replicas[KILL_RID].state != DEAD:
+        errs.append(f"killed replica {KILL_RID} is "
+                    f"{fl.replicas[KILL_RID].state}, want dead")
+    if st.get("requests_migrated", 0) < 1:
+        errs.append("the kill migrated no in-flight request — the "
+                    "scenario under-fired")
+    if st.get("router_drops", 0) != 1:
+        errs.append(f"expected 1 detected router_drop, got "
+                    f"{st.get('router_drops')}")
+
+    # survivors leak nothing
+    for rep in fl.replicas:
+        if rep.state == DEAD:
+            continue
+        eng = rep.engine
+        if eng.has_work or any(s is not None for s in eng.slots):
+            errs.append(f"replica {rep.rid} leaked work: queue or "
+                        "slot table non-empty")
+        while eng.prefix_cache.drop_lru():
+            pass
+        if eng._paged.live_pages != 0:
+            errs.append(f"replica {rep.rid} leaked KV pages: "
+                        f"{eng._paged.live_pages} live after drain")
+        try:
+            eng._paged.check_invariants()
+        except AssertionError as e:
+            errs.append(f"replica {rep.rid} allocator invariants "
+                        f"violated: {e}")
+
+    steady = fl.steady_compiles()
+    for rid, n in sorted(steady.items()):
+        if n and fl.replicas[rid].state != DEAD:
+            errs.append(f"replica {rid}: {n} steady-state recompile(s) "
+                        "during chaos — injection changed a program "
+                        "shape")
+
+    if args.bench:
+        check_bench(args.bench, errs)
+
+    if errs:
+        for e in errs:
+            print(f"check_fleet: {e}", file=sys.stderr)
+        return 1
+    print(f"check_fleet: chaos gate clean — "
+          f"{sum(1 for r in resp.values() if r.ok)}/{len(resp)} requests "
+          f"token-identical after a replica kill, "
+          f"migrated={st.get('requests_migrated')}, "
+          f"router_drops={st.get('router_drops')}, "
+          f"0 leaked pages/slots, steady_compiles=0 per replica"
+          + (f", bench artifact {args.bench} degrades gracefully"
+             if args.bench else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

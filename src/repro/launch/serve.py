@@ -19,6 +19,150 @@ from repro.serving.request import Request
 from repro.serving.sampler import Sampler
 
 
+def _engine_kwargs(args):
+    """Engine knobs shared by the single-engine and fleet paths (the
+    fleet owns ``recorder``/``faults``/``trace_dir`` itself)."""
+    return dict(max_batch=args.max_batch, cache_len=args.cache_len,
+                sampler=Sampler(temperature=args.temperature, top_k=32),
+                seed=args.seed, sync_every=args.sync_every,
+                kv_cache_dtype=args.kv_cache_dtype,
+                prefill_chunk=None if args.prefill_chunk < 0
+                else args.prefill_chunk,
+                prefix_cache_tokens=None if args.prefix_cache_tokens < 0
+                else args.prefix_cache_tokens,
+                paged=args.paged, page_size=args.page_size,
+                num_pages=args.num_pages or None,
+                mesh=args.mesh or None)
+
+
+def _parse_drains(spec):
+    """'rid@seconds[,rid@seconds...]' -> [(seconds, rid)] sorted."""
+    plan = []
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        rid, sep, at = part.partition("@")
+        try:
+            if not sep:
+                raise ValueError(part)
+            plan.append((float(at), int(rid)))
+        except ValueError:
+            raise SystemExit(f"--drain: bad entry {part!r}, want "
+                             f"'rid@seconds' (e.g. '0@2.5')")
+    return sorted(plan)
+
+
+def _serve_fleet(args, cfg, model, params):
+    """--replicas > 1: serve through the fault-tolerant Fleet
+    (docs/robustness.md). Mirrors the single-engine loop but adds the
+    --drain rolling-restart schedule and fleet-level reporting."""
+    from repro.serving.fleet import DRAINED, Fleet
+
+    if cfg.frontend is not None:
+        raise SystemExit("--replicas > 1 serves token-only prompts; "
+                         "frontend-embedding archs need the "
+                         "single-engine path")
+    fl = Fleet(model, params, replicas=args.replicas,
+               engine_kwargs=_engine_kwargs(args),
+               hedge=args.hedge, trace=bool(args.trace_out),
+               faults=(Faults.parse(args.faults, seed=args.faults_seed)
+                       if args.faults else None))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    for uid in range(args.requests):
+        L = int(rng.integers(max(2, args.prompt_len // 2),
+                             args.prompt_len + 1))
+        fl.submit(Request(uid=uid,
+                          prompt=rng.integers(0, cfg.vocab, L),
+                          max_new_tokens=args.max_new,
+                          deadline_s=args.deadline or None))
+    logger = None
+    if args.metrics_jsonl:
+        from repro.training.metrics import MetricsLogger
+        logger = MetricsLogger(args.metrics_jsonl,
+                               run_name=f"serve-fleet-{cfg.name}")
+    drains = _parse_drains(args.drain)
+    draining = set()
+    next_log = t0 + (args.log_every or 1.0)
+    while fl.has_work:
+        fl.tick(args.sync_every)
+        elapsed = time.perf_counter() - t0
+        while drains and elapsed >= drains[0][0]:
+            _, rid = drains.pop(0)
+            try:
+                fl.drain(rid)
+                draining.add(rid)
+            except ValueError as err:   # already dead/drained: skip
+                print(f"--drain: {err}")
+        for rid in sorted(draining):
+            if fl.replicas[rid].state == DRAINED:
+                fl.rejoin(rid)          # rolling restart: fresh engine
+                draining.discard(rid)
+        if (args.log_every or logger is not None) \
+                and time.perf_counter() >= next_log:
+            snap = fl.metrics.snapshot()
+            c, gz = snap["counters"], snap["gauges"]
+            fields = dict(inflight=gz.get("fleet_inflight", 0),
+                          queued=gz.get("fleet_queue_depth", 0),
+                          dispatches=c.get("dispatches", 0),
+                          failovers=c.get("failovers", 0),
+                          hedges=c.get("hedges_issued", 0))
+            if logger is not None:
+                logger.log("fleet", **fields)
+            if args.log_every:
+                states = "".join(r.state[0] for r in fl.replicas)
+                print(f"[{elapsed:6.1f}s] replicas={states} " +
+                      " ".join(f"{k}={v}" for k, v in fields.items()))
+            next_log = time.perf_counter() + (args.log_every or 1.0)
+    responses = fl.responses
+    wall = time.perf_counter() - t0
+    stats = fl.latency_stats()
+    if logger is not None:
+        logger.log("final", wall_s=wall, **{
+            k: v for k, v in stats.items()
+            if isinstance(v, (int, float))})
+        logger.close()
+    if args.trace_out:
+        fl.export_trace(args.trace_out)
+        print(f"merged chrome trace written to {args.trace_out} "
+              f"(one lane per replica + a fleet lane; open in "
+              f"https://ui.perfetto.dev)")
+    tokens = sum(len(r.tokens) for r in responses.values())
+    n_ok = sum(1 for r in responses.values() if r.ok)
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"replicas={args.replicas} batch={args.max_batch}"
+          + (" hedge" if args.hedge else ""))
+    print(f"finished={stats['n_finished']} ok={n_ok} tokens={tokens} "
+          f"wall={wall:.2f}s ({tokens / wall:,.1f} tok/s)")
+    g = lambda k: stats.get(k, float("nan"))  # noqa: E731
+    print(f"fleet ttft ms: p50={g('fleet_ttft_ms_p50'):.1f} "
+          f"p95={g('fleet_ttft_ms_p95'):.1f} "
+          f"p99={g('fleet_ttft_ms_p99'):.1f}")
+    print(f"routing: dispatches={stats.get('dispatches', 0)} "
+          f"affinity_hits={stats.get('affinity_hits', 0)} "
+          f"breaker_opens={stats.get('breaker_opens', 0)}")
+    print(f"resilience: deaths={stats.get('replica_deaths', 0)} "
+          f"failovers={stats.get('failovers', 0)} "
+          f"migrated={stats.get('requests_migrated', 0)} "
+          f"router_drops={stats.get('router_drops', 0)} "
+          f"hedges won/wasted={stats.get('hedges_won', 0)}"
+          f"/{stats.get('hedges_wasted', 0)} "
+          f"drains={stats.get('drains', 0)} "
+          f"rejoins={stats.get('rejoins', 0)} "
+          f"timeouts={stats.get('fleet_timeouts', 0)}")
+    for r in fl.replicas:
+        ewma = f"{r.ewma_s * 1e3:.1f}ms" if r.ewma_s else "-"
+        print(f"  replica {r.rid}: {r.state} ticks={r.ticks} "
+              f"step_ewma={ewma}"
+              + (f" ({r.death_reason})" if r.death_reason else ""))
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"arch": cfg.name, "wall_s": wall,
+                       **{k: v for k, v in stats.items()
+                          if isinstance(v, (int, float, str))}},
+                      f, indent=2)
+    return responses, stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="llama3.2-1b")
@@ -105,6 +249,22 @@ def main(argv=None):
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="per-request deadline in seconds (0 = none); "
                          "expired requests finish with reason 'timeout'")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a fault-tolerant Fleet of this "
+                         "many engine replicas (health-checked routing, "
+                         "failover by replay, drain/rejoin — see "
+                         "docs/robustness.md); 1 = single engine. "
+                         "--faults may then also name fleet sites "
+                         "(replica_crash/replica_hang/router_drop)")
+    ap.add_argument("--hedge", action="store_true",
+                    help="with --replicas > 1: duplicate slow-starting "
+                         "requests to a second replica after the fleet's "
+                         "p99 TTFT; first token wins, loser is cancelled")
+    ap.add_argument("--drain", default="",
+                    help="with --replicas > 1: rolling-restart schedule "
+                         "'rid@seconds[,rid@seconds...]' — drain each "
+                         "replica at that wall time, rejoin it once "
+                         "drained")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch, variant=args.variant)
@@ -121,18 +281,9 @@ def main(argv=None):
     if cfg.quant:
         from repro.quant import quantize_for_cfg
         params = quantize_for_cfg(params, cfg)
-    engine = Engine(model, params, max_batch=args.max_batch,
-                    cache_len=args.cache_len,
-                    sampler=Sampler(temperature=args.temperature, top_k=32),
-                    seed=args.seed, sync_every=args.sync_every,
-                    kv_cache_dtype=args.kv_cache_dtype,
-                    prefill_chunk=None if args.prefill_chunk < 0
-                    else args.prefill_chunk,
-                    prefix_cache_tokens=None if args.prefix_cache_tokens < 0
-                    else args.prefix_cache_tokens,
-                    paged=args.paged, page_size=args.page_size,
-                    num_pages=args.num_pages or None,
-                    mesh=args.mesh or None,
+    if args.replicas > 1:
+        return _serve_fleet(args, cfg, model, params)
+    engine = Engine(model, params, **_engine_kwargs(args),
                     recorder=bool(args.trace_out),
                     trace_dir=args.trace_dir,
                     faults=(Faults.parse(args.faults, seed=args.faults_seed)

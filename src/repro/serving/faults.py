@@ -32,6 +32,13 @@ Fault sites
                          (``truncate_file``; exercises fail-fast load
                          validation).
 
+Other layers register their own sites into the same catalogue via
+:func:`register_site` — ``serving/fleet.py`` adds ``replica_crash``
+(a replica dies between ticks), ``replica_hang`` (a replica stops
+making tick progress) and ``router_drop`` (a routed submit is lost
+before reaching the replica). Unknown site names raise ``ValueError``
+naming the nearest registered site.
+
 Usage::
 
     faults = (Faults(seed=0)
@@ -55,15 +62,44 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["FaultSpec", "NoFaults", "Faults", "SITES", "truncate_file",
-           "from_env", "ENV_VAR"]
+__all__ = ["FaultSpec", "NoFaults", "Faults", "SITES", "register_site",
+           "known_sites", "truncate_file", "from_env", "ENV_VAR"]
 
 ENV_VAR = "REPRO_FAULTS"
 
-SITES = frozenset({
+#: The registered site catalogue. Core sites live here; layers that add
+#: their own sites (the fleet's ``replica_crash``/``replica_hang``/
+#: ``router_drop``) call :func:`register_site` at import, so every
+#: schedule — string, builder or env — validates against one list and a
+#: typo like ``nan_logit`` fails fast naming the nearest known site.
+SITES = {
     "page_alloc", "nan_logits", "slow_step",
     "transport_drop", "transport_latency", "truncated_checkpoint",
-})
+}
+
+
+def register_site(name: str) -> str:
+    """Add a fault site to the catalogue (idempotent). Subsystems that
+    fire their own sites register them at import so ``Faults.parse``
+    and ``Faults.on`` validate against the full set."""
+    if not re.fullmatch(r"[a-z][a-z0-9_]*", name):
+        raise ValueError(f"bad fault site name {name!r} "
+                         "(want lowercase_snake_case)")
+    SITES.add(name)
+    return name
+
+
+def known_sites() -> frozenset:
+    """Snapshot of the currently registered site catalogue."""
+    return frozenset(SITES)
+
+
+def _unknown_site_error(name: str) -> ValueError:
+    import difflib
+    near = difflib.get_close_matches(name, sorted(SITES), n=1, cutoff=0.5)
+    hint = f"; did you mean {near[0]!r}?" if near else ""
+    return ValueError(f"unknown fault site {name!r}{hint} "
+                      f"(registered sites: {sorted(SITES)})")
 
 
 @dataclasses.dataclass
@@ -85,8 +121,7 @@ class FaultSpec:
 
     def __post_init__(self):
         if self.site not in SITES:
-            raise ValueError(f"unknown fault site {self.site!r} "
-                             f"(sites: {sorted(SITES)})")
+            raise _unknown_site_error(self.site)
 
     @property
     def exhausted(self) -> bool:
@@ -160,7 +195,7 @@ class Faults(NoFaults):
         comma-separated ``site[@step][/slot][xN][+delay][%prob]``."""
         f = cls(seed=seed)
         pat = re.compile(
-            r"^(?P<site>[a-z_]+)"
+            r"^(?P<site>[a-z][a-z0-9_]*)"
             r"(?:@(?P<step>\d+))?"
             r"(?:/(?P<slot>\d+))?"
             r"(?:x(?P<times>-?\d+))?"

@@ -8,8 +8,12 @@ from typing import List, Optional
 import numpy as np
 
 
-@dataclass
+@dataclass(eq=False)
 class Request:
+    # eq=False: identity equality. The generated __eq__ would compare the
+    # numpy prompt fields and raise "truth value is ambiguous" the moment
+    # two distinct Request objects meet in a container operation
+    # (deque.remove/`in` during cancel or preemptive requeue).
     uid: int
     prompt: np.ndarray              # (L,) int32 token ids
     max_new_tokens: int = 32

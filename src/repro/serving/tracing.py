@@ -34,7 +34,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.serving.telemetry import Recorder
 
-__all__ = ["Tracer", "validate_chrome_trace", "complete_spans"]
+__all__ = ["Tracer", "validate_chrome_trace", "complete_spans",
+           "merge_chrome_traces"]
 
 # fixed thread-lane ids (slot lanes are 1..max_batch)
 QUEUE_TID = 0
@@ -228,6 +229,48 @@ class Tracer(Recorder):
             with open(path, "w") as f:
                 json.dump(trace, f)
         return trace
+
+
+# --------------------------------------------------------------------- #
+# multi-process merge (fleet serving)
+# --------------------------------------------------------------------- #
+def merge_chrome_traces(parts, extra=None, extra_label: str = "fleet",
+                        extra_pid: int = 99,
+                        path: Optional[str] = None) -> Dict[str, Any]:
+    """Merge per-replica Chrome traces into one multi-process trace.
+
+    ``parts`` is a list of ``(label, pid, trace, offset_us)`` tuples:
+    every event in ``trace`` is rewritten onto process ``pid`` (named
+    ``label``) and shifted by ``offset_us`` — each replica tracer's
+    timestamps are relative to its own construction, so the caller
+    (``serving/fleet.py``) passes the tracer-epoch offset that aligns
+    them on one fleet clock. ``extra`` is an optional list of
+    ready-made events for an orchestration lane on ``extra_pid``
+    (health transitions, failovers, hedges). Rejoined replicas carry a
+    fresh tracer; the merge simply reflects whatever each current
+    tracer recorded."""
+    ev: List[Dict[str, Any]] = []
+    for label, pid, trace, offset_us in parts:
+        ev.append({"name": "process_name", "ph": "M", "ts": 0,
+                   "pid": pid, "tid": 0, "args": {"name": label}})
+        for e in trace.get("traceEvents", ()):
+            if e.get("ph") == "M" and e.get("name") == "process_name":
+                continue
+            e2 = dict(e)
+            e2["pid"] = pid
+            if e.get("ph") != "M":
+                e2["ts"] = round(e.get("ts", 0) + offset_us, 1)
+            ev.append(e2)
+    if extra:
+        ev.append({"name": "process_name", "ph": "M", "ts": 0,
+                   "pid": extra_pid, "tid": 0,
+                   "args": {"name": extra_label}})
+        ev.extend(extra)
+    merged = {"traceEvents": ev, "displayTimeUnit": "ms"}
+    if path:
+        with open(path, "w") as f:
+            json.dump(merged, f)
+    return merged
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,339 @@
+"""Multi-replica fleet serving: health, failover, hedging, drain.
+
+The fleet contract (docs/robustness.md): every submitted request
+reaches a terminal ``finish_reason`` even when replicas die mid-run;
+requests migrated off a dead replica resume by replay, so greedy output
+is token-identical to an undisturbed single-engine run; hedged requests
+deliver every token exactly once.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving import faults as faults_mod
+from repro.serving.engine import Engine
+from repro.serving.faults import Faults
+from repro.serving.fleet import (DEAD, DEGRADED, DRAINED, DRAINING,
+                                 FLEET_SITES, HEALTHY, Fleet)
+from repro.serving.request import Request
+from repro.serving.router import CircuitBreaker, Router
+from repro.serving.sampler import Sampler
+
+_CFG = get_arch("llama3.2-1b", variant="reduced")
+_MODEL = build(_CFG)
+_PARAMS = _MODEL.init(jax.random.PRNGKey(0))
+_RNG = np.random.default_rng(11)
+
+_EK = dict(max_batch=2, cache_len=64, sampler=Sampler(),
+           prefill_chunk=8, prefix_cache_tokens=256,
+           paged=True, page_size=8)
+
+
+def _fleet(replicas=2, **kw):
+    kw.setdefault("engine_kwargs", _EK)
+    return Fleet(_MODEL, _PARAMS, replicas=replicas, **kw)
+
+
+def _workload(n=4, max_new=12, uid0=0, shared_head=True):
+    rng = np.random.default_rng(23)
+    head = rng.integers(0, _CFG.vocab, 16)
+    reqs = []
+    for i in range(n):
+        body = rng.integers(0, _CFG.vocab, int(rng.integers(4, 12)))
+        prompt = (np.concatenate([head, body])
+                  if shared_head and i % 2 else body)
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def _expected(reqs):
+    eng = Engine(_MODEL, _PARAMS, **_EK)
+    for r in reqs:
+        eng.submit(Request(uid=r.uid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens,
+                           eos_id=r.eos_id))
+    return {u: list(r.tokens) for u, r in eng.run().items()}
+
+
+# ------------------------------------------------------------------ #
+# router / breaker units (no engine)
+# ------------------------------------------------------------------ #
+def test_circuit_breaker_state_machine():
+    b = CircuitBreaker(failure_threshold=2, cooldown_ticks=3)
+    assert b.allows and b.state == b.CLOSED
+    b.record_failure()
+    assert b.allows                      # below threshold
+    b.record_failure()
+    assert not b.allows and b.state == b.OPEN and b.opens == 1
+    for _ in range(3):
+        b.tick()
+    assert b.state == b.HALF_OPEN and b.allows
+    b.record_failure()                   # probe failed: reopen
+    assert b.state == b.OPEN and b.opens == 2
+    for _ in range(3):
+        b.tick()
+    b.record_success()                   # probe succeeded: close
+    assert b.state == b.CLOSED and b.allows
+
+
+def test_router_affinity_then_least_loaded():
+    r = Router(affinity_tokens=4)
+    prompt = np.asarray([1, 2, 3, 4, 9, 9])
+    cands = [(0, 0, 3), (1, 0, 1), (2, 1, 0)]
+    # no affinity yet: least-loaded healthy replica wins (rank first)
+    assert r.route(prompt, cands) == 1
+    r.note_dispatch(prompt, 0)
+    assert r.route(prompt, cands) == 0   # affinity overrides load
+    assert r.affinity_hits == 1
+    # same head, different tail: still the affinity replica
+    assert r.route(np.asarray([1, 2, 3, 4, 7]), cands) == 0
+    # excluded (already holds a copy): falls back to least-loaded
+    assert r.route(prompt, cands, exclude=[0]) == 1
+    r.forget_replica(0)
+    assert r.route(prompt, cands) == 1
+
+
+def test_router_sheds_when_breakers_open():
+    r = Router()
+    r.breaker(0).force_open()
+    r.breaker(1).force_open()
+    assert r.route(np.asarray([1]), [(0, 0, 0), (1, 0, 0)]) is None
+    assert r.sheds == 1
+    for _ in range(r.breaker(0).cooldown_ticks):
+        r.tick()
+    assert r.route(np.asarray([1]), [(0, 0, 0), (1, 0, 0)]) == 0
+
+
+def test_fleet_sites_registered_and_nearest_site_hint():
+    for s in FLEET_SITES:
+        assert s in faults_mod.SITES
+    Faults.parse("replica_crash@3/1,replica_hang@2,router_drop")
+    with pytest.raises(ValueError, match="did you mean 'nan_logits'"):
+        Faults.parse("nan_logit@3")
+    with pytest.raises(ValueError, match="did you mean 'replica_crash'"):
+        Faults(seed=0).on("replica_crush")
+
+
+def test_request_identity_equality_in_containers():
+    # eq=False: two distinct requests sharing a uid must not raise
+    # "ambiguous truth value" from array comparison in deque ops
+    from collections import deque
+    a = Request(uid=1, prompt=np.asarray([1, 2, 3]))
+    b = Request(uid=1, prompt=np.asarray([4, 5]))
+    q = deque([a])
+    assert b not in q and a in q
+    q.remove(a)
+    assert not q
+
+
+# ------------------------------------------------------------------ #
+# clean fleet serving
+# ------------------------------------------------------------------ #
+def test_fleet_matches_single_engine_greedy():
+    reqs = _workload(4)
+    want = _expected(reqs)
+    fl = _fleet(replicas=2)
+    for r in reqs:
+        fl.submit(r)
+    resp = fl.run()
+    assert all(r.ok for r in resp.values())
+    assert {u: list(r.tokens) for u, r in resp.items()} == want
+    st = fl.latency_stats()
+    assert st["dispatches"] == 4
+    assert st["replica_deaths"] == 0
+    # follow-ups with a shared head routed back to their prefix replica
+    assert fl.router.affinity_hits >= 1
+
+
+def test_fleet_submit_validation_and_cancel_edges():
+    fl = _fleet(replicas=1)
+    with pytest.raises(ValueError, match="non-empty 1-D"):
+        fl.submit(Request(uid=0, prompt=np.asarray([], np.int32)))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        fl.submit(Request(uid=0, prompt=np.asarray([1]),
+                          max_new_tokens=0))
+    fl.submit(Request(uid=0, prompt=np.asarray([1, 2]),
+                      max_new_tokens=2))
+    with pytest.raises(ValueError, match="already in flight"):
+        fl.submit(Request(uid=0, prompt=np.asarray([3])))
+    assert not fl.cancel(99)             # unknown uid
+    assert fl.cancel(0)                  # queued, never dispatched
+    assert not fl.cancel(0)              # idempotent second call
+    assert fl.responses[0].finish_reason == "cancelled"
+    resp = fl.run()
+    assert resp[0].finish_reason == "cancelled"
+
+
+# ------------------------------------------------------------------ #
+# failover / health
+# ------------------------------------------------------------------ #
+def test_crash_failover_no_loss_token_identical():
+    reqs = _workload(6, max_new=20)
+    want = _expected(reqs)
+    fl = _fleet(replicas=3, faults="replica_crash@2/0")
+    for r in reqs:
+        fl.submit(r)
+    resp = fl.run()
+    assert all(r.finished for r in resp.values())       # zero losses
+    assert all(r.ok for r in resp.values())
+    assert {u: list(r.tokens) for u, r in resp.items()} == want
+    st = fl.latency_stats()
+    assert st["replica_deaths"] == 1 and st["failovers"] == 1
+    assert st["requests_migrated"] >= 1
+    assert fl.replicas[0].state == DEAD
+    assert fl.replicas[0].death_reason == "crash"
+    assert st["gauge_replica_0_health"] == 2
+
+
+@pytest.mark.slow
+def test_replica_hang_watchdog_kills_and_migrates():
+    reqs = _workload(4, max_new=20)
+    want = _expected(reqs)
+    fl = _fleet(replicas=2, hang_ticks=3,
+                faults="replica_hang@2/0")
+    for r in reqs:
+        fl.submit(r)
+    resp = fl.run()
+    assert all(r.ok for r in resp.values())
+    assert {u: list(r.tokens) for u, r in resp.items()} == want
+    assert fl.replicas[0].state == DEAD
+    assert fl.replicas[0].death_reason == "hang"
+    assert fl.latency_stats()["requests_migrated"] >= 1
+
+
+def test_router_drop_is_detected_and_redispatched():
+    reqs = _workload(3, max_new=8)
+    want = _expected(reqs)
+    fl = _fleet(replicas=2, faults="router_drop@1")
+    for r in reqs:
+        fl.submit(r)
+    resp = fl.run()
+    assert all(r.ok for r in resp.values())
+    assert {u: list(r.tokens) for u, r in resp.items()} == want
+    st = fl.latency_stats()
+    assert st["router_drops"] == 1 and st["redispatches"] == 1
+
+
+def test_all_replicas_dead_fails_loudly_not_forever():
+    fl = _fleet(replicas=1, faults="replica_crash@1/0", hang_ticks=2)
+    for r in _workload(2, max_new=8):
+        fl.submit(r)
+    resp = fl.run(max_steps=500)
+    assert all(r.finished for r in resp.values())
+    assert all(r.finish_reason == "error" for r in resp.values())
+
+
+# ------------------------------------------------------------------ #
+# hedging
+# ------------------------------------------------------------------ #
+def test_hedge_wins_when_primary_hangs():
+    reqs = _workload(1, max_new=8)
+    want = _expected(reqs)
+    fl = _fleet(replicas=2, hedge=True, hedge_delay_s=0.0,
+                hang_ticks=4, faults="replica_hang@1/0")
+    for r in reqs:
+        fl.submit(r)
+    resp = fl.run()
+    assert resp[0].ok and list(resp[0].tokens) == want[0]
+    st = fl.latency_stats()
+    assert st["hedges_issued"] == 1
+    assert st["hedges_won"] == 1         # the hedge produced first
+
+
+@pytest.mark.slow
+def test_hedge_loser_cancelled_tokens_exactly_once():
+    reqs = _workload(2, max_new=10)
+    want = _expected(reqs)
+    fl = _fleet(replicas=2, hedge=True, hedge_delay_s=0.0)
+    for r in reqs:
+        fl.submit(r)
+    # single-step ticks keep first tokens several ticks away, so the
+    # zero-delay hedge window opens before anything binds
+    for _ in range(1000):
+        if not fl.has_work:
+            break
+        fl.tick(1)
+    resp = fl.responses
+    assert all(r.ok for r in resp.values())
+    # exactly-once delivery: token streams identical, no duplication
+    assert {u: list(r.tokens) for u, r in resp.items()} == want
+    st = fl.latency_stats()
+    assert st["hedges_issued"] >= 1
+    assert st["hedges_won"] + st["hedges_wasted"] == st["hedges_issued"]
+
+
+# ------------------------------------------------------------------ #
+# drain / rejoin
+# ------------------------------------------------------------------ #
+@pytest.mark.slow
+def test_drain_finishes_streams_then_rejoin_serves_again():
+    fl = _fleet(replicas=2)
+    for r in _workload(4, max_new=10):
+        fl.submit(r)
+    fl.tick()                            # streams live on both replicas
+    fl.drain(0)
+    assert fl.replicas[0].state == DRAINING
+    resp = fl.run()
+    assert all(r.ok for r in resp.values())     # drain is graceful
+    assert fl.replicas[0].state == DRAINED
+    st = fl.latency_stats()
+    assert st["drains"] == 1
+    # rejoin: fresh engine, healthy again, serves new work
+    fl.rejoin(0)
+    assert fl.replicas[0].state == HEALTHY
+    fl.submit(Request(uid=100, prompt=np.asarray([3, 1, 4, 1, 5]),
+                      max_new_tokens=4))
+    out = fl.run()
+    assert out[100].ok
+    assert fl.latency_stats()["rejoins"] == 1
+
+
+# ------------------------------------------------------------------ #
+# fleet-queue deadline (satellite: never admitted to any replica)
+# ------------------------------------------------------------------ #
+def test_deadline_expires_in_fleet_queue_never_admitted():
+    import time
+    fl = _fleet(replicas=1, max_outstanding=1)
+    long_req = _workload(1, max_new=24)[0]
+    fl.submit(long_req)
+    fl.tick()                            # replica is at capacity
+    fl.submit(Request(uid=50, prompt=np.asarray([1, 2, 3]),
+                      max_new_tokens=4, deadline_s=1e-6))
+    time.sleep(0.01)
+    resp = fl.run()
+    r = resp[50]
+    assert r.finished and r.finish_reason == "timeout"
+    assert r.n_generated == 0
+    # exactly one terminal response, and no replica ever saw the uid
+    assert fl.latency_stats()["fleet_timeouts"] == 1
+    for rep in fl.replicas:
+        assert 50 not in rep.engine.responses
+    assert resp[long_req.uid].ok         # the long stream was untouched
+
+
+# ------------------------------------------------------------------ #
+# fleet trace export
+# ------------------------------------------------------------------ #
+@pytest.mark.slow
+def test_fleet_trace_merges_per_replica_lanes(tmp_path):
+    from repro.serving.tracing import validate_chrome_trace
+    fl = _fleet(replicas=2, trace=True, faults="replica_crash@2/0")
+    for r in _workload(3, max_new=8):
+        fl.submit(r)
+    fl.run()
+    out = tmp_path / "fleet_trace.json"
+    trace = fl.export_trace(str(out))
+    assert out.exists()
+    assert validate_chrome_trace(trace) == []
+    names = {(e["pid"], e["args"]["name"])
+             for e in trace["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert (100, "replica 0") in names
+    assert (101, "replica 1") in names
+    assert (99, "fleet") in names
+    fleet_lane = [e["name"] for e in trace["traceEvents"]
+                  if e.get("pid") == 99 and e.get("ph") == "i"]
+    assert "replica_dead" in fleet_lane and "failover" in fleet_lane

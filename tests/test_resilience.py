@@ -209,6 +209,38 @@ def test_cancel_active_slot_frees_it_for_the_queue():
     assert resp[1].ok and resp[1].tokens == want[1]
 
 
+def test_cancel_races_chunked_admission_mid_preemption():
+    """A high-priority long prompt displaces a live stream and starts a
+    multi-chunk admission; cancelling the admitting request mid-chunk
+    must yield exactly one terminal "cancelled" response (idempotent on
+    repeat) while the preempted victim resumes token-identical."""
+    pa = _RNG.integers(0, _CFG.vocab, 8)
+    pb = _RNG.integers(0, _CFG.vocab, 30)       # several 8-token chunks
+
+    def alone(p, max_new):
+        eng = _engine("chunked", max_batch=1)
+        return _serve(eng, [Request(uid=0, prompt=p,
+                                    max_new_tokens=max_new)])[0].tokens
+
+    eng = _engine("chunked", max_batch=1)
+    eng.submit(Request(uid=0, prompt=pa, max_new_tokens=24, priority=0))
+    for _ in range(2):
+        eng.tick(2)                             # A live mid-stream
+    eng.submit(Request(uid=1, prompt=pb, max_new_tokens=4, priority=5))
+    eng.tick(1)                # B preempts A, B's admission in flight
+    assert eng._admit is not None and eng._admit.req.uid == 1
+    assert eng.requests[0].preemptions >= 1
+    assert eng.cancel(1)
+    assert not eng.cancel(1)                    # idempotent second call
+    resp = eng.run()
+    assert resp[1].finished and resp[1].finish_reason == "cancelled"
+    assert resp[1].n_generated == 0
+    # the displaced victim resumed and matches an undisturbed run
+    assert resp[0].ok and resp[0].tokens == alone(pa, 24)
+    assert eng.latency_stats()["cancellations"] == 1
+    assert not eng.cancel(0)                    # finished: False, no raise
+
+
 @pytest.mark.parametrize("mode", ["chunked", "paged"])
 def test_cancel_during_chunked_admission(mode):
     eng = _engine(mode, max_batch=1)
