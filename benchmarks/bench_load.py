@@ -9,8 +9,9 @@ chats plus a fraction of long documents, optionally sharing a system-
 prompt head) is driven through the engine with ``Engine.tick`` in three
 modes over the *same* arrival schedule:
 
-* ``stall``          — monolithic prefill (``prefill_chunk=0``): a long
-                       prompt monopolises the engine while every active
+* ``stall``          — whole-prompt admission (``prefill_chunk=0``: a
+                       single max-size chunk): a long prompt's chunk
+                       monopolises the fused step while every active
                        decode slot waits, so p99 inter-token latency
                        (ITL) spikes exactly when load arrives;
 * ``chunked``        — the fused mixed step (Sarathi-style chunked

@@ -4,8 +4,8 @@ the runtime behind the paper's 'predictable local service latency' claim.
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] \
       [--out BENCH_serving.json]
 
-Emits machine-readable JSON (decode p50/p99 ms, tokens/s, prefill
-jit-cache entries) in the unified artifact schema
+Emits machine-readable JSON (decode p50/p99 ms, tokens/s, fallback
+admission count) in the unified artifact schema
 (``benchmarks/schema.py``) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
@@ -26,9 +26,9 @@ from repro.serving.sampler import Sampler
 
 
 def warm_engine(eng: Engine, cfg) -> None:
-    """Compile the fused step and every prefill bucket the timed stream
-    hits, then reset stats (compile time used to land in the wall — and
-    in ttft_ms — making rows incomparable across machines and PRs).
+    """Compile the fused step/mixed programs the timed stream hits,
+    then reset stats (compile time used to land in the wall — and in
+    ttft_ms — making rows incomparable across machines and PRs).
     Shared with ``bench_load.steady_decode``, whose cross-artifact
     comparison depends on warming the exact same configuration."""
     rngw = np.random.default_rng(99)
@@ -74,7 +74,7 @@ def run(n_requests: int = 12, max_new: int = 16,
                      "ttft_ms_mean": g("ttft_ms_mean"),
                      "itl_ms_p50": g("itl_ms_p50"),
                      "itl_ms_p99": g("itl_ms_p99"),
-                     "prefill_jit_entries": st["prefill_jit_entries"],
+                     "fallback_admissions": st["fallback_admissions"],
                      "decode_steps": st["decode_steps"],
                      "wall_s": wall})
         # final registry snapshot (last engine measured) rides along in
@@ -105,11 +105,11 @@ def main(argv=None):
 
     print("serving engine v2: continuous batching throughput")
     print(f"{'batch':>5s} {'tok/s':>10s} {'p50 ms':>8s} {'p99 ms':>8s} "
-          f"{'ttft ms':>8s} {'jits':>5s}")
+          f"{'ttft ms':>8s} {'fallb':>5s}")
     for r in rows:
         print(f"{r['max_batch']:5d} {r['tok_per_s']:10.1f} "
               f"{r['decode_ms_p50']:8.2f} {r['decode_ms_p99']:8.2f} "
-              f"{r['ttft_ms_mean']:8.1f} {r['prefill_jit_entries']:5d}")
+              f"{r['ttft_ms_mean']:8.1f} {r['fallback_admissions']:5d}")
 
     if args.out:
         best = max(rows, key=lambda r: r["tok_per_s"])

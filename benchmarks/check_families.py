@@ -1,0 +1,74 @@
+"""CI family-coverage gate over the ``bench_families`` artifact.
+
+  PYTHONPATH=src python -m benchmarks.check_families \
+      [--bench BENCH_families.json]
+
+Gate conditions (exit 1 on any violation, printed to stderr):
+
+* the artifact matches the unified schema envelope;
+* every zoo family (SSM, hybrid, MoE, encoder-decoder, VLM) has a row
+  with the n-gram drafter off AND on — no family silently dropped;
+* ``fallback_admissions == 0`` on every row: no admission left the one
+  fused chunked path (there is no monolithic path to fall back to, so
+  a nonzero count means a request was rejected at admission);
+* ``chunked_admissions > 0`` on every row — the path actually ran;
+* ``greedy_match`` on every row: chunked output is token-identical to
+  whole-prompt admission, and n-gram speculation is token-identical to
+  the non-speculative engine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from benchmarks.bench_families import FAMILIES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_families.json",
+                    help="bench_families artifact to gate on")
+    args = ap.parse_args(argv)
+
+    errs: List[str] = []
+    from benchmarks import schema
+    problems = schema.validate_payload(args.bench)
+    errs.extend(f"{args.bench}: {p}" for p in problems)
+    if not problems:
+        with open(args.bench) as f:
+            pl = json.load(f)
+        rows = {(r["family"], r["ngram_spec"]): r
+                for r in pl["data"]["rows"]}
+        for arch, kind in FAMILIES:
+            for spec in ("off", "on"):
+                r = rows.get((arch, spec))
+                if r is None:
+                    errs.append(f"{arch} ({kind}): no ngram_spec={spec} "
+                                "row — family dropped from the bench")
+                    continue
+                tag = f"{arch} spec={spec}"
+                if r.get("fallback_admissions", 1) != 0:
+                    errs.append(
+                        f"{tag}: {r.get('fallback_admissions')} "
+                        "admission(s) fell out of the fused chunked "
+                        "path")
+                if r.get("chunked_admissions", 0) <= 0:
+                    errs.append(f"{tag}: chunked admission never ran")
+                if not r.get("greedy_match", False):
+                    errs.append(f"{tag}: greedy output diverged from "
+                                "the baseline engine")
+
+    if errs:
+        for e in errs:
+            print(f"check_families: {e}", file=sys.stderr)
+        return 1
+    print(f"check_families: {len(FAMILIES)} families x ngram on/off "
+          "all served through the fused chunked path — 0 fallback "
+          "admissions, greedy token-identity holds everywhere")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

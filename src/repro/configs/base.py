@@ -107,8 +107,10 @@ class ModelConfig:
                                     # this many prompt tokens of one
                                     # admitting request into every decode
                                     # step (Sarathi-style chunked prefill;
-                                    # 0 = monolithic prefill that stalls
-                                    # decode). Engine knob mirror:
+                                    # 0 = a single max-size chunk — the
+                                    # whole prompt in one fused extend,
+                                    # which stalls decode for its
+                                    # duration). Engine knob mirror:
                                     # Engine(prefill_chunk=...)
     prefix_cache_tokens: int = 0    # shared-prefix KV reuse budget in
                                     # tokens (LRU trie of chunk-aligned

@@ -73,6 +73,86 @@ def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref,
         state_ref[0, 0] = s_scr[...]
 
 
+def _ssd_extend_kernel(s0_ref, x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref,
+                       y_ref, state_ref, s_scr):
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (1, p)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # scalar
+    A = A_ref[0].astype(jnp.float32)
+    Bv = B_ref[0, 0].astype(jnp.float32)         # (1, n)
+    Cv = C_ref[0, 0].astype(jnp.float32)         # (1, n)
+    D = D_ref[0].astype(jnp.float32)
+
+    # one ssd_decode_step, bitwise: s' = exp(dt·A)·s + (dt·x) B^T,
+    # y = C s'^T (+ D·x)
+    dA = jnp.exp(dt * A)
+    xdt = x * dt                                 # (1, p)
+    upd = jax.lax.dot_general(xdt, Bv, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    s = s_scr[...] * dA + upd                    # (p, n)
+    y = jax.lax.dot_general(Cv, s, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y + x * D).astype(y_ref.dtype)
+    s_scr[...] = s
+
+    @pl.when(t == nt - 1)
+    def _emit_state():
+        state_ref[0, 0] = s_scr[...]
+
+
+def ssd_extend_pallas(state, x, dt, A, B, C, D=None, *, interpret=False):
+    """Same contract as ``ref.ssd_extend_reference``: multi-token
+    sequential recurrence from an explicit initial state. The token axis
+    is the sequential grid dimension; the (p, n) state lives in VMEM
+    scratch across grid steps, seeded from ``state`` at t == 0."""
+    b, T, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    if D is None:
+        D = jnp.zeros((h,), jnp.float32)
+
+    xk = x.transpose(0, 2, 1, 3)                 # (b, h, T, p)
+    dtk = dt.transpose(0, 2, 1)                  # (b, h, T)
+    Bk = B.transpose(0, 2, 1, 3)                 # (b, g, T, n)
+    Ck = C.transpose(0, 2, 1, 3)
+
+    grid = (b, h, T)
+    y, final = pl.pallas_call(
+        _ssd_extend_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ti: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1, p), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, ti: (bi, hi, ti)),
+            pl.BlockSpec((1,), lambda bi, hi, ti: (hi,)),
+            pl.BlockSpec((1, 1, 1, n),
+                         lambda bi, hi, ti, rep=rep: (bi, hi // rep, ti, 0)),
+            pl.BlockSpec((1, 1, 1, n),
+                         lambda bi, hi, ti, rep=rep: (bi, hi // rep, ti, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ti: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, p), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, T, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(state.astype(jnp.float32), xk, dtk, jnp.asarray(A, jnp.float32),
+      Bk, Ck, jnp.asarray(D, jnp.float32))
+
+    return y.transpose(0, 2, 1, 3), final
+
+
 def ssd_pallas(x, dt, A, B, C, D=None, *, chunk=64, initial_state=None,
                interpret=False):
     """Same contract as ``ref.ssd_reference``; initial_state must be None

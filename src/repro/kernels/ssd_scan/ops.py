@@ -1,41 +1,53 @@
 """Public entry points for the SSD scan.
 
-``ssd``/``ssd_step`` dispatch to the Pallas TPU kernel or to the
-pure-jnp oracle via ``kernels.dispatch`` (backend default +
+``ssd``/``ssd_extend``/``ssd_step`` dispatch to the Pallas TPU kernel or
+to the pure-jnp oracle via ``kernels.dispatch`` (backend default +
 ``REPRO_FORCE_REF``/``REPRO_FORCE_PALLAS`` env overrides); the oracle is
 also what multi-pod dry-runs lower, since Pallas CPU lowering is not
 representative of TPU codegen.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 from repro.kernels import dispatch
 from repro.kernels.ssd_scan import ref as _ref
 
-_SSD_OVERRIDE = None   # module-scoped legacy toggle; None = defer to dispatch
-
 
 def set_use_pallas(flag: bool) -> None:
-    """Legacy ssd-only toggle: pins this module's implementation choice
-    without touching the process-wide dispatch (REPRO_FORCE_REF still
-    wins — it exists to bisect kernel bugs)."""
-    global _SSD_OVERRIDE
-    _SSD_OVERRIDE = bool(flag)
+    """Deprecated no-op shim. The module-scoped ssd-only override is
+    retired: implementation choice goes through ``kernels.dispatch``
+    like every other op — pass ``use_pallas=`` per call, or set
+    ``REPRO_FORCE_REF``/``REPRO_FORCE_PALLAS`` process-wide."""
+    warnings.warn(
+        "ssd_scan.ops.set_use_pallas is deprecated and has no effect; "
+        "pass use_pallas= per call or use the REPRO_FORCE_* env vars "
+        "(kernels.dispatch).", DeprecationWarning, stacklevel=2)
 
 
 def ssd(x, dt, A, B, C, D=None, *, chunk=64, initial_state=None,
         use_pallas=None):
-    if use_pallas is None:
-        use_pallas = _SSD_OVERRIDE
+    use, interpret = dispatch.resolve(use_pallas)
+    if use and initial_state is None:
+        from repro.kernels.ssd_scan import kernel as _k
+        return _k.ssd_pallas(x, dt, A, B, C, D, chunk=chunk,
+                             initial_state=None, interpret=interpret)
+    return _ref.ssd_reference(x, dt, A, B, C, D, chunk=chunk,
+                              initial_state=initial_state)
+
+
+def ssd_extend(state, x, dt, A, B, C, D=None, *, use_pallas=None):
+    """Multi-token sequential recurrence from an explicit state — the
+    serving engine's chunked-admission / speculative-verify form.
+    Bitwise equal to T applications of ``ssd_step`` on both paths."""
     use, interpret = dispatch.resolve(use_pallas)
     if use:
         from repro.kernels.ssd_scan import kernel as _k
-        return _k.ssd_pallas(x, dt, A, B, C, D, chunk=chunk,
-                             initial_state=initial_state,
-                             interpret=interpret)
-    return _ref.ssd_reference(x, dt, A, B, C, D, chunk=chunk,
-                              initial_state=initial_state)
+        return _k.ssd_extend_pallas(state, x, dt, A, B, C, D,
+                                    interpret=interpret)
+    return _ref.ssd_extend_reference(state, x, dt, A, B, C, D)
 
 
 def ssd_step(state, x, dt, A, B, C, D=None):

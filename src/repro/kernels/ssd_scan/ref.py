@@ -81,6 +81,32 @@ def ssd_reference(x, dt, A, B, C, D=None, *, chunk=64, initial_state=None):
     return y, final
 
 
+def ssd_extend_reference(state, x, dt, A, B, C, D=None):
+    """Multi-token sequential recurrence from an explicit initial state.
+
+    state: (b, h, p, n); x: (b, T, h, p); dt: (b, T, h); B, C: (b, T, g, n).
+    Returns (y: (b, T, h, p), final_state: (b, h, p, n)).
+
+    Exactly T applications of ``ssd_decode_step`` — bitwise, not just
+    numerically: extending by [t1, t2] chunks equals extending by
+    [t1 + t2] equals t1+t2 single decode steps. This per-token
+    compositionality is the invariant the serving engine's chunked
+    admission relies on for SSM stacks (the chunked dual form in
+    ``ssd_reference``/``ssd_pallas`` is faster for long prefills but its
+    float reduction order changes with the chunking).
+    """
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+
+    def step(s, inp):
+        xi, dti, Bi, Ci = inp
+        y, s = ssd_decode_step(s, xi, dti, A, Bi, Ci, D)
+        return s, y
+
+    final, ys = lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
 def ssd_decode_step(state, x, dt, A, B, C, D=None):
     """Single-token recurrence.
     state: (b, h, p, n); x: (b, h, p); dt: (b, h); B, C: (b, g, n)."""

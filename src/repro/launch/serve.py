@@ -189,7 +189,9 @@ def main(argv=None):
                     help="speculative-decoding draft spec "
                          "'<prec>[@<blocks>]' (fp|int8|int4, e.g. "
                          "'int8@1' = first block, int8-quantized "
-                         "self-draft); 'none' disables a config-set "
+                         "self-draft) or 'ngram' (draft-free "
+                         "prompt-lookup — works on every family, incl. "
+                         "SSM/encdec); 'none' disables a config-set "
                          "draft (e.g. the spec variant); '' keeps the "
                          "config's cfg.draft")
     ap.add_argument("--spec-gamma", type=int, default=0,
@@ -199,13 +201,14 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=-1,
                     help="continuous batching: fuse at most this many "
                          "prompt tokens of one admitting request into "
-                         "every decode step (0 = monolithic prefill "
-                         "that stalls decode, -1 keeps cfg.prefill_chunk"
-                         "; see the 'continuous' variant)")
+                         "every decode step (0 = a single max-size "
+                         "chunk per admission — the whole prompt in one "
+                         "fused extend; -1 keeps cfg.prefill_chunk; see "
+                         "the 'continuous' variant)")
     ap.add_argument("--prefix-cache-tokens", type=int, default=-1,
                     help="shared-prefix KV reuse budget in tokens (LRU; "
                          "0 = off, -1 keeps cfg.prefix_cache_tokens; "
-                         "needs --prefill-chunk > 0, non-speculative)")
+                         "non-speculative, attention-only stacks)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache: fixed page pool + per-slot "
                          "block tables with copy-on-write prefix "
@@ -379,14 +382,13 @@ def main(argv=None):
               f"errors={stats.get('slot_errors', 0)} "
               f"preemptions={stats.get('preemptions', 0)} "
               f"faults_injected={stats.get('faults_injected', 0)}")
-    print(f"prefill jit entries={stats['prefill_jit_entries']}")
-    if engine.prefill_chunk:
-        line = (f"continuous batching: chunk={stats['prefill_chunk']} "
-                f"chunked admissions={stats['chunked_admissions']}")
-        if "prefix_hits" in stats:
-            line += (f" prefix hits={stats['prefix_hits']} "
-                     f"reused tokens={stats['prefix_hit_tokens']}")
-        print(line)
+    line = (f"continuous batching: chunk={stats['prefill_chunk']} "
+            f"chunked admissions={stats['chunked_admissions']} "
+            f"fallback admissions={stats['fallback_admissions']}")
+    if "prefix_hits" in stats:
+        line += (f" prefix hits={stats['prefix_hits']} "
+                 f"reused tokens={stats['prefix_hit_tokens']}")
+    print(line)
     if engine.spec_gamma:
         print(f"speculative: gamma={stats['spec_gamma']} "
               f"accept={stats['spec_acceptance_rate']:.2f} "

@@ -119,6 +119,14 @@ def _dec_block(lp, x, cfg: ModelConfig, *, mode, cache=None, memory=None,
         y, nc = L.prefill_into_cache(lp["self_attn"], h, cfg, cache["self"],
                                      length=length)
         new_cache["self"] = nc
+    elif mode == "extend":
+        # per-row-length masked extend of the decoder ring — the same
+        # path every other family uses for chunked admission and
+        # speculative verify; the cross-attention memory (xk/xv) was
+        # frozen at admission and passes through untouched
+        y, nc = L.extend_into_cache(lp["self_attn"], h, cfg, cache["self"],
+                                    lengths=length)
+        new_cache["self"] = nc
     else:
         y, nc = L.attention_block(lp["self_attn"], h, cfg,
                                   cache=cache["self"])
@@ -126,7 +134,7 @@ def _dec_block(lp, x, cfg: ModelConfig, *, mode, cache=None, memory=None,
     x = x + y
 
     h = L.rms_norm(lp["ln_x"], x, cfg.norm_eps)
-    if mode == "decode":
+    if mode in ("decode", "extend"):
         xk, xv = cache["xk"], cache["xv"]
         new_cache["xk"], new_cache["xv"] = xk, xv
     else:
@@ -223,3 +231,32 @@ def decode_step(params, cfg: ModelConfig, token, cache):
     x = L.embed(params["embed"], token).astype(cfg.act_dtype)
     x, new_cache = _scan_dec(params, x, cfg, mode="decode", cache=cache)
     return _logits(params, cfg, x), new_cache
+
+
+def extend_step(params, cfg: ModelConfig, tokens, cache, lengths=None,
+                last_only=False):
+    """Masked multi-token cached decoder forward at per-row offsets —
+    the decoder-side twin of ``transformer.extend_step``. The cache must
+    already hold the cross-attention memory (``cross_kv_all`` written at
+    admission); only the self-attention ring advances."""
+    from repro.models.transformer import last_valid
+    x = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
+    x = shard_activation(x, "act_btd")
+    x, new_cache = _scan_dec(params, x, cfg, mode="extend", cache=cache,
+                             length=lengths)
+    if last_only:
+        x = last_valid(x, lengths)
+    return _logits(params, cfg, x), new_cache
+
+
+def cross_kv_all(params, cfg: ModelConfig, memory):
+    """Per-layer cross-attention keys/values over an encoded memory.
+    memory: (B, S, d) -> (xk, xv) each (n_layers, B, S, n_kv_heads, hd)
+    — exactly the ``xk``/``xv`` leaves of ``make_encdec_cache``, so the
+    serving engine can encode once at admission and write the rows
+    straight into a batch slot."""
+    def body(carry, lp):
+        k, v = _cross_kv(lp, memory, cfg)
+        return carry, (k, v)
+    _, (ks, vs) = lax.scan(body, None, params["dec_layers"])
+    return ks, vs

@@ -39,18 +39,27 @@ class Model:
     * ``decode_step(params, token, cache)`` advances every row by one token
       at that row's own offset.
     * ``extend_into_cache(params, tokens, cache, lengths, last_only)``
-      (attention-backed stacks only; None otherwise) is the unified
-      masked multi-token cached forward at per-row offsets: row b
-      consumes ``tokens[b, :lengths[b]]`` and advances its cache step by
+      is the unified masked multi-token cached forward at per-row
+      offsets, supported by EVERY family: row b consumes
+      ``tokens[b, :lengths[b]]`` and advances its cache step by
       ``lengths[b]`` (0 = untouched; lengths=None = all rows advance by
       T). Speculative verify, chunked prefill and the serving engine's
       fused mixed (decode + prefill-chunk) step all share this one code
-      path.
+      path. Attention rings use the masked scatter, SSM mixers the
+      sequential ``ssd_extend`` recurrence, encdec the decoder ring with
+      prefill-frozen cross-attention memory.
     * ``verify_step(params, tokens, cache)`` is extend with the full
       window (every row advances by T) — the speculative-decoding verify
-      pass — and ``rollback(cache, steps)`` rewinds every per-row
-      ``step`` to the accepted depth without touching stored keys (causal
-      masking hides the speculated tail until its slots are rewritten).
+      pass — and ``rollback(cache, steps)`` moves every sub-cache back
+      to the accepted depth. Attention caches rewind by rewriting
+      ``step`` (causal masking hides the speculated tail until its slots
+      are rewritten); SSM sub-caches restore the checkpoint taken before
+      the most recent advance, so when ``rollback_needs_replay`` is set
+      the caller must roll back to the *pre-verify* depth and re-extend
+      the accepted tokens (the engine's replay flow).
+    * ``encode_memory(params, frames)`` (encdec only) encodes frontend
+      frames once and returns the per-layer cross-attention KV rows the
+      engine writes into a batch slot at admission.
     """
 
     cfg: ModelConfig
@@ -66,11 +75,17 @@ class Model:
     # (params, tokens (B,T), cache, lengths (B,), last_only) -> (logits, cache)
     make_paged_cache: Optional[Callable[..., Any]] = None
     # (batch, cache_len, *, page_size, num_pages) -> paged cache pytree
+    encode_memory: Optional[Callable[..., Any]] = None
+    # (params, frames (B, T_src, d_embed)) -> (xk, xv) per-layer cross KV
+    rollback_needs_replay: bool = False
+    # True for stacks with recurrent (SSM) state: rollback restores the
+    # pre-advance checkpoint, so speculative accept must re-extend the
+    # accepted tokens instead of just rewinding ``step``
 
     @property
     def supports_paged(self) -> bool:
-        """Paged KV requires the extend path (chunked admission) and
-        attention-only stacks — same gate as ``supports_extend``."""
+        """Paged KV pools are attention-only — SSM recurrent state has
+        no per-position storage to page."""
         return self.make_paged_cache is not None
 
     @property
@@ -80,8 +95,8 @@ class Model:
     @property
     def supports_extend(self) -> bool:
         """Whether the stack supports the per-row-length multi-token
-        cached forward (chunked prefill / fused mixed step). Attention-
-        backed decoder stacks only — SSM recurrent state is positionless."""
+        cached forward (chunked prefill / fused mixed step). True for
+        every family — this is the one admission path the engine has."""
         return self.extend_into_cache is not None
 
     def cache_len(self, shape: ShapeConfig) -> int:
@@ -158,30 +173,35 @@ def _build_decoder(cfg: ModelConfig) -> Model:
     def make_cache(batch, cache_len, dtype=None):
         return T.make_cache(cfg, batch, cache_len, dtype)
 
-    # speculative verify needs per-position rollback, which only
-    # attention caches support (SSM recurrent state is positionless)
-    spec_ok = all(m == "attn" for m, _ in T.block_spec(cfg))
-
     def verify_fn(params, tokens, cache):
         return T.verify_step(params, cfg, tokens, cache)
 
-    def extend_fn(params, tokens, cache, lengths=None, last_only=False):
+    def extend_fn(params, tokens, cache, lengths=None, last_only=False,
+                  embeddings=None):
         return T.extend_step(params, cfg, tokens, cache, lengths=lengths,
-                             last_only=last_only)
+                             last_only=last_only, embeddings=embeddings)
 
     def make_paged(batch, cache_len, *, page_size, num_pages, dtype=None):
         return T.make_paged_cache(cfg, batch, cache_len,
                                   page_size=page_size, num_pages=num_pages,
                                   dtype=dtype)
 
+    # extend/verify/rollback are universal; paged pools stay attention-
+    # only (SSM recurrent state has no per-position storage to page).
+    # Recurrent mixers roll back by checkpoint restore, which commits
+    # speculation through the engine's replay flow.
+    attn_only = all(m == "attn" for m, _ in T.block_spec(cfg))
+    has_ssm = any(m == "ssm" for m, _ in T.block_spec(cfg))
+
     return Model(cfg=cfg, init=lambda k: T.init_transformer(k, cfg),
                  train_loss=train_loss, prefill=prefill_fn,
                  decode_step=decode_fn, make_cache=make_cache,
                  cache_steps=T.cache_steps,
-                 verify_step=verify_fn if spec_ok else None,
-                 rollback=T.set_cache_steps if spec_ok else None,
-                 extend_into_cache=extend_fn if spec_ok else None,
-                 make_paged_cache=make_paged if spec_ok else None)
+                 verify_step=verify_fn,
+                 rollback=T.set_cache_steps,
+                 extend_into_cache=extend_fn,
+                 make_paged_cache=make_paged if attn_only else None,
+                 rollback_needs_replay=has_ssm)
 
 
 def _build_encdec(cfg: ModelConfig) -> Model:
@@ -207,7 +227,22 @@ def _build_encdec(cfg: ModelConfig) -> Model:
     def cache_steps(cache):
         return cache["self"]["step"][0]
 
+    def extend_fn(params, tokens, cache, lengths=None, last_only=False):
+        return ED.extend_step(params, cfg, tokens, cache, lengths=lengths,
+                              last_only=last_only)
+
+    def verify_fn(params, tokens, cache):
+        return ED.extend_step(params, cfg, tokens, cache)
+
+    def encode_memory(params, frames):
+        memory = ED.encode(params, cfg, frames)
+        return ED.cross_kv_all(params, cfg, memory)
+
     return Model(cfg=cfg, init=lambda k: ED.init_encdec(k, cfg),
                  train_loss=train_loss, prefill=prefill_fn,
                  decode_step=decode_fn, make_cache=make_cache,
-                 cache_steps=cache_steps)
+                 cache_steps=cache_steps,
+                 verify_step=verify_fn,
+                 rollback=T.set_cache_steps,
+                 extend_into_cache=extend_fn,
+                 encode_memory=encode_memory)

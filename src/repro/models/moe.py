@@ -46,7 +46,7 @@ def _capacity(n_tokens: int, m: MoEConfig) -> int:
     return max(8, ((cap + 7) // 8) * 8)  # pad to VPU sublane multiple
 
 
-def moe_block(p, x, cfg: ModelConfig):
+def moe_block(p, x, cfg: ModelConfig, *, dense=False):
     """x: (B, L, d) -> (y, aux_loss).
 
     Baseline: sort-based top-k dispatch over the GLOBAL token stream
@@ -56,10 +56,23 @@ def moe_block(p, x, cfg: ModelConfig):
     ``moe.group_routing=True``: route within each batch row instead —
     the sort, gather, and scatter all stay data-local, so the only
     cross-device traffic is the expert einsum itself (§Perf iteration).
+
+    ``dense=True`` (the serving decode/extend modes): capacity-free
+    per-token routing via ``_route_dense`` — every token's output
+    depends only on that token, never on what else shares the batch or
+    how much right-padding a chunk carries. This is what makes chunked
+    admission, per-row-length masked extends, and continuous batch
+    composition *deterministic* for MoE stacks: no expert-capacity
+    budget shared across rows means no routing distortion from padding
+    or co-scheduled requests. Costs compute on all experts, which at
+    serving token counts (B·T small) is matmul-bound anyway.
     """
     m = cfg.moe
     B, L, d = x.shape
-    if m.group_routing and L > 1:
+    if dense:
+        y, aux = _route_dense(p, x.reshape(B * L, d), cfg)
+        y = y.reshape(B, L, d)
+    elif m.group_routing and L > 1:
         y, aux = _route_grouped(p, x, cfg)      # (B, L, d)
         y = shard_activation(y, "act_btd")
     else:
@@ -68,6 +81,33 @@ def moe_block(p, x, cfg: ModelConfig):
     if m.n_shared:
         y = y + mlp(p["shared"], x).astype(x.dtype)
     return y, aux
+
+
+def _route_dense(p, xf, cfg: ModelConfig):
+    """Capacity-free top-k routing: run every expert on every token and
+    combine with a gate-masked sum. xf: (T, d) -> (T, d).
+
+    Per-token deterministic and batch-independent by construction — the
+    property the serving engine's chunked/masked extend paths need (a
+    padded or inactive row contributes garbage only to its *own* output,
+    which callers discard). No aux loss: serving never trains."""
+    m = cfg.moe
+    T, d = xf.shape
+    E, k = m.n_experts, m.top_k
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, gate_idx = lax.top_k(probs, k)                  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    gates = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], gate_idx].set(gate_vals)       # (T, E)
+
+    xe = xf.astype(cfg.act_dtype)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xe, p["wg"])) \
+        * jnp.einsum("td,edf->tef", xe, p["wi"])
+    ye = jnp.einsum("tef,efd->ted", h, p["wo"])                # (T, E, d)
+    y = jnp.einsum("ted,te->td", ye.astype(jnp.float32), gates)
+    return y.astype(xf.dtype), jnp.zeros((), jnp.float32)
 
 
 def _route_grouped(p, x, cfg: ModelConfig):

@@ -36,11 +36,17 @@ def init_ssm(key, cfg: ModelConfig):
 
 
 def make_ssm_cache(batch, cfg: ModelConfig, dtype):
+    """Decode/extend cache for one mixer. ``step`` is the per-row depth
+    (tokens absorbed into the state); the ``*_ckpt`` leaves hold the
+    state as it was *before* the most recent advance — the restore point
+    ``rollback`` returns to when speculation rejects drafts (recurrent
+    state cannot be rewound by causal masking the way a KV ring can)."""
     s, d_in, nh, conv_dim = _dims(cfg)
-    return {
-        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
-        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
-    }
+    conv = jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype)
+    ssm = jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32)
+    step = jnp.zeros((batch,), jnp.int32)
+    return {"conv": conv, "ssm": ssm, "step": step,
+            "conv_ckpt": conv, "ssm_ckpt": ssm, "step_ckpt": step}
 
 
 def _causal_conv(x, w, b):
@@ -70,10 +76,18 @@ def _split_xbc(xBC, cfg: ModelConfig):
 
 
 def ssm_block(p, u, cfg: ModelConfig, *, cache=None, return_cache=False,
-              length=None):
+              length=None, mode=None):
     """u: (B, L, d). cache=None -> full sequence (chunked SSD); pass
     ``return_cache=True`` during prefill to also get the decode cache.
-    cache given and L==1 -> recurrent decode step. Returns (y, new_cache).
+    cache given and L==1 -> recurrent decode step. cache given and
+    ``mode="extend"`` -> multi-token cached recurrence at per-row
+    offsets (the serving engine's chunked admission / speculative
+    verify): every row advances by ``length[b] <= L`` tokens through
+    the sequential ``ssd_extend`` form, masked positions are exact
+    identity steps (dt = 0 -> decay 1, zero input) and the conv tail is
+    gathered from the last valid inputs, so a length-0 row's cache is
+    bit-untouched and chunked extends compose bitwise with a single
+    whole-prompt extend. Returns (y, new_cache).
 
     ``length``: optional (B,) int32 valid-token count when ``u`` is
     right-padded (bucketed prefill). Padded positions get ``dt = 0`` —
@@ -124,9 +138,48 @@ def ssm_block(p, u, cfg: ModelConfig, *, cache=None, return_cache=False,
                 if tail.shape[1] < K - 1:
                     tail = jnp.pad(
                         tail, ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
-            new_cache = {"conv": tail.astype(u.dtype), "ssm": final_state}
+            lens = (length if length is not None
+                    else jnp.full((Bsz,), L, jnp.int32))
+            tail = tail.astype(u.dtype)
+            # fresh stream: the checkpoint is the state itself (there is
+            # nothing earlier to restore to)
+            new_cache = {"conv": tail, "ssm": final_state,
+                         "step": lens.astype(jnp.int32),
+                         "conv_ckpt": tail, "ssm_ckpt": final_state,
+                         "step_ckpt": lens.astype(jnp.int32)}
         else:
             new_cache = None
+    elif mode == "extend":
+        # multi-token cached recurrence at per-row offsets. The conv
+        # stream is [cached tail | raw new inputs]; token t's depthwise
+        # window is conv_in[t : t+K], so positions < length[b] only ever
+        # see valid inputs, and the new tail (last K-1 valid inputs)
+        # is conv_in[length[b] : length[b]+K-1] — for length 0 that is
+        # the old tail, bit-for-bit.
+        K = s.d_conv
+        step = cache["step"]
+        conv_in = jnp.concatenate([cache["conv"], xBC], axis=1)
+        widx = jnp.arange(L)[:, None] + jnp.arange(K)[None, :]   # (L, K)
+        win = conv_in[:, widx]                                   # (B,L,K,Cc)
+        conv_out = jnp.einsum("blkc,ck->blc", win.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        xc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+        x, Bc, Cc = _split_xbc(xc, cfg)
+        xh = x.reshape(Bsz, L, nh, s.head_dim)
+        Bg = Bc.reshape(Bsz, L, s.n_groups, s.d_state)
+        Cg = Cc.reshape(Bsz, L, s.n_groups, s.d_state)
+        y, new_state = ssd_ops.ssd_extend(cache["ssm"], xh, dt, A,
+                                          Bg, Cg, p["D"])
+        y = y.reshape(Bsz, L, d_in).astype(u.dtype)
+        lens = (length if length is not None
+                else jnp.full((Bsz,), L, jnp.int32))
+        tidx = lens[:, None] + jnp.arange(K - 1)[None, :]        # (B, K-1)
+        tail = jnp.take_along_axis(conv_in, tidx[..., None], axis=1)
+        new_cache = {"conv": tail.astype(cache["conv"].dtype),
+                     "ssm": new_state,
+                     "step": step + lens.astype(step.dtype),
+                     "conv_ckpt": cache["conv"], "ssm_ckpt": cache["ssm"],
+                     "step_ckpt": step}
     else:
         # single-token recurrence (L == 1)
         xBC1 = xBC[:, 0]                                  # (B, Cc)
@@ -144,7 +197,10 @@ def ssm_block(p, u, cfg: ModelConfig, *, cache=None, return_cache=False,
                                          Bg, Cg, p["D"])
         y = y1.reshape(Bsz, 1, d_in).astype(u.dtype)
         new_cache = {"conv": conv_full[:, 1:].astype(cache["conv"].dtype),
-                     "ssm": new_state}
+                     "ssm": new_state,
+                     "step": cache["step"] + 1,
+                     "conv_ckpt": cache["conv"], "ssm_ckpt": cache["ssm"],
+                     "step_ckpt": cache["step"]}
 
     # gated RMSNorm (Mamba-2): norm(y * silu(z))
     y = rms_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),

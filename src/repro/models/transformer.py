@@ -157,8 +157,9 @@ def make_paged_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
 
 
 def cache_steps(cache):
-    """Per-slot sequence depth (B,) from the first attention sub-cache, or
-    None for attention-free (pure SSM) stacks whose state is positionless."""
+    """Per-slot sequence depth (B,) from the first sub-cache that tracks
+    one (every mixer does: attention rings and SSM recurrent state both
+    carry a per-row ``step``)."""
     for sub in cache.values():
         if isinstance(sub, dict) and "step" in sub:
             return sub["step"][0]
@@ -176,8 +177,12 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
     prefill); for 'extend' the per-row advance (rows move by length[b]
     <= T tokens, None = all rows advance by T). 'extend' is the masked
     multi-token cached decode shared by speculative verify, chunked
-    prefill and the engine's fused mixed step — attention-only (SSM
-    recurrent state has no positional rollback)."""
+    prefill and the engine's fused mixed step; every mixer supports it
+    (attention via the masked ring scatter, SSM via the sequential
+    ``ssd_extend`` recurrence with identity steps past each row's
+    length). MoE FFNs route *densely* (per-token, capacity-free) in the
+    cached serving modes so chunk padding and batch composition cannot
+    distort expert assignment — see ``moe.moe_block``."""
     spec = block_spec(cfg)
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
@@ -199,17 +204,15 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
                 y, nc = L.attention_block(sp["attn"], h, cfg,
                                           cache=cache[f"sub{i}"])
         else:
-            if mode == "extend":
-                raise NotImplementedError(
-                    "multi-token cached extend (speculative verify / "
-                    "chunked prefill) requires attention-backed caches; "
-                    f"family {cfg.family!r} has SSM mixers whose recurrent "
-                    "state cannot be rolled back per position")
             if mode == "train":
                 y, nc = S.ssm_block(sp["ssm"], h, cfg)
             elif mode == "prefill":
                 y, nc = S.ssm_block(sp["ssm"], h, cfg, return_cache=True,
                                     length=length)
+            elif mode == "extend":
+                y, nc = S.ssm_block(sp["ssm"], h, cfg,
+                                    cache=cache[f"sub{i}"],
+                                    length=length, mode="extend")
             else:
                 y, nc = S.ssm_block(sp["ssm"], h, cfg,
                                     cache=cache[f"sub{i}"])
@@ -222,7 +225,8 @@ def apply_block(bp, x, cfg: ModelConfig, *, mode: str, cache=None,
             if ffn == "mlp":
                 y = L.mlp(sp["mlp"], h)
             else:
-                y, moe_aux = M.moe_block(sp["moe"], h, cfg)
+                y, moe_aux = M.moe_block(sp["moe"], h, cfg,
+                                         dense=mode in ("decode", "extend"))
                 aux = aux + moe_aux
             x = x + y
             x = shard_activation(x, "act_btd")
@@ -342,7 +346,7 @@ def decode_step(params, cfg: ModelConfig, token, cache):
 
 
 def extend_step(params, cfg: ModelConfig, tokens, cache, lengths=None,
-                last_only=False):
+                last_only=False, embeddings=None):
     """Masked multi-token cached forward at per-row offsets — the unified
     extend path behind speculative verify, chunked prefill, and the
     serving engine's fused mixed step. tokens: (B, T) ids; ``lengths``:
@@ -352,8 +356,11 @@ def extend_step(params, cfg: ModelConfig, tokens, cache, lengths=None,
     where ``logits[:, i]`` is the distribution after consuming
     tokens[:, :i+1], or (B, 1, V) at each row's last valid position when
     ``last_only`` (saves the (T-1)·V unembed when only the next-token
-    distribution is needed, e.g. a prefill chunk)."""
-    x = embed_inputs(params, cfg, tokens)
+    distribution is needed, e.g. a prefill chunk). ``embeddings``:
+    optional (B, T, d_embed) frontend output admitted *instead of*
+    tokens (a VLM/audio prefix chunk flowing through the same masked
+    extend as text)."""
+    x = embed_inputs(params, cfg, tokens, embeddings)
     x = shard_activation(x, "act_btd")
     x, new_cache, _ = _scan_blocks(params, x, cfg, mode="extend",
                                    cache=cache, length=lengths)
@@ -372,22 +379,48 @@ def verify_step(params, cfg: ModelConfig, tokens, cache):
 
 
 def set_cache_steps(cache, steps):
-    """Per-row cache rollback/advance: rewrite every attention sub-cache's
-    ``step`` (leaves are (n_blocks, B)) to ``steps`` (B,). ``pos`` entries
-    beyond the new depth are left in place — causal masking keeps them
-    invisible until the decode step that overwrites their ring slot (see
-    ``layers.verify_into_cache``)."""
+    """Per-row cache rollback: move every sub-cache to depth ``steps``
+    (B,), family-aware.
+
+    * Attention sub-caches (``pos`` leaf): rewrite ``step`` (leaves are
+      (n_blocks, B)). ``pos`` entries beyond the new depth are left in
+      place — causal masking keeps them invisible until the decode step
+      that overwrites their ring slot (see ``layers.verify_into_cache``).
+    * SSM sub-caches (``conv``/``ssm`` leaves): recurrent state cannot
+      be rewound by masking, so rows with ``steps < step`` restore the
+      ``*_ckpt`` snapshot taken before the most recent advance. The
+      caller must target that snapshot's depth (the engine rolls back to
+      the pre-verify depth and *replays* accepted tokens through
+      ``extend_step`` — see ``Model.rollback_needs_replay``).
+
+    Rows where ``steps`` equals the current depth are untouched
+    bit-for-bit on both.
+    """
     steps = steps.astype(jnp.int32)
 
     def walk(node):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                if k == "step":
-                    out[k] = jnp.broadcast_to(steps[None, :], v.shape)
-                else:
-                    out[k] = walk(v)
-            return out
-        return node
+        if not isinstance(node, dict):
+            return node
+        if "conv" in node and "ssm" in node:              # SSM sub-cache
+            tgt = jnp.broadcast_to(steps[None, :], node["step"].shape)
+            back = tgt < node["step"]                     # (n_blocks, B)
+
+            def sel(cur, ck):
+                m = back.reshape(back.shape + (1,) * (cur.ndim - back.ndim))
+                return jnp.where(m, ck, cur)
+
+            return {"conv": sel(node["conv"], node["conv_ckpt"]),
+                    "ssm": sel(node["ssm"], node["ssm_ckpt"]),
+                    "step": jnp.where(back, tgt, node["step"]),
+                    "conv_ckpt": node["conv_ckpt"],
+                    "ssm_ckpt": node["ssm_ckpt"],
+                    "step_ckpt": node["step_ckpt"]}
+        out = {}
+        for k, v in node.items():
+            if k == "step":
+                out[k] = jnp.broadcast_to(steps[None, :], v.shape)
+            else:
+                out[k] = walk(v)
+        return out
 
     return walk(cache)

@@ -35,6 +35,15 @@ _PRECISIONS = ("fp", "int8", "int4")
 def parse_draft_spec(spec: str) -> Tuple[str, Optional[int]]:
     """"int8@1" -> ("int8", 1); "fp" -> ("fp", None = full depth)."""
     prec, _, blocks = spec.partition("@")
+    if prec == "ngram":
+        # the prompt-lookup drafter is not a self-draft: it has no
+        # params to derive. The engine intercepts the spec before ever
+        # reaching this parser (serving/ngram_draft.py)
+        raise ValueError(
+            "draft spec 'ngram' selects the prompt-lookup drafter, "
+            "which has no self-draft parameters — pass it to "
+            "Engine(draft='ngram') / --draft ngram, not to "
+            "make_self_draft")
     if prec not in _PRECISIONS:
         raise ValueError(f"draft precision {prec!r} not in {_PRECISIONS} "
                          f"(spec {spec!r})")

@@ -42,14 +42,29 @@ mixed / speculative step programs are unchanged in shape; they write
 through the block table via the paged attention path in
 ``models/layers.py``.
 
-Retained from v2 (see the sections below and docs/serving.md): bucketed
-slot-direct prefill (the ``prefill_chunk=0`` legacy/stall path, still
-used for requests the extend path cannot serve), the fused donated
-decode step with zero steady-state host<->device traffic, the bounded
-``_poll``/``_harvest`` trace contract, and the fused draft–verify
-speculative step (``draft=``/``spec_gamma=``; chunked admission then
-runs as its own extend program right before the spec step, advancing
-target and draft caches in lockstep with the draft one position behind).
+Chunked admission is the ONLY admission path: every family — dense,
+MoE (dense routing in cached modes), SSM (sequential ``ssd_extend``
+recurrence), hybrid, VLM (the frontend prefix enters as one embedding
+chunk) and encoder–decoder (cross-attention memory encoded once at
+admission, decoder ring chunked like any other) — flows through
+``Model.extend_into_cache``. The v2 monolithic slot-direct prefill is
+gone; ``prefill_chunk=0`` now means a single max-size chunk (the whole
+prompt in one fused extend), not a separate program. The
+``fallback_admissions`` counter observes any admission that cannot take
+the fused path — structurally zero for every supported family, and
+asserted zero by ``benchmarks/check_families.py``.
+
+Retained from v2 (see the sections below and docs/serving.md): the
+fused donated decode step with zero steady-state host<->device traffic,
+the bounded ``_poll``/``_harvest`` trace contract, and the fused
+draft–verify speculative step (``draft=``/``spec_gamma=``; chunked
+admission then runs as its own extend program right before the spec
+step, advancing target and draft caches in lockstep with the draft one
+position behind). ``draft="ngram"`` replaces the draft model with a
+prompt-lookup drafter (``serving/ngram_draft.py``) that proposes from
+the request's own token history — no draft cache, works for every
+family, and recurrent targets commit speculation through the rollback-
+and-replay flow (``Model.rollback_needs_replay``).
 
 Telemetry (``docs/observability.md``): every host-side stat lives in
 one ``serving/telemetry.MetricsRegistry`` (``Engine.metrics``) —
@@ -100,22 +115,12 @@ from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, Response
 from repro.serving.sampler import Sampler
 
-MIN_BUCKET = 8
-
 #: Sentinel "token" the fused steps emit for a slot whose sampler logits
 #: were not finite (NaN/inf): the on-device guard deactivates only that
 #: row, and the host harvest turns the sentinel into finish_reason
 #: "error" without appending it. Real token ids are >= 0 and the no-EOS
 #: sentinel is -1, so -2 is unambiguous.
 ERR_TOKEN = -2
-
-
-def bucket_length(n: int, cap: int, lo: int = MIN_BUCKET) -> int:
-    """Smallest power-of-two >= n (floored at ``lo``), capped at ``cap``.
-    The cap keeps the last bucket exactly the cache length even when that
-    is not a power of two (e.g. cache_len=48 -> buckets 8, 16, 32, 48)."""
-    b = max(lo, 1 << max(0, n - 1).bit_length())
-    return min(b, cap)
 
 
 def _guarded_sample(sampler, key, logits):
@@ -185,22 +190,29 @@ class Engine:
         own setting (``cfg.kv_quant``).
 
         ``draft`` enables speculative decoding: a self-draft spec string
-        (``"int8@1"`` — see ``quant.self_draft``), an explicit
+        (``"int8@1"`` — see ``quant.self_draft``), the string
+        ``"ngram"`` for the family-agnostic prompt-lookup drafter
+        (``serving/ngram_draft.py`` — no draft model or cache; proposals
+        come from the request's own token history), an explicit
         ``(draft_model, draft_params)`` pair, or None to follow
         ``cfg.draft``. ``spec_gamma`` is the number of draft tokens
         proposed per step (0 follows ``cfg.spec_gamma``, defaulting to 4
-        once a draft is configured). Requires attention-backed caches
-        (``Model.supports_speculative``) on both models.
+        once a draft is configured). Model drafts require caches that
+        rewind without replay on both sides (attention-backed); the
+        n-gram drafter serves every family — recurrent targets commit
+        accepted tokens through checkpoint-restore + replay
+        (``Model.rollback_needs_replay``).
 
-        ``prefill_chunk`` enables continuous batching (the fused mixed
-        step): each engine step decodes every active slot and advances at
-        most this many prompt tokens of one admitting request. None
-        follows ``cfg.prefill_chunk``; 0 disables (monolithic slot-direct
-        prefill, which stalls decode for the whole prompt). Requires the
-        extend path (attention-backed, MoE-free stacks — expert capacity
-        is shared across a batch row, so masked extend rows would steal
-        it); other models and requests carrying frontend embeddings fall
-        back to the monolithic path automatically.
+        ``prefill_chunk`` sizes the chunked admission path — the ONLY
+        admission path: each engine step decodes every active slot and
+        advances at most this many prompt tokens of one admitting
+        request through the fused mixed step. None follows
+        ``cfg.prefill_chunk``; 0 means a single max-size chunk (the
+        whole prompt enters through one fused extend — there is no
+        separate monolithic prefill program). Every family supports the
+        extend path; requests carrying frontend embeddings admit their
+        prefix through one embedding chunk (VLM) or a one-shot encode
+        of the cross-attention memory (encdec) before the token chunks.
 
         ``prefix_cache_tokens`` (with chunked prefill, non-speculative)
         caps the shared-prefix KV reuse budget in tokens; None follows
@@ -226,7 +238,8 @@ class Engine:
         (``serving/paged_kv.py``): HBM scales with live tokens, prefix
         hits become block-table aliases (zero KV copies) and admission
         applies backpressure instead of assuming worst-case capacity.
-        Requires the extend path (attention-only, MoE-free stacks) and
+        Requires a paged cache layout (attention-only stacks — SSM
+        recurrent state has no per-position storage to page) and
         token-only prompts that fit the KV ring — ``submit`` rejects
         anything else. ``num_pages=None`` sizes the pool for capacity
         parity with the contiguous layout plus provisioning headroom.
@@ -274,11 +287,6 @@ class Engine:
         # vlm prompts carry a frontend prefix in the same cache rows
         self._prefix = cfg.frontend.n_tokens \
             if (cfg.frontend is not None and cfg.family == "vlm") else 0
-        # MoE routing shares a capacity budget across the whole sequence,
-        # so padding tokens could steal capacity from valid ones: for MoE
-        # models keep the masked slot-reset prefill but pad nothing
-        # (bucket = exact length; more jit entries, exact routing)
-        self._pad_buckets = cfg.moe is None
         # XLA ignores donation on CPU (and warns); only donate elsewhere
         self._donate = (jax.default_backend() != "cpu") if donate is None \
             else donate
@@ -328,6 +336,12 @@ class Engine:
         self._c_tokens = self.metrics.counter("tokens_emitted")
         self._c_steps = self.metrics.counter("steps_total", persist=True)
         self._c_admissions = self.metrics.counter("chunked_admissions")
+        # admissions that could not take the fused chunked path. The
+        # refactor that retired the monolithic prefill made this
+        # structurally zero for every supported family — the counter
+        # (and its trace instant) exists so any reintroduced bypass is
+        # observable, and benchmarks/check_families.py gates on it.
+        self._c_fallback = self.metrics.counter("fallback_admissions")
         self._c_spec_emitted = self.metrics.counter("spec_tokens_emitted")
         self._c_spec_steps = self.metrics.counter("spec_active_steps")
         self._h_ttft = self.metrics.histogram("ttft_s")
@@ -457,41 +471,68 @@ class Engine:
             raise ValueError("spec_gamma set but no draft configured "
                              "(pass draft=... or set cfg.draft)")
         self.spec_gamma = gamma if draft_src is not None else 0
+        self._ngram = isinstance(draft_src, str) \
+            and draft_src.partition("@")[0] == "ngram"
         self._draft_model: Optional[Model] = None
         self._draft_params = None
         self.draft_cache = None
+        self.hist = self.hist_len = None   # ngram drafter token history
+        self._hist_sh = None
         if self.spec_gamma:
-            if not model.supports_speculative:
-                raise ValueError(
-                    "speculative decoding requires attention-backed "
-                    f"caches; target family {cfg.family!r} has none")
-            if isinstance(draft_src, str):
-                from repro.quant.self_draft import make_self_draft
-                dmodel, dparams = make_self_draft(model, params, draft_src)
-            else:
-                dmodel, dparams = draft_src
-            if not dmodel.supports_speculative:
-                raise ValueError(
-                    "draft model must support per-row cache rollback "
-                    f"(attention-backed); family {dmodel.cfg.family!r}")
             if self.spec_gamma + 1 > self.kv_len:
                 raise ValueError(
                     f"spec_gamma={self.spec_gamma} needs a verify window "
                     f"of {self.spec_gamma + 1} <= kv ring {self.kv_len}")
-            self._draft_model = dmodel
-            self._draft_params = dparams
-            self.draft_cache = dmodel.make_cache(max_batch, cache_len)
-            if self.mesh is not None:
+            if self._ngram:
+                # family-agnostic prompt-lookup drafter: proposals come
+                # from each slot's own effective token stream, kept on
+                # device so the spec step stays sync-free. Sized for the
+                # longest stream worth matching against; longer streams
+                # keep their most recent window (serving/ngram_draft.py)
+                H = 2 * self.kv_len
+                self.hist = jnp.full((max_batch, H), -1, jnp.int32)
+                self.hist_len = jnp.zeros((max_batch,), jnp.int32)
+            else:
+                if isinstance(draft_src, str):
+                    from repro.quant.self_draft import make_self_draft
+                    dmodel, dparams = make_self_draft(model, params,
+                                                      draft_src)
+                else:
+                    dmodel, dparams = draft_src
+                if model.rollback_needs_replay \
+                        or dmodel.rollback_needs_replay:
+                    raise ValueError(
+                        "model-draft speculation requires caches that "
+                        "rewind without replay on both sides (attention-"
+                        f"backed); families {cfg.family!r} / "
+                        f"{dmodel.cfg.family!r} carry recurrent state — "
+                        "use draft='ngram' instead")
+                if model.encode_memory is not None:
+                    raise ValueError(
+                        "model-draft speculation is not wired for "
+                        "encoder-decoder stacks (the draft would need "
+                        "its own cross-attention memory per request) — "
+                        "use draft='ngram' instead")
+                self._draft_model = dmodel
+                self._draft_params = dparams
+                self.draft_cache = dmodel.make_cache(max_batch, cache_len)
+            if self.mesh is not None and self._draft_model is not None:
                 # same rules as the target: the self-draft's params are
                 # (slices of) the target's, so they shard identically
                 self._draft_param_sh = self._SH.param_shardings(
-                    dparams, self.mesh)
-                self._draft_params = jax.device_put(dparams,
+                    self._draft_params, self.mesh)
+                self._draft_params = jax.device_put(self._draft_params,
                                                     self._draft_param_sh)
                 self._draft_cache_sh = self._SH.cache_shardings(
                     self.draft_cache, self.mesh, self._b_axes)
                 self.draft_cache = jax.device_put(self.draft_cache,
                                                   self._draft_cache_sh)
+            if self.mesh is not None and self._ngram:
+                self._hist_sh = self._SH.batch_shardings(
+                    self.hist, self.mesh, self._b_axes)
+                self.hist = jax.device_put(self.hist, self._hist_sh)
+                self.hist_len = jax.device_put(self.hist_len,
+                                               self._vec_sh)
             # a spec step emits up to gamma+1 tokens per slot, so polls
             # must come ~(gamma+1)x as often to keep the post-finish
             # overshoot (device decoding an already-finished slot until
@@ -499,31 +540,24 @@ class Engine:
             self.sync_every = max(1, self.sync_every
                                   // (self.spec_gamma + 1))
 
-        # --- continuous batching (chunked prefill + prefix reuse) ------ #
+        # --- continuous batching (the one admission path) -------------- #
         chunk = cfg.prefill_chunk if prefill_chunk is None \
             else prefill_chunk
-        self._extend_ok = model.supports_extend and cfg.moe is None
-        if self.spec_gamma and self._draft_model is not None:
-            self._extend_ok = self._extend_ok \
-                and self._draft_model.supports_extend
-        self.prefill_chunk = min(int(chunk), self.kv_len) \
-            if (chunk and self._extend_ok) else 0
-        if self.paged:
-            if not self._extend_ok:
-                raise ValueError(
-                    "paged KV serving admits through chunked prefill, "
-                    "which this model stack does not support")
-            if self.prefill_chunk == 0:
-                # every paged admission runs through the extend path;
-                # when chunking was not requested, admit whole prompts
-                # in one chunk (the "plain-mode" paged engine)
-                self.prefill_chunk = self.kv_len
+        # 0 / unset = a single max-size chunk per admission: the whole
+        # prompt enters through one fused extend. There is no separate
+        # monolithic prefill program — every family admits through the
+        # chunked path.
+        self.prefill_chunk = min(int(chunk), self.kv_len) if chunk \
+            else self.kv_len
         pct = cfg.prefix_cache_tokens if prefix_cache_tokens is None \
             else prefix_cache_tokens
         # prefix reuse stores target-cache slices only; in spec mode the
-        # draft cache would still need recomputation, so it is disabled
+        # draft cache would still need recomputation, so it is disabled.
+        # The extract/materialize slot programs slice KV rings, so the
+        # trie is attention-only-stack scoped (recurrent state and
+        # encoder memory have no per-position KV slices to share).
         self.prefix_cache: Optional[PrefixCache] = None
-        if pct and self.prefill_chunk and not self.spec_gamma:
+        if pct and not self.spec_gamma and model.supports_paged:
             if self.paged:
                 # entries are page-index lists; bucketing on the page
                 # size makes every hit a whole-page alias, and eviction
@@ -536,9 +570,11 @@ class Engine:
                 self.prefix_cache = PrefixCache(pct, self.prefill_chunk)
         self._admit: Optional[_Admission] = None
 
-        self._step_fn = self._build_spec_step() if self.spec_gamma \
-            else self._build_step()
-        self._prefill_jits: Dict[Tuple, Any] = {}
+        if self.spec_gamma:
+            self._step_fn = self._build_ngram_spec_step() if self._ngram \
+                else self._build_spec_step()
+        else:
+            self._step_fn = self._build_step()
         self._mixed_fn = None          # fused decode+chunk, built lazily
         self._admit_chunk_fn = None    # spec-mode chunk program, lazy
         self._slot_jits: Dict[Tuple, Any] = {}   # reset/materialize/extract
@@ -983,58 +1019,234 @@ class Engine:
                       self._draft_cache_sh, vec, vec, r)
         return self._jit(spec, donate, in_sh, out_sh, name="spec_step")
 
-    def _get_prefill(self, bucket: int, masked: bool, has_emb: bool,
-                     for_draft: bool = False):
-        """One compiled program per (bucket length, masked, embeddings,
-        target-or-draft) signature — the jit cache is O(log cache_len),
-        not O(#lengths)."""
-        kf = (bucket, masked, has_emb, for_draft)
-        if kf in self._prefill_jits:
-            return self._prefill_jits[kf]
-        model = self._draft_model if for_draft else self.model
-        sampler = self.sampler
+    def _build_ngram_admit_chunk(self):
+        """n-gram-mode chunk program: advance one admitting request by up
+        to C prompt tokens in the target cache (slot-direct at batch 1),
+        arming the slot on completion — the drafter has no cache, so
+        unlike the model-draft variant there is no lagging draft extend.
+        The armed first token is appended to the slot's history row on
+        device (it is part of the stream the drafter matches against)."""
+        model, sampler = self.model, self.sampler
+        is_paged = self.paged
 
-        def prefill(params, tokens, length, emb, b, cache, key):
+        def admit(params, cache, tokens, hist, hist_len, remaining,
+                  active, eos, key, chunk, a_slot, a_len, a_last, a_rem,
+                  a_eos, poison):
+            B = tokens.shape[0]
+            H = hist.shape[1]
+            bidx = jnp.arange(B)
+            is_admit = bidx == a_slot
+            logits, cache = self._slot_extend(
+                model, params, cache, a_slot, chunk, a_len,
+                paged=is_paged)
+            key, sk = jax.random.split(key)
+            nxt, bad = _guarded_sample(                          # (1,)
+                sampler, sk,
+                logits[:, 0].astype(jnp.float32) + poison[a_slot])
+            arm = is_admit & a_last
+            done = arm & (bad[0] | (a_rem <= 1) | (nxt[0] == a_eos))
+            new_active = active | (arm & ~done)
+            new_remaining = jnp.where(arm, a_rem - 1, remaining)
+            new_eos = jnp.where(arm, a_eos, eos)
+            new_tokens = jnp.where(arm, nxt[0], tokens[:, 0])
+            wpos = jnp.where(a_last, hist_len[a_slot], H)   # H -> dropped
+            hist = hist.at[a_slot, wpos].set(nxt[0], mode="drop")
+            hist_len = jnp.where(
+                is_admit & a_last,
+                jnp.minimum(hist_len + 1, H), hist_len)
+            return (new_tokens[:, None], new_tokens[:, None],
+                    arm.astype(jnp.int32), cache, hist, hist_len,
+                    new_remaining, new_active, new_eos, key)
+
+        donate = (1, 2, 3, 4, 5, 6, 7) if self._donate else ()
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r, tok, vec = self._repl, self._tok_sh, self._vec_sh
+            in_sh = (self._param_sh, self._cache_sh, tok, self._hist_sh,
+                     vec, vec, vec, vec, r, r, r, r, r, r, r, vec)
+            out_sh = (tok, tok, vec, self._cache_sh, self._hist_sh, vec,
+                      vec, vec, vec, r)
+        return self._jit(admit, donate, in_sh, out_sh,
+                         name="ngram_admit_chunk")
+
+    def _build_ngram_spec_step(self):
+        """One fused propose–verify–accept program with the prompt-lookup
+        drafter (``serving/ngram_draft.py``) in place of a draft model:
+
+        1. ``ngram_propose`` matches each row's recent history suffix
+           against its own stream and proposes the gamma tokens that
+           followed the most recent earlier occurrence (deterministic —
+           no draft forward, no draft cache, no lag bookkeeping);
+        2. the target scores all gamma+1 positions in one masked extend,
+           exactly like the model-draft spec step;
+        3. ``sampler.speculative`` accepts a per-row prefix against the
+           drafter's one-hot proposal distribution (greedy output is
+           token-identical to plain decode by the same argument: the
+           emitted prefix is the target argmax);
+        4. rollback is family-aware: attention-backed targets rewind
+           ``step`` to the committed depth; recurrent targets
+           (``Model.rollback_needs_replay``) restore the pre-verify
+           checkpoint and *replay* the accepted prefix through the same
+           extend — state after replay is bit-identical to having never
+           speculated (tests/test_families.py);
+        5. the emitted block is appended to the history rows on device,
+           growing the drafter's corpus as the stream generates.
+        """
+        model, sampler = self.model, self.sampler
+        gamma = self.spec_gamma
+        vocab = self.model.cfg.vocab
+        replay = self.model.rollback_needs_replay
+        from repro.serving.ngram_draft import ngram_propose
+
+        def spec(params, cache, tokens, hist, hist_len, remaining,
+                 active, eos, key, poison):
+            B = tokens.shape[0]
+            H = hist.shape[1]
+            act1 = active.astype(jnp.int32)
+            # 1) proposals from each row's own emitted stream
+            draft_tokens, draft_logits = ngram_propose(
+                hist, hist_len, gamma=gamma, vocab=vocab)
+            seq = jnp.concatenate([tokens, draft_tokens], axis=1)
+
+            # 2) one masked multi-token target forward
+            t_logits, cache = model.extend_into_cache(
+                params, seq, cache, (gamma + 1) * act1)
+
+            # 3) accept prefix + resample first rejection (on device);
+            #    NaN/inf containment mirrors the model-draft step
+            t32 = t_logits.astype(jnp.float32) + poison[:, None, None]
+            bad = active & ~jnp.all(jnp.isfinite(t32), axis=(1, 2))
+            key, sk = jax.random.split(key)
+            block, n_acc = sampler.speculative(
+                sk, draft_tokens, draft_logits,
+                jnp.where(bad[:, None, None], 0.0, t32))
+            block = jnp.where(bad[:, None], jnp.int32(ERR_TOKEN), block)
+            n_acc = jnp.where(bad, 0, n_acc)
+            n_emit = jnp.where(active, n_acc + 1, 0)          # (B,)
+
+            # 4) family-aware rollback to the committed depth
+            steps_now = model.cache_steps(cache)              # (B,)
+            committed = jnp.where(active, steps_now - gamma + n_acc,
+                                  steps_now)
+            if replay:
+                # recurrent state restores the checkpoint taken before
+                # the verify advance, then re-absorbs exactly the
+                # accepted prefix (pending + n_acc drafts). Attention
+                # sub-caches in a hybrid stack rewrite the same K/V at
+                # the same slots — bitwise a no-op for them.
+                pre = jnp.where(active, steps_now - (gamma + 1),
+                                steps_now)
+                cache = model.rollback(cache, pre)
+                _, cache = model.extend_into_cache(
+                    params, seq, cache, jnp.where(active, n_acc + 1, 0),
+                    last_only=True)
+            else:
+                cache = model.rollback(cache, committed)
+
+            # 5) bookkeeping + history append
+            idx = jnp.arange(gamma + 1)[None, :]
+            emitted = idx < n_emit[:, None]
+            eos_hit = jnp.any(emitted & (block == eos[:, None]), axis=1)
+            done = active & (bad | (remaining <= n_emit) | eos_hit)
+            new_active = active & ~done
+            remaining = jnp.where(
+                active, jnp.maximum(remaining - n_emit, 0), remaining)
+            bidx = jnp.arange(B)
+            last = block[bidx, jnp.maximum(n_emit, 1) - 1]
+            nxt = jnp.where(active, last, tokens[:, 0])
+            wpos = jnp.where(emitted & active[:, None],
+                             hist_len[:, None] + idx, H)   # H -> dropped
+            hist = hist.at[bidx[:, None], wpos].set(block, mode="drop")
+            hist_len = jnp.minimum(hist_len + n_emit, H)
+            return (nxt[:, None], block, n_emit, cache, hist, hist_len,
+                    remaining, new_active, key)
+
+        donate = (1, 2, 3, 4, 5, 6) if self._donate else ()
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            r, tok, vec = self._repl, self._tok_sh, self._vec_sh
+            in_sh = (self._param_sh, self._cache_sh, tok, self._hist_sh,
+                     vec, vec, vec, vec, r, vec)
+            out_sh = (tok, tok, vec, self._cache_sh, self._hist_sh, vec,
+                      vec, vec, r)
+        return self._jit(spec, donate, in_sh, out_sh,
+                         name="ngram_spec_step")
+
+    def _get_embed_chunk(self, for_draft: bool = False):
+        """VLM admission program: the request's frontend embeddings
+        enter the admitting slot through the same masked extend as text
+        — one embedding chunk (static length ``frontend.n_tokens``)
+        before the token chunks, slot-direct at batch 1."""
+        jkey = ("embed_chunk", for_draft)
+        if jkey in self._slot_jits:
+            return self._slot_jits[jkey]
+        model = self._draft_model if for_draft else self.model
+
+        def fn(params, emb, cache, b):
             cache1 = jax.tree.map(
                 lambda t: lax.dynamic_slice_in_dim(t, b, 1, axis=1), cache)
-            batch = {"tokens": tokens}
-            if emb is not None:
-                batch["embeddings"] = emb
-            if masked:
-                batch["length"] = length
-            logits, cache1 = model.prefill(params, batch, cache1)
-            first, _ = _guarded_sample(                              # (1,)
-                sampler, key, logits[:, -1].astype(jnp.float32))
-            cache = jax.tree.map(
+            _, cache1 = model.extend_into_cache(params, None, cache1,
+                                                embeddings=emb)
+            return jax.tree.map(
                 lambda full, u: lax.dynamic_update_slice_in_dim(
                     full, u, b, axis=1), cache, cache1)
-            return first, cache
 
-        donate = (5,) if self._donate else ()
+        donate = (2,) if self._donate else ()
         in_sh = out_sh = None
         if self.mesh is not None:
             r = self._repl
             cache_sh = self._draft_cache_sh if for_draft else self._cache_sh
-            # the single-row prompt/length/emb inputs are host-built and
-            # tiny: replicated (the slot-direct cache write is the only
-            # sharded consumer)
             in_sh = (self._draft_param_sh if for_draft else self._param_sh,
-                     r, r, (r if has_emb else None), r, cache_sh, r)
-            out_sh = (r, cache_sh)
-        fn = self._jit(prefill, donate, in_sh, out_sh,
-                       name=f"prefill[{bucket}"
-                            f"{'d' if for_draft else ''}]")
-        self._prefill_jits[kf] = fn
-        return fn
+                     r, cache_sh, r)
+            out_sh = cache_sh
+        jitted = self._jit(fn, donate, in_sh, out_sh,
+                           name=f"embed_chunk{'[d]' if for_draft else ''}")
+        self._slot_jits[jkey] = jitted
+        return jitted
+
+    def _get_encode_fn(self):
+        """Encoder–decoder admission program: encode the request's
+        frontend frames once (``Model.encode_memory``) and write the
+        per-layer cross-attention KV rows into the admitting slot. The
+        memory is prefill-frozen — every later chunk and decode step
+        reads it untouched, so the one-shot encode replaces the whole
+        encoder half of the old monolithic prefill."""
+        jkey = ("encode", 0)
+        if jkey in self._slot_jits:
+            return self._slot_jits[jkey]
+        model = self.model
+
+        def fn(params, frames, cache, b):
+            xk, xv = model.encode_memory(params, frames)
+            out = dict(cache)
+            out["xk"] = lax.dynamic_update_slice_in_dim(
+                cache["xk"], xk.astype(cache["xk"].dtype), b, axis=1)
+            out["xv"] = lax.dynamic_update_slice_in_dim(
+                cache["xv"], xv.astype(cache["xv"].dtype), b, axis=1)
+            return out
+
+        donate = (2,) if self._donate else ()
+        in_sh = out_sh = None
+        if self.mesh is not None:
+            in_sh = (self._param_sh, self._repl, self._cache_sh,
+                     self._repl)
+            out_sh = self._cache_sh
+        jitted = self._jit(fn, donate, in_sh, out_sh, name="encode")
+        self._slot_jits[jkey] = jitted
+        return jitted
 
     # ------------------------------------------------------------ #
     # slot programs (chunked admission + prefix reuse)
     # ------------------------------------------------------------ #
     def _walk_attn(self, node, fn):
         """Apply ``fn`` to every attention sub-cache dict (identified by
-        its ``pos`` row; chunked admission is gated to attention-only
-        stacks, so this visits every leaf-bearing node)."""
-        if isinstance(node, dict) and "pos" in node:
+        its ``pos`` row). Non-attention nodes — SSM recurrent state
+        dicts, the encdec cross-attention memory arrays — pass through
+        untouched; callers that must also reset them walk separately
+        (``_get_slot_fn('reset')``)."""
+        if not isinstance(node, dict):
+            return node
+        if "pos" in node:
             return fn(node)
         return {k: self._walk_attn(v, fn) for k, v in node.items()}
 
@@ -1068,8 +1280,21 @@ class Engine:
                 # With P > 0 (the paged prefix-alias path) the first P
                 # positions are stamped valid instead: the slot's block
                 # table already points at fully-written shared pages, so
-                # only the pos/step metadata needs populating
-                return self._walk_attn(cache, lambda n: pos_row(n, b, P))
+                # only the pos/step metadata needs populating. Non-
+                # attention state is zeroed outright: SSM recurrent nodes
+                # (state + checkpoints + step) and the encdec cross-
+                # attention memory rows have no positional masking to
+                # hide a previous occupant behind
+                def walk(node):
+                    if not isinstance(node, dict):
+                        return node.at[:, b].set(0)
+                    if "pos" in node:
+                        return pos_row(node, b, P)
+                    if "conv" in node and "ssm" in node:
+                        return {k2: v2.at[:, b].set(0)
+                                for k2, v2 in node.items()}
+                    return {k2: walk(v2) for k2, v2 in node.items()}
+                return walk(cache)
         elif kind == "materialize":
             def fn(cache, kv, b):
                 # walk cache and entry trees in lockstep: write the P
@@ -1255,7 +1480,8 @@ class Engine:
 
     def _get_admit_chunk(self):
         if self._admit_chunk_fn is None:
-            self._admit_chunk_fn = self._build_admit_chunk()
+            self._admit_chunk_fn = self._build_ngram_admit_chunk() \
+                if self._ngram else self._build_admit_chunk()
         return self._admit_chunk_fn
 
     # ------------------------------------------------------------ #
@@ -1300,27 +1526,39 @@ class Engine:
                 f"request uid {req.uid} is already in flight")
         L = int(prompt.size)
         cap = self.kv_len - self._prefix
-        if self.paged and not self._chunk_eligible(req):
-            raise ValueError(
-                "paged KV serving admits requests through chunked "
-                "prefill only: prompts must be token-only (no frontend "
-                f"embeddings) and fit the KV ring ({L} tokens vs {cap})")
-        if L > cap and not self.model.cfg.sliding_window:
-            # sliding-window caches legitimately serve longer prompts
-            # through the exact-length ring prefill; a full-attention
-            # cache cannot — the ring would silently wrap over context
+        if L > cap and (self.paged or not self.model.cfg.sliding_window):
+            # a sliding-window ring legitimately serves longer prompts:
+            # chunks wrap the ring and the window mask hides overwritten
+            # context. Full-attention and paged caches cannot — the
+            # overwrite would silently drop attended positions
             raise ValueError(
                 f"request {req.uid}: prompt of {L} tokens exceeds the "
                 f"KV capacity of {cap} (cache_len={self.cache_len}"
                 + (f" minus a {self._prefix}-token frontend prefix"
                    if self._prefix else "")
                 + "); raise cache_len or shorten the prompt")
+        if self.model.encode_memory is not None \
+                and req.embeddings is None:
+            raise ValueError(
+                f"request {req.uid}: encoder-decoder serving requires "
+                "frontend frame embeddings on every request (the "
+                "cross-attention memory is encoded at admission)")
         if req.embeddings is not None:
-            emb = np.asarray(req.embeddings)
-            if emb.ndim != 2:
+            fe = self.model.cfg.frontend
+            if fe is None:
                 raise ValueError(
-                    f"request {req.uid}: embeddings must be 2-D "
-                    f"(n_tokens, d_model), got shape {emb.shape}")
+                    f"request {req.uid}: embeddings were supplied but "
+                    "the model has no frontend to consume them")
+            if self.paged:
+                raise ValueError(
+                    "paged KV serving is token-only: frontend "
+                    "embeddings have no paged admission program")
+            emb = np.asarray(req.embeddings)
+            if emb.shape != (fe.n_tokens, fe.d_embed):
+                raise ValueError(
+                    f"request {req.uid}: embeddings must have shape "
+                    f"({fe.n_tokens}, {fe.d_embed}) to match the "
+                    f"frontend, got {emb.shape}")
 
     def _free_slot(self) -> Optional[int]:
         admitting = self._admit.slot if self._admit is not None else -1
@@ -1338,26 +1576,17 @@ class Engine:
             return len(req.prompt)
         return len(req.prompt) + len(resp.tokens)
 
-    def _chunk_eligible(self, req: Request) -> bool:
-        """Whether this request can be admitted through the fused
-        chunked-prefill path. Fallbacks (monolithic slot-direct prefill):
-        no extend support (ssm/hybrid/moe/encdec), frontend embeddings
-        (the chunk matrix carries token ids only), and prompts longer
-        than the KV ring (exact-length ring prefill rewrites the row)."""
-        return (self.prefill_chunk > 0 and self._extend_ok
-                and req.embeddings is None
-                and self._eff_len(req) <= self.kv_len - self._prefix)
-
     def _fill_free_slots(self) -> None:
-        """Admission scheduler (FIFO head): chunk-eligible requests
-        start a chunked admission (at most one in flight — 'advance one
-        admitting request per step'); everything else takes the legacy
-        monolithic prefill immediately. A head-of-queue request that
+        """Admission scheduler (FIFO head): every request starts a
+        chunked admission (at most one in flight — 'advance one
+        admitting request per step'). A head-of-queue request that
         outranks a live stream may preempt it when the slot table or
         page pool is short — the victim requeues right *behind* the
         displacing request (never ahead: that would livelock) and
         resumes later with its output unchanged."""
         while self.queue:
+            if self._admit is not None:
+                return                # one chunked admission at a time
             req = self.queue[0]
             b = self._free_slot()
             if b is None:
@@ -1365,29 +1594,36 @@ class Engine:
                         below=req.priority, requeue_pos=1):
                     continue
                 return
-            if self._chunk_eligible(req):
-                if self._admit is not None:
-                    return            # one chunked admission at a time
-                if not self._admit_fits(req):
-                    # page backpressure: the head waits, unless it
-                    # outranks a live stream whose pages can serve it
-                    if self._outranked(req) and self._preempt_one(
-                            below=req.priority, requeue_pos=1):
-                        continue
-                    return
+            if self.model.extend_into_cache is None:
+                # defensively unreachable: every family builds the
+                # extend path (``Model.supports_extend`` is universally
+                # True since the admission unification). Counted and
+                # traced so a facade regression is observable —
+                # ``fallback_admissions`` is asserted zero by the family
+                # gate (benchmarks/check_families.py) — then contained
+                # as a per-request error instead of wedging the queue
                 self.queue.popleft()
-                self._start_chunked(req, b)
+                self._c_fallback.inc()
+                if self.recorder.enabled:
+                    self.recorder.on_admission(req, b, 0, "fallback")
+                self._finish_request(req, "error", time.perf_counter())
                 continue
+            if not self._admit_fits(req):
+                # page backpressure: the head waits, unless it
+                # outranks a live stream whose pages can serve it
+                if self._outranked(req) and self._preempt_one(
+                        below=req.priority, requeue_pos=1):
+                    continue
+                return
             self.queue.popleft()
-            self._prefill_direct(req, b)
+            self._start_chunked(req, b)
 
     def _outranked(self, req: Request) -> bool:
         """Cheap pre-check (no device sync) for priority displacement:
         some occupied slot runs at strictly lower priority than ``req``.
-        A chunked admission in flight blocks displacement for
-        chunk-eligible heads — they could not admit into the freed slot
-        anyway until it drains."""
-        if self._admit is not None and self._chunk_eligible(req):
+        A chunked admission in flight blocks displacement — the head
+        could not admit into the freed slot anyway until it drains."""
+        if self._admit is not None:
             return False
         return any(r is not None and r.priority < req.priority
                    for r in self.slots)
@@ -1412,10 +1648,24 @@ class Engine:
                          tokens=eff, n_done=len(done),
                          resumed=bool(done))
         base, kv, ent_len = 0, None, 0
-        if self.prefix_cache is not None:
+        if self.prefix_cache is not None and req.embeddings is None:
+            # embeddings requests never touch the prefix cache: the
+            # token stream alone does not key the slot's content (two
+            # requests with identical prompts but different frames
+            # would alias), so neither lookup nor publication applies
             kv, ent_len, base = self.prefix_cache.lookup(eff)
             adm.base = base
         bb = jnp.int32(b)
+        if self._ngram:
+            # seed the drafter's corpus with the effective stream (tail-
+            # truncated to the history capacity): prompt n-grams are the
+            # richest match source for the first generated tokens
+            H = int(self.hist.shape[1])
+            n = min(len(eff), H)
+            row = np.full((H,), -1, np.int32)
+            row[:n] = eff[-n:]
+            self.hist = self.hist.at[b].set(jnp.asarray(row))
+            self.hist_len = self.hist_len.at[b].set(n)
         if self.paged:
             # a prefix hit is a page alias: point the fresh slot's block
             # table at the entry's pages (host refcount bump — zero KV
@@ -1426,7 +1676,7 @@ class Engine:
                 self._paged.alias_prefix(b, kv[:base // self.page_size])
             self.cache = self._get_slot_fn(
                 "reset", base if kv is not None else 0)(self.cache, bb)
-            if self.spec_gamma:
+            if self._draft_model is not None:
                 self.draft_cache = self._get_slot_fn("reset")(
                     self.draft_cache, bb)
             self._depth_ub[b] = base
@@ -1444,101 +1694,29 @@ class Engine:
                 self.cache, kv, bb)
         else:
             self.cache = self._get_slot_fn("reset")(self.cache, bb)
-            if self.spec_gamma:
+            if self._draft_model is not None:
                 self.draft_cache = self._get_slot_fn("reset")(
                     self.draft_cache, bb)
+        if req.embeddings is not None:
+            emb = jnp.asarray(req.embeddings)[None]
+            if self.model.encode_memory is not None:
+                # encdec: one-shot encode of the frontend frames; the
+                # per-layer cross KV rows land in the slot and stay
+                # frozen for the request's whole lifetime
+                self.cache = self._get_encode_fn()(
+                    self.params, emb, self.cache, bb)
+            else:
+                # vlm: the frontend prefix enters through the same
+                # masked extend as text — one embedding chunk before
+                # the token chunks
+                self.cache = self._get_embed_chunk()(
+                    self.params, emb, self.cache, bb)
+                if self._draft_model is not None:
+                    self.draft_cache = self._get_embed_chunk(True)(
+                        self._draft_params, emb, self.draft_cache, bb)
         self._admit = adm
         if self.recorder.enabled:
             self.recorder.on_admission(req, b, base, "chunked")
-
-    def _prefill_direct(self, req: Request, b: int) -> None:
-        """Legacy monolithic admission: one whole-prompt slot-direct
-        bucketed prefill (stalls decode for the duration — the
-        ``prefill_chunk=0`` baseline, and the fallback for requests the
-        extend path cannot serve). A preempted request resumes here with
-        its generated tokens appended to the prompt (same replay
-        contract as ``_start_chunked``)."""
-        req.started_s = req.started_s or time.perf_counter()
-        if self.recorder.enabled:
-            self.recorder.on_admission(req, b, 0, "prefill")
-        resp = self.responses[req.uid]
-        prompt = np.asarray(req.prompt, np.int32)
-        if resp.tokens:            # resume: replay the generated prefix
-            prompt = np.concatenate(
-                [prompt, np.asarray(resp.tokens, np.int32)])
-        L = len(prompt)
-        # prompts longer than the KV ring (sliding-window caches) fall
-        # back to exact-length ring prefill, which rewrites the full row
-        cap = self.kv_len - self._prefix
-        masked = L <= cap
-        Lb = bucket_length(L, cap) if (masked and self._pad_buckets) \
-            else L
-        toks = np.zeros((1, Lb), np.int32)
-        toks[0, :L] = prompt
-        emb = None
-        if req.embeddings is not None:
-            emb = jnp.asarray(req.embeddings)[None]
-        self.key, sk = jax.random.split(self.key)
-        fn = self._get_prefill(Lb, masked, emb is not None)
-        first, self.cache = fn(self.params, jnp.asarray(toks),
-                               jnp.asarray([L], jnp.int32), emb,
-                               jnp.int32(b), self.cache, sk)
-        # the only per-request host sync: the first sampled token
-        tok = int(first[0])
-        now = time.perf_counter()
-        if tok == ERR_TOKEN:
-            # NaN/inf logits in the prefill itself: contained to this
-            # request — the slot was never armed and stays free
-            self._c_errors.inc()
-            self._finish_request(req, "error", now)
-            return
-        if not req.first_token_s:
-            req.first_token_s = now
-            self._h_ttft.observe(req.first_token_s - req.submitted_s)
-            if self.recorder.enabled:
-                self.recorder.on_first_token(req, req.first_token_s)
-        self._c_tokens.inc()
-        if self.recorder.enabled:
-            self.recorder.on_emit(req, b, 1, now)
-        resp.tokens.append(tok)
-        if len(resp.tokens) >= req.max_new_tokens or (
-                req.eos_id is not None and tok == req.eos_id):
-            resp.finished = True
-            resp.finish_reason = "eos" if (
-                req.eos_id is not None and tok == req.eos_id) \
-                else "length"
-            req.finished_s = time.perf_counter()
-            if self.recorder.enabled:
-                self.recorder.on_finish(req, resp.finish_reason,
-                                        req.finished_s)
-            return  # slot stays free
-        if self.spec_gamma:
-            # the draft needs the prompt context too: same bucketed
-            # prefill into the draft's own batched cache, but only up
-            # to L-1 tokens — the draft cache lags the committed
-            # depth by one (the last prompt token becomes ``prev``
-            # and is re-consumed by the first draft verify window).
-            # Its sampled token is discarded.
-            self.key, sk = jax.random.split(self.key)
-            if masked:
-                dtoks, dlen, dLb = toks, L - 1, Lb
-            else:  # exact-length ring fallback (L-1 >= kv ring)
-                dtoks, dlen, dLb = toks[:, :L - 1], L - 1, L - 1
-            dfn = self._get_prefill(dLb, masked, emb is not None,
-                                    for_draft=True)
-            _, self.draft_cache = dfn(
-                self._draft_params, jnp.asarray(dtoks),
-                jnp.asarray([dlen], jnp.int32), emb, jnp.int32(b),
-                self.draft_cache, sk)
-            self.prev = self.prev.at[b, 0].set(int(prompt[-1]))
-        self.tokens = self.tokens.at[b, 0].set(tok)
-        self.remaining = self.remaining.at[b].set(
-            req.max_new_tokens - len(resp.tokens))
-        self.active = self.active.at[b].set(True)
-        self.eos = self.eos.at[b].set(
-            -1 if req.eos_id is None else int(req.eos_id))
-        self.slots[b] = req
-        self._slot_start[b] = self._steps
 
     # ------------------------------------------------------------ #
     # lifecycle control: cancel / deadlines / preempt-and-requeue
@@ -1718,13 +1896,13 @@ class Engine:
             if spec is not None:
                 self._set_poison(spec.slot or 0)
                 poisoned = True
-        if self._admit is None and self.prefill_chunk and self.queue:
-            # pipeline the next admission mid-burst (chunk-eligible
-            # head-of-queue only; legacy prefills wait for the burst
-            # boundary so they cannot stall the hot loop invisibly)
+        if self._admit is None and self.queue \
+                and self.model.extend_into_cache is not None:
+            # pipeline the next admission mid-burst: the head-of-queue
+            # request starts its chunked admission without waiting for
+            # the burst boundary
             b = self._free_slot()
-            if b is not None and self._chunk_eligible(self.queue[0]) \
-                    and self._admit_fits(self.queue[0]):
+            if b is not None and self._admit_fits(self.queue[0]):
                 self._start_chunked(self.queue.popleft(), b)
         adm = self._admit
         if self.spec_gamma:
@@ -1780,12 +1958,20 @@ class Engine:
             while not self._provision_decode_rows(self.spec_gamma + 1):
                 pass
             self._push_block_tables()
-        (self.tokens, self.prev, block, n_emit, self.cache,
-         self.draft_cache, self.remaining, self.active,
-         self.key) = self._step_fn(
-            self.params, self._draft_params, self.cache,
-            self.draft_cache, self.tokens, self.prev, self.remaining,
-            self.active, self.eos, self.key, self.poison)
+        if self._ngram:
+            (self.tokens, block, n_emit, self.cache, self.hist,
+             self.hist_len, self.remaining, self.active,
+             self.key) = self._step_fn(
+                self.params, self.cache, self.tokens, self.hist,
+                self.hist_len, self.remaining, self.active, self.eos,
+                self.key, self.poison)
+        else:
+            (self.tokens, self.prev, block, n_emit, self.cache,
+             self.draft_cache, self.remaining, self.active,
+             self.key) = self._step_fn(
+                self.params, self._draft_params, self.cache,
+                self.draft_cache, self.tokens, self.prev, self.remaining,
+                self.active, self.eos, self.key, self.poison)
         self._trace.append((block, n_emit))
         self._record_step("spec")
 
@@ -1827,9 +2013,10 @@ class Engine:
 
     def _step_admit_chunk(self, adm: _Admission) -> None:
         """Dispatch the spec-mode admission chunk program (target +
-        lagging draft), then let the spec step decode the other slots."""
+        lagging draft for model drafts; target + history append for the
+        n-gram drafter), then let the spec step decode the other
+        slots."""
         chunk, n, last = self._chunk_args(adm)
-        d_n = max(0, min(n, adm.length - 1 - adm.base))
         req = adm.req
         if self.paged:
             # target chunk only — the draft cache stays contiguous; the
@@ -1839,16 +2026,30 @@ class Engine:
                 pass
             self._depth_ub[adm.slot] = adm.base + n
             self._push_block_tables()
-        (self.tokens, self.prev, block, n_emit, self.cache,
-         self.draft_cache, self.remaining, self.active, self.eos,
-         self.key) = self._get_admit_chunk()(
-            self.params, self._draft_params, self.cache, self.draft_cache,
-            self.tokens, self.prev, self.remaining, self.active, self.eos,
-            self.key, jnp.asarray(chunk), jnp.int32(adm.slot),
-            jnp.int32(n), jnp.int32(d_n), jnp.asarray(bool(last)),
-            jnp.int32(req.max_new_tokens - adm.n_done),
-            jnp.int32(-1 if req.eos_id is None else int(req.eos_id)),
-            jnp.int32(int(adm.tokens[-1])), self.poison)
+        if self._ngram:
+            (self.tokens, block, n_emit, self.cache, self.hist,
+             self.hist_len, self.remaining, self.active, self.eos,
+             self.key) = self._get_admit_chunk()(
+                self.params, self.cache, self.tokens, self.hist,
+                self.hist_len, self.remaining, self.active, self.eos,
+                self.key, jnp.asarray(chunk), jnp.int32(adm.slot),
+                jnp.int32(n), jnp.asarray(bool(last)),
+                jnp.int32(req.max_new_tokens - adm.n_done),
+                jnp.int32(-1 if req.eos_id is None else int(req.eos_id)),
+                self.poison)
+        else:
+            d_n = max(0, min(n, adm.length - 1 - adm.base))
+            (self.tokens, self.prev, block, n_emit, self.cache,
+             self.draft_cache, self.remaining, self.active, self.eos,
+             self.key) = self._get_admit_chunk()(
+                self.params, self._draft_params, self.cache,
+                self.draft_cache, self.tokens, self.prev, self.remaining,
+                self.active, self.eos, self.key, jnp.asarray(chunk),
+                jnp.int32(adm.slot), jnp.int32(n), jnp.int32(d_n),
+                jnp.asarray(bool(last)),
+                jnp.int32(req.max_new_tokens - adm.n_done),
+                jnp.int32(-1 if req.eos_id is None else int(req.eos_id)),
+                jnp.int32(int(adm.tokens[-1])), self.poison)
         self._trace.append((block, n_emit))
         if self.recorder.enabled:
             self.recorder.on_chunk(req, adm.slot, adm.base, adm.base + n,
@@ -1873,8 +2074,11 @@ class Engine:
         self._admit = None
         # resumed admissions skip publication: their prompt prefix was
         # published (if wanted) on first admission, and the effective
-        # stream's tail is request-specific output, not a shared prefix
-        if self.prefix_cache is not None and not adm.resumed:
+        # stream's tail is request-specific output, not a shared prefix.
+        # Embeddings requests skip it too — the token stream alone does
+        # not key the slot's content (see _start_chunked)
+        if self.prefix_cache is not None and not adm.resumed \
+                and adm.req.embeddings is None:
             P = self.prefix_cache.wants(adm.req.prompt)
             if P and P <= self.kv_len:
                 if self.paged:
@@ -2253,7 +2457,7 @@ class Engine:
         stats: Dict[str, float] = {
             "n_finished": len(finished),
             "tokens_generated": sum(r.n_generated for r in finished),
-            "prefill_jit_entries": len(self._prefill_jits),
+            "fallback_admissions": self._c_fallback.value,
             "decode_steps": self._steps,
             "prefill_chunk": self.prefill_chunk,
             "chunked_admissions": self._c_admissions.value,

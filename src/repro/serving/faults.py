@@ -108,7 +108,13 @@ class FaultSpec:
     (``None`` = match any call of the site); ``slot`` and ``delay_s``
     are *payloads* the firing site consumes; ``times`` bounds how often
     the spec fires (-1 = unlimited) and ``p`` makes firing probabilistic
-    against the registry's seeded stream."""
+    against the registry's seeded stream.
+
+    ``step`` matches *at or after*: the engine's step counter can
+    advance by more than one per dispatch round (a fused admission
+    chunk rides the same round as the decode/spec step), so an exact
+    value may never be observed — the spec fires on the first site
+    call whose step is >= the scheduled one, bounded by ``times``."""
     site: str
     step: Optional[int] = None      # engine-step filter
     attempt: Optional[int] = None   # transport-attempt filter
@@ -128,7 +134,11 @@ class FaultSpec:
         return self.times >= 0 and self.fired >= self.times
 
     def matches(self, ctx: Dict[str, Any]) -> bool:
-        for key in ("step", "attempt", "op"):
+        if self.step is not None:
+            got = ctx.get("step")
+            if got is None or got < self.step:
+                return False
+        for key in ("attempt", "op"):
             want = getattr(self, key)
             if want is not None and ctx.get(key) != want:
                 return False

@@ -1,0 +1,88 @@
+"""Prompt-lookup (n-gram) speculative drafter: family-agnostic draft
+proposals with no draft model, no draft cache, and no second forward.
+
+The drafter keeps a per-slot token *history* — the request's effective
+stream (prompt, then everything emitted), resident on device so the
+fused spec step stays sync-free. To propose, it matches the most recent
+``n``-gram of each row against earlier occurrences in the row's own
+stream and proposes the tokens that followed the most recent match
+(descending ``n``, so the longest context wins). Natural-language and
+code streams repeat themselves enough that this simple lookup draws
+multi-token accepts from the verify step with *zero* draft FLOPs —
+which is exactly what makes it the universal drafter: SSM and hybrid
+targets whose recurrent caches cannot host a lagging draft model
+(``Model.rollback_needs_replay``), MoE and encoder–decoder stacks, all
+speculate through the same target-side verify/accept/rollback machinery
+(``engine._build_ngram_spec_step``).
+
+Proposals are deterministic functions of the history, so greedy decoding
+is token-identical to plain decode: ``sampler.speculative`` emits the
+target argmax prefix regardless of what the drafter proposed — the
+drafter only decides *how many* positions verify per step, never which
+tokens commit. For stochastic sampling the drafter's distribution is the
+one-hot of its proposal, so the standard accept ratio ``p/q`` reduces to
+accepting with the target's own probability of the proposed token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ngram_propose"]
+
+
+def ngram_propose(hist, hist_len, *, gamma: int, vocab: int,
+                  max_n: int = 3):
+    """Propose ``gamma`` draft tokens per row from the row's own stream.
+
+    Args:
+      hist: (B, H) int32 — per-slot token history, front-filled, ``-1``
+        past ``hist_len`` (the engine seeds it with the effective stream
+        at admission and appends every emitted block).
+      hist_len: (B,) int32 — valid prefix length of each row.
+      gamma: number of tokens to propose.
+      vocab: vocabulary size (for the one-hot proposal distribution).
+      max_n: longest context n-gram to try (descending to 1).
+
+    Returns:
+      ``(draft_tokens, draft_logits)`` — (B, gamma) int32 proposals and
+      (B, gamma, vocab) f32 one-hot logits (0 on the proposal, -1e9
+      elsewhere), the shapes ``sampler.speculative`` expects from a
+      model draft.
+
+    Matching: for each ``n`` from ``max_n`` down to 1, row ``b``'s
+    context is its last ``n`` valid tokens; a window at ``j`` matches
+    when ``hist[b, j:j+n]`` equals the context and a continuation exists
+    strictly before the context itself (``j + n <= hist_len - 1`` — the
+    trivial self-match at ``j = hist_len - n`` is thereby excluded).
+    The *most recent* match wins and proposals start at its
+    continuation, clamped to the last valid position (so a match near
+    the stream's end degrades into repeat-last rather than reading the
+    ``-1`` fill). Rows with no match at any ``n`` propose repeat-last —
+    a cheap guess that costs nothing when rejected.
+    """
+    B, H = hist.shape
+    l = hist_len                                               # (B,)
+    last = jnp.maximum(l - 1, 0)
+    j_idx = jnp.arange(H, dtype=jnp.int32)                     # (H,)
+    found = jnp.zeros((B,), bool)
+    start = last                                  # fallback: repeat-last
+    for n in range(max_n, 0, -1):
+        cpos = l[:, None] - n + jnp.arange(n)[None, :]         # (B, n)
+        ctx = jnp.take_along_axis(hist, jnp.maximum(cpos, 0), axis=1)
+        ok = jnp.ones((B, H), bool)
+        for k in range(n):
+            # shifted[:, j] = hist[:, j+k]; the roll wrap past H-1 is
+            # unreachable under the j + n <= l-1 validity bound below
+            ok = ok & (jnp.roll(hist, -k, axis=1) == ctx[:, k][:, None])
+        ok = ok & (j_idx[None, :] + n <= l[:, None] - 1) \
+                & (l[:, None] >= n + 1)
+        j = jnp.max(jnp.where(ok, j_idx[None, :], -1), axis=1)  # (B,)
+        hit = (j >= 0) & ~found
+        start = jnp.where(hit, j + n, start)
+        found = found | hit
+    pos = jnp.minimum(start[:, None] + jnp.arange(gamma)[None, :],
+                      last[:, None])                           # (B, g)
+    draft = jnp.maximum(jnp.take_along_axis(hist, pos, axis=1), 0)
+    oh = jax.nn.one_hot(draft, vocab, dtype=jnp.float32)
+    return draft, jnp.where(oh > 0, 0.0, -1e9)

@@ -269,9 +269,10 @@ class Recorder:
         pass
 
     def on_admission(self, req, slot: int, base: int, kind: str) -> None:
-        """Request leaves the queue: ``kind`` is "chunked" (fused mixed
-        path; ``base`` > 0 on a prefix-cache hit) or "prefill" (legacy
-        monolithic path)."""
+        """Request leaves the queue: ``kind`` is "chunked" (the fused
+        mixed path every admission takes; ``base`` > 0 on a
+        prefix-cache hit) or "fallback" (defensive-only: a stack with
+        no ``extend_into_cache``, counted and rejected)."""
 
     def on_chunk(self, req, slot: int, lo: int, hi: int,
                  last: bool) -> None:

@@ -14,10 +14,17 @@ Checks:
   shard like the w they replace) — plus plain on a pure-TP 1x8 mesh
   (kv heads don't divide 8: the heads dim falls back to replicated,
   output must still match);
-* cache-bit equality after admission on the mesh: chunked admission
-  writes the same K/V/pos/step bits as monolithic prefill;
+* cache equality after admission on the mesh: different chunk sizes
+  write bit-identical K/V/pos/step, and chunked matches whole-prompt
+  (single max-size chunk) admission to float tolerance — the max-size
+  chunk pads its extend to ``kv_len``, where XLA picks a different
+  matmul vectorization, so parity across *pad widths* is numerical
+  (1-2 ulp), while parity across chunk sizes at small pads is bitwise;
 * compiled-program-count flatness: serving a second request stream
-  compiles nothing new (no resharding-induced recompiles).
+  compiles nothing new (no resharding-induced recompiles; on-demand
+  prefix ``materialize`` programs are excluded — a repeat stream hits
+  *deeper* bucketed prefixes than the cold stream could, drawn from a
+  bounded O(log) set).
 """
 import os
 
@@ -81,7 +88,13 @@ def check_mode(name, mesh="2,4"):
     eng = _engine(mesh, **kw)
     sharded = _serve(eng)
     sizes0 = dict(eng.program_cache_sizes())
-    prefill0 = len(eng._prefill_jits)
+    # prefix materialize programs are warmed on demand from a bounded
+    # O(log) bucket set: a repeat stream hits its own full-length
+    # entries, i.e. deeper buckets than any cold stream could, so those
+    # keys may legitimately appear here — everything else must be flat
+    slot_keys = lambda: {k for k in eng._slot_jits  # noqa: E731
+                         if k[0] != "materialize"}
+    slots0 = slot_keys()
     # a second stream through the warm engine must compile nothing new;
     # its expected tokens are the first stream's under shifted uids (the
     # engine state is stream-independent after drain)
@@ -91,21 +104,26 @@ def check_mode(name, mesh="2,4"):
         "identical": single == sharded,
         "identical_second_stream": single2 == sharded2,
         "programs_flat": sizes0 == dict(eng.program_cache_sizes())
-        and prefill0 == len(eng._prefill_jits),
+        and slots0 == slot_keys(),
         "program_sizes": dict(eng.program_cache_sizes()),
     }
 
 
 def check_admission_cache_bits(mesh="2,4"):
-    """On the mesh: chunked admission of one prompt leaves slot 0 with
-    the same K/V/pos/step bits as monolithic prefill of that prompt
-    (positions < L; monolithic bucketed prefill writes padded garbage at
-    pos >= L, masked by pos = -1 in both)."""
+    """On the mesh: chunk size is a scheduling choice, not a numerics
+    choice. 8- and 16-token chunked admission leave slot 0 bit-identical
+    (K/V/pos/step); the single max-size chunk (prefill_chunk=0) pads its
+    extend to ``kv_len``, where XLA's matmul vectorization changes, so
+    chunked-vs-whole K/V parity is to float tolerance (1-2 ulp) with
+    pos/step still exact — greedy token identity across all three is
+    asserted by check_mode("chunked")."""
     prompt = PROMPTS[2]
     L = len(prompt)
     out = {}
     caches = {}
-    for tag, kw in (("chunked", {"prefill_chunk": 8}), ("mono", {})):
+    for tag, kw in (("chunk8", {"prefill_chunk": 8}),
+                    ("chunk16", {"prefill_chunk": 16}),
+                    ("whole", {})):
         eng = _engine(mesh, **kw)
         eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
         # drive admission only — stop at the arming step so no decode
@@ -114,19 +132,25 @@ def check_admission_cache_bits(mesh="2,4"):
         while eng._admit is not None:
             eng.step()
         caches[tag] = jax.tree.map(np.asarray, eng.cache)
-    a, b = caches["chunked"], caches["mono"]
-    flat_a = jax.tree_util.tree_flatten_with_path(a)[0]
-    flat_b = jax.tree.leaves(b)
-    ok = True
-    for (path, la), lb in zip(flat_a, flat_b):
-        key = path[-1].key
-        if key in ("k", "v", "k_scale", "v_scale"):
-            ok &= np.array_equal(la[:, 0, :L], lb[:, 0, :L])
-        elif key in ("pos",):
-            ok &= np.array_equal(la[:, 0], lb[:, 0])
-        elif key == "step":
-            ok &= np.array_equal(la[:, 0], lb[:, 0])
-    out["cache_bits_equal"] = bool(ok)
+
+    def compare(a, b, exact):
+        flat_a = jax.tree_util.tree_flatten_with_path(a)[0]
+        flat_b = jax.tree.leaves(b)
+        ok = True
+        for (path, la), lb in zip(flat_a, flat_b):
+            key = path[-1].key
+            if key in ("k", "v", "k_scale", "v_scale"):
+                la, lb = la[:, 0, :L], lb[:, 0, :L]
+                ok &= (np.array_equal(la, lb) if exact else
+                       np.allclose(la, lb, rtol=1e-5, atol=1e-5))
+            elif key in ("pos", "step"):
+                ok &= np.array_equal(la[:, 0], lb[:, 0])
+        return bool(ok)
+
+    out["cache_bits_equal"] = compare(caches["chunk8"], caches["chunk16"],
+                                      exact=True)
+    out["cache_close_to_whole"] = compare(caches["chunk8"],
+                                          caches["whole"], exact=False)
     return out
 
 

@@ -1,5 +1,5 @@
 """Continuous batching invariants: the unified extend path
-(``Model.extend_into_cache``), chunked prefill ≡ monolithic bucketed
+(``Model.extend_into_cache``), chunked prefill ≡ whole-prompt
 prefill (token-identical greedy output, cache bit-equality), shared-
 prefix KV reuse (hit ≡ cold path, LRU eviction under the token cap),
 and the fused mixed step composing with int8 KV + speculative decoding."""
@@ -88,19 +88,24 @@ def test_extend_last_only_gathers_last_valid_position():
                                   np.asarray(lo_full[1, 1]))
 
 
-def test_extend_gated_for_ssm_stacks():
-    cfg = get_arch("mamba2-780m", variant="reduced")
-    model = build(cfg)
-    assert not model.supports_extend and model.extend_into_cache is None
+def test_extend_universal_across_families():
+    """Every family exposes the extend path — it is the engine's one
+    admission path (recurrent stacks flag the rollback-replay contract
+    instead of opting out)."""
+    for arch in ("mamba2-780m", "jamba-1.5-large-398b", "qwen2-moe-a2.7b",
+                 "seamless-m4t-medium"):
+        model = build(get_arch(arch, variant="reduced"))
+        assert model.supports_extend, arch
+        assert model.extend_into_cache is not None, arch
 
 
 # ------------------------------------------------------------------ #
-# chunked prefill ≡ monolithic bucketed prefill
+# chunked prefill ≡ whole-prompt admission
 # ------------------------------------------------------------------ #
 def test_chunked_prefill_cache_bit_equality():
     """Model level: feeding the prompt through chunked extends produces a
     bit-identical cache (K/V/pos/step) and next-token logits to one
-    monolithic masked prefill — chunking is a scheduling choice, not a
+    whole-prompt admission — chunking is a scheduling choice, not a
     numerics choice."""
     L, C, Lb, S = 13, 4, 16, 32
     prompt = _RNG.integers(0, _CFG.vocab, L)
@@ -137,7 +142,7 @@ def test_chunked_prefill_cache_bit_equality():
 @pytest.mark.slow
 def test_chunked_engine_matches_legacy(chunk, paged):
     """Engine level: more requests than slots, prompts shorter and longer
-    than the chunk — greedy output must equal the monolithic engine's,
+    than the chunk — greedy output must equal the whole-prompt engine's,
     and every admission must take the chunked path. The paged layout
     (block-table KV pool) must be bit-invisible in the token stream."""
     base, _ = _run()
@@ -170,9 +175,10 @@ def test_chunked_max_new_one_and_eos_free_slot():
 
 
 @pytest.mark.slow
-def test_chunked_falls_back_for_unsupported_stacks():
-    """SSM stacks have no extend path: the knob degrades to monolithic
-    prefill instead of failing, with identical output."""
+def test_ssm_stacks_admit_through_chunked_path():
+    """SSM stacks flow through the same chunked admission as attention
+    stacks (the ssd_extend recurrence): chunk-size choice is invisible
+    in the greedy output and nothing falls back."""
     cfg = get_arch("mamba2-780m", variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -184,11 +190,15 @@ def test_chunked_falls_back_for_unsupported_stacks():
             eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
         return {u: r.tokens for u, r in eng.run().items()}, eng
 
-    base, _ = run()
+    base, eng0 = run()                       # 0 = one max-size chunk
     out, eng = run(prefill_chunk=8)
     assert out == base
-    assert eng.prefill_chunk == 0
-    assert eng.latency_stats()["chunked_admissions"] == 0
+    assert eng0.prefill_chunk == eng0.kv_len
+    assert eng.prefill_chunk == 8
+    for e in (eng0, eng):
+        st = e.latency_stats()
+        assert st["chunked_admissions"] == 3
+        assert st["fallback_admissions"] == 0
 
 
 # ------------------------------------------------------------------ #

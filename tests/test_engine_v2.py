@@ -1,8 +1,7 @@
-"""Engine v2 invariants: bounded prefill jit cache, slot eviction/refill
-correctness against a sequential no-batching reference, device-resident
-decode state, and the immediate-finish (max_new_tokens <= 1) branch."""
-import math
-
+"""Engine v2 invariants: bounded jit program count under the one chunked
+admission path, slot eviction/refill correctness against a sequential
+no-batching reference, device-resident decode state, and the
+immediate-finish (max_new_tokens <= 1) branch."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +9,7 @@ import pytest
 
 from repro.configs import get_arch
 from repro.models.model import build
-from repro.serving.engine import Engine, bucket_length
+from repro.serving.engine import Engine
 from repro.serving.request import Request
 from repro.serving.sampler import Sampler
 
@@ -41,11 +40,13 @@ def _sequential_reference(prompt, max_new, cache_len=64):
 
 
 # ------------------------------------------------------------------ #
-# bucketed prefill
+# one admission path, O(1) compiled programs
 # ------------------------------------------------------------------ #
-def test_prefill_jit_cache_is_logarithmic():
-    """10 distinct prompt lengths -> at most ceil(log2(cache_len)) compiled
-    prefill programs (power-of-two buckets), not one per length."""
+def test_admission_program_count_is_constant():
+    """10 distinct prompt lengths all admit through the chunked path:
+    no per-length prefill programs exist at all (the mixed step and the
+    slot reset are the only admission programs), and nothing falls back
+    to a monolithic prefill."""
     eng = _engine(max_batch=2, cache_len=64)
     rng = np.random.default_rng(0)
     for uid, L in enumerate([1, 3, 5, 7, 9, 13, 17, 23, 29, 31]):
@@ -53,16 +54,12 @@ def test_prefill_jit_cache_is_logarithmic():
                            max_new_tokens=2))
     resp = eng.run()
     assert all(r.finished for r in resp.values())
-    assert eng.latency_stats()["prefill_jit_entries"] <= \
-        math.ceil(math.log2(eng.cache_len))
-
-
-def test_bucket_length_caps_and_floors():
-    assert bucket_length(1, 64) == 8
-    assert bucket_length(9, 64) == 16
-    assert bucket_length(33, 64) == 64
-    assert bucket_length(40, 48) == 48     # non-power-of-two cap
-    assert bucket_length(16, 64) == 16     # exact power of two
+    st = eng.latency_stats()
+    assert st["fallback_admissions"] == 0
+    assert st["chunked_admissions"] == 10
+    # jit programs: the fused step/mixed pair plus the slot reset —
+    # independent of how many distinct prompt lengths were served
+    assert len(eng._slot_jits) == 1 and ("reset", 0) in eng._slot_jits
 
 
 # ------------------------------------------------------------------ #
@@ -103,9 +100,13 @@ def test_decode_state_stays_on_device_between_steps():
     for name in ("tokens", "remaining", "active", "eos"):
         assert isinstance(getattr(eng, name), jax.Array), name
     assert len(eng._trace) == 5
-    assert all(isinstance(t, jax.Array) for t in eng._trace)
-    # nothing harvested yet: responses only hold the prefill token
-    assert all(r.n_generated == 1 for r in eng.responses.values())
+    # trace entries are device arrays (plain steps) or tuples of device
+    # arrays (mixed/admit steps: block + emit count) — never host ints
+    for t in eng._trace:
+        parts = t if isinstance(t, tuple) else (t,)
+        assert all(isinstance(p, jax.Array) for p in parts)
+    # nothing harvested yet: responses hold no tokens until a poll
+    assert all(r.n_generated == 0 for r in eng.responses.values())
     resp = eng.run()
     assert all(r.finished and r.n_generated == 12 for r in resp.values())
 
@@ -132,8 +133,10 @@ def test_eos_finishes_between_polls():
 # ------------------------------------------------------------------ #
 # immediate finish (max_new_tokens <= 1)
 # ------------------------------------------------------------------ #
-def test_max_new_tokens_one_finishes_at_prefill():
-    """The slot is never armed: one token, finished, zero decode steps."""
+def test_max_new_tokens_one_finishes_at_admission():
+    """The slot is never armed: the admission's final chunk samples one
+    token, the device marks the row done, and no plain decode step ever
+    runs for it."""
     eng = _engine(max_batch=2, cache_len=64)
     rng = np.random.default_rng(2)
     for uid in range(5):
@@ -141,7 +144,12 @@ def test_max_new_tokens_one_finishes_at_prefill():
                            max_new_tokens=1))
     resp = eng.run()
     assert all(r.finished and r.n_generated == 1 for r in resp.values())
-    assert eng.latency_stats()["decode_steps"] == 0
+    assert eng.active_slots == 0
+    st = eng.latency_stats()
+    assert st["fallback_admissions"] == 0
+    assert st["chunked_admissions"] == 5
+    # every admission went through the fused mixed step
+    assert eng.step_kinds.count("mixed") >= 5
 
 
 def test_latency_stats_empty_streams_omit_keys():
@@ -153,13 +161,14 @@ def test_latency_stats_empty_streams_omit_keys():
     assert not [k for k in st if k.startswith(("decode_ms", "ttft_ms",
                                                "itl_ms"))]
     assert st["n_finished"] == 0
-    # max_new=1: finishes at prefill — TTFT exists, decode/ITL never ran
+    # max_new=1: finishes at the admission chunk — TTFT and the step
+    # series exist (admission is a fused step), ITL never ran
     eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3]),
                        max_new_tokens=1))
     eng.run()
     st = eng.latency_stats()
     assert "ttft_ms_p50" in st and st["ttft_ms_p50"] > 0.0
-    assert "decode_ms_p50" not in st and "itl_ms_p50" not in st
+    assert "itl_ms_p50" not in st
     assert st["n_finished"] == 1
 
 
@@ -186,8 +195,8 @@ def test_masked_prefill_matches_exact(arch):
     """Right-padded prefill with batch['length'] produces the same logits
     and an equivalent cache state as exact-length prefill — for attention
     (pos masking) and SSM (dt masking + conv-tail gather) stacks alike.
-    (MoE stacks are capacity-approximate under padding; the engine uses
-    exact-length prefill for those, see Engine._pad_buckets.)"""
+    (The serving engine itself admits through the chunked extend path;
+    masked prefill remains the batch/offline API.)"""
     cfg = get_arch(arch, variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))

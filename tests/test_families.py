@@ -1,0 +1,199 @@
+"""Cross-family serving identity: every zoo family — pure SSM, hybrid
+attention/SSM, MoE, encoder-decoder — admits through the one fused
+chunked path with zero fallback admissions, chunk size is a scheduling
+choice (chunked output == whole-prompt output), and the family-agnostic
+n-gram drafter is greedy token-identical to the plain engine. Plus the
+SSM checkpoint-rollback replay contract at the model level."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import build
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.sampler import Sampler
+
+FAMILIES = [
+    "mamba2-780m",            # pure SSM (replay rollback)
+    pytest.param("jamba-1.5-large-398b",
+                 marks=pytest.mark.slow),  # hybrid attn/SSM + MoE
+    "qwen2-moe-a2.7b",        # MoE (dense routing in extend)
+    "seamless-m4t-medium",    # encoder-decoder (frozen cross-attn KV)
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _stack(arch, vocab=0):
+    cfg = get_arch(arch, variant="reduced")
+    if vocab:
+        cfg = cfg.replace(vocab=vocab)
+    model = build(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(cfg, lengths, max_new, seed=5):
+    """Token prompts (+ frontend frames for encdec stacks)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid, L in enumerate(lengths):
+        emb = None
+        if cfg.frontend is not None:
+            fe = cfg.frontend
+            emb = rng.normal(size=(fe.n_tokens, fe.d_embed)) \
+                .astype(np.float32)
+        reqs.append(Request(uid=uid,
+                            prompt=rng.integers(0, cfg.vocab, L),
+                            max_new_tokens=max_new, embeddings=emb))
+    return reqs
+
+def _serve(model, params, reqs, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 64)
+    eng = Engine(model, params, sampler=Sampler(), **kw)
+    for r in reqs:
+        eng.submit(r)
+    resp = eng.run()
+    assert all(r.finished for r in resp.values())
+    return {u: r.tokens for u, r in resp.items()}, eng.latency_stats()
+
+
+# ------------------------------------------------------------------ #
+# chunk size is a scheduling choice, never a numerics choice
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_chunked_equals_whole_prompt(arch):
+    """Admitting in 8-token chunks produces exactly the whole-prompt
+    (single max-size chunk) greedy output, and nothing falls back to a
+    monolithic path — there is none left to fall back to."""
+    cfg, model, params = _stack(arch)
+    lengths = (3, 11, 17)
+    whole, st_w = _serve(model, params, _requests(cfg, lengths, 6))
+    chunk, st_c = _serve(model, params, _requests(cfg, lengths, 6),
+                         prefill_chunk=8)
+    assert chunk == whole
+    for st in (st_w, st_c):
+        assert st["fallback_admissions"] == 0
+        assert st["chunked_admissions"] == len(lengths)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_admission_cache_bits_chunked_vs_whole(arch):
+    """Driving one prompt through 8-token chunks leaves slot 0 with the
+    same cache bits as a single max-size chunk — K/V up to the prompt
+    depth, pos/step rows, and SSM/cross-attention state alike. The
+    ``*_ckpt`` leaves are excluded: they snapshot the state before the
+    *most recent* advance, which legitimately differs with chunking."""
+    cfg, model, params = _stack(arch)
+    L = 13
+    caches = {}
+    for tag, kw in (("chunked", {"prefill_chunk": 8}), ("whole", {})):
+        eng = Engine(model, params, max_batch=2, cache_len=64,
+                     sampler=Sampler(), **kw)
+        eng.submit(_requests(cfg, (L,), 4)[0])
+        eng._fill_free_slots()
+        while eng._admit is not None:
+            eng.step()
+        caches[tag] = jax.tree.map(np.asarray, eng.cache)
+    fa = jax.tree_util.tree_flatten_with_path(caches["chunked"])[0]
+    fb = jax.tree.leaves(caches["whole"])
+    for (path, la), lb in zip(fa, fb):
+        key = getattr(path[-1], "key", "")
+        if key.endswith("_ckpt"):
+            continue
+        if key in ("k", "v", "k_scale", "v_scale"):
+            la, lb = la[:, 0, :L], lb[:, 0, :L]   # written prompt span
+        else:
+            la, lb = la[:, 0], lb[:, 0]           # slot row, full state
+        np.testing.assert_array_equal(la, lb, err_msg=str(key))
+
+
+# ------------------------------------------------------------------ #
+# family-agnostic n-gram speculation (ISSUE acceptance criterion)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", [
+    "mamba2-780m",
+    "qwen2-moe-a2.7b",
+    pytest.param("seamless-m4t-medium", marks=pytest.mark.slow),
+])
+def test_ngram_spec_greedy_identity(arch):
+    """The prompt-lookup drafter needs no second model and no
+    replay-free cache: greedy output is token-identical to the plain
+    engine on SSM, MoE and encoder-decoder stacks alike."""
+    cfg, model, params = _stack(arch)
+    reqs = lambda: _requests(cfg, (3, 9, 14), 8, seed=9)  # noqa: E731
+    base, _ = _serve(model, params, reqs())
+    out, st = _serve(model, params, reqs(), draft="ngram", spec_gamma=3)
+    assert out == base
+    assert st["fallback_admissions"] == 0
+    assert st["spec_gamma"] == 3
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "qwen2-moe-a2.7b"])
+def test_ngram_spec_accepts_on_repetitive_stream(arch):
+    """A tiny vocabulary forces repeated n-grams, so drafts actually
+    match and the accept/commit path (checkpoint rollback + replay on
+    SSM stacks) is genuinely exercised — with identity still holding
+    and fewer fused steps than emitted tokens."""
+    cfg, model, params = _stack(arch, vocab=8)
+    reqs = lambda: _requests(cfg, (6, 13), 16, seed=2)  # noqa: E731
+    base, _ = _serve(model, params, reqs())
+    out, st = _serve(model, params, reqs(), draft="ngram", spec_gamma=3)
+    assert out == base
+    assert st["spec_acceptance_rate"] > 0.0
+    assert st["decode_steps"] < sum(len(t) - 1 for t in base.values())
+
+
+# ------------------------------------------------------------------ #
+# encoder-decoder admission contract
+# ------------------------------------------------------------------ #
+def test_encdec_rejects_token_only_requests():
+    """Cross-attention memory is encoded at admission, so an encdec
+    request without frontend frames cannot be served."""
+    cfg, model, params = _stack("seamless-m4t-medium")
+    eng = Engine(model, params, max_batch=1, cache_len=64,
+                 sampler=Sampler())
+    with pytest.raises(ValueError, match="embeddings"):
+        eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3]),
+                           max_new_tokens=2))
+
+
+# ------------------------------------------------------------------ #
+# SSM rollback contract (model level)
+# ------------------------------------------------------------------ #
+def test_ssm_rollback_replay_matches_clean():
+    """``rollback_needs_replay`` stacks restore the checkpoint taken
+    before the most recent advance; rolling back a speculative verify
+    and re-extending the accepted prefix must land in exactly the state
+    a clean (never-speculated) cache reaches — the engine's replay
+    commit flow."""
+    cfg, model, params = _stack("mamba2-780m")
+    assert model.rollback_needs_replay
+    rng = np.random.default_rng(13)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    junk = jnp.asarray(rng.integers(0, cfg.vocab, (1, 5)), jnp.int32)
+    nxt = jnp.asarray([[3]], jnp.int32)
+    three = jnp.asarray([3], jnp.int32)
+    ext = jax.jit(lambda p, t, c, n: model.extend_into_cache(
+        p, t, c, n, last_only=True))
+
+    cache = model.make_cache(1, 32)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": toks}, cache)
+    _, cache = jax.jit(model.verify_step)(params, junk, cache)
+    # accept the first 3 of the 5 speculated tokens: rewind to the
+    # pre-verify checkpoint, then replay exactly the accepted prefix
+    cache = model.rollback(cache, jnp.asarray([8], jnp.int32))
+    _, cache = ext(params, junk[:, :3], cache, three)
+
+    clean = model.make_cache(1, 32)
+    _, clean = jax.jit(model.prefill)(params, {"tokens": toks}, clean)
+    _, clean = ext(params, junk[:, :3], clean, three)
+
+    assert int(model.cache_steps(cache)[0]) == 11
+    lo_r, _ = jax.jit(model.decode_step)(params, nxt, cache)
+    lo_c, _ = jax.jit(model.decode_step)(params, nxt, clean)
+    np.testing.assert_allclose(np.asarray(lo_r), np.asarray(lo_c),
+                               rtol=2e-5, atol=2e-5)

@@ -1,5 +1,6 @@
 """Central kernel dispatch: backend defaults + REPRO_FORCE_* overrides."""
 import numpy as np
+import pytest
 
 from repro.kernels import dispatch
 
@@ -68,6 +69,29 @@ def test_sharded_fallback_inactive_outside_context():
     """No activation-sharding context -> the fallback never triggers (the
     single-device engine is unaffected)."""
     assert dispatch.sharded_ref_fallback() is False
+
+
+def test_ssd_routes_through_dispatch(monkeypatch):
+    """The ssd-only module override is retired: ``set_use_pallas`` is a
+    deprecation-warning no-op, and ``ssd_extend`` obeys the same
+    dispatch contract as every other op (env force == explicit
+    use_pallas=False, bit-for-bit)."""
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    from repro.kernels.ssd_scan import ops as ssd_ops
+    with pytest.warns(DeprecationWarning, match="dispatch"):
+        ssd_ops.set_use_pallas(True)
+    rng = np.random.default_rng(1)
+    b, t, h, g, p, n = 2, 4, 4, 2, 8, 8
+    state = rng.normal(0, 1, (b, h, p, n)).astype(np.float32)
+    x = rng.normal(0, 1, (b, t, h, p)).astype(np.float32)
+    dt = rng.uniform(0.1, 0.9, (b, t, h)).astype(np.float32)
+    A = -rng.uniform(0.1, 1.0, (h,)).astype(np.float32)
+    B = rng.normal(0, 1, (b, t, g, n)).astype(np.float32)
+    C = rng.normal(0, 1, (b, t, g, n)).astype(np.float32)
+    ya, sa = ssd_ops.ssd_extend(state, x, dt, A, B, C)
+    yb, sb = ssd_ops.ssd_extend(state, x, dt, A, B, C, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
 
 
 def test_ops_route_through_dispatch(monkeypatch):

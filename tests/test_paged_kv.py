@@ -409,6 +409,6 @@ def test_prefix_hit_aliases_pages_zero_copy():
 def test_paged_submit_rejects_oversized_prompt():
     eng = Engine(_MODEL, _PARAMS, max_batch=1, cache_len=32,
                  sampler=Sampler(), paged=True, page_size=8)
-    with pytest.raises(ValueError, match="chunked"):
+    with pytest.raises(ValueError, match="KV capacity"):
         eng.submit(Request(uid=0, prompt=_RNG.integers(0, _CFG.vocab, 40),
                            max_new_tokens=2))

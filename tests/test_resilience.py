@@ -126,16 +126,14 @@ def test_submit_validation(mode):
     # uid 0 is queued (in flight): resubmission must be rejected
     with pytest.raises(ValueError, match="already in flight"):
         eng.submit(Request(uid=0, prompt=np.asarray([1, 2])))
-    # prompt longer than the KV ring: full-attention caches reject it
-    # up front ("chunked" wording on the paged path)
+    # prompt longer than the KV ring: every admission path rejects it
+    # up front with the same capacity wording
     long = _RNG.integers(0, _CFG.vocab, 40)
-    want = "chunked" if mode == "paged" else "exceeds the KV capacity"
-    with pytest.raises(ValueError, match=want):
+    with pytest.raises(ValueError, match="exceeds the KV capacity"):
         eng.submit(Request(uid=1, prompt=long, max_new_tokens=2))
-    # paged engines reject embeddings outright (chunked prefill is
-    # token-only); elsewhere a malformed shape is named specifically
-    emb_want = "chunked" if mode == "paged" else "embeddings must be 2-D"
-    with pytest.raises(ValueError, match=emb_want):
+    # embeddings on a frontend-less stack are rejected before any
+    # shape or mode check — there is nothing to consume them
+    with pytest.raises(ValueError, match="no frontend"):
         eng.submit(Request(uid=1, prompt=np.asarray([1]),
                            embeddings=np.zeros((2, 3, 4), np.float32)))
 

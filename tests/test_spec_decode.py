@@ -125,14 +125,21 @@ def test_stochastic_spec_completes():
 # ------------------------------------------------------------------ #
 # engine gating
 # ------------------------------------------------------------------ #
-def test_spec_requires_attention_backed_caches():
+def test_model_draft_requires_no_replay_caches():
+    """Recurrent targets support speculation (verify/rollback exist) but
+    only through the n-gram drafter: a *model* draft needs both caches
+    to rewind without replay, and the error says to use ngram."""
     cfg = get_arch("mamba2-780m", variant="reduced")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    assert not model.supports_speculative
-    with pytest.raises(ValueError, match="attention-backed"):
+    assert model.supports_speculative and model.rollback_needs_replay
+    with pytest.raises(ValueError, match="ngram"):
         Engine(model, params, max_batch=1, cache_len=32,
                draft="fp@1", spec_gamma=2)
+    # the ngram drafter builds fine on the same stack
+    eng = Engine(model, params, max_batch=1, cache_len=32,
+                 draft="ngram", spec_gamma=2)
+    assert eng.spec_gamma == 2 and eng.draft_cache is None
 
 
 def test_gamma_without_draft_raises():
@@ -147,6 +154,9 @@ def test_spec_variant_and_draft_spec_parsing():
     assert parse_draft_spec("fp") == ("fp", None)
     with pytest.raises(ValueError):
         parse_draft_spec("int2@1")
+    # 'ngram' is an engine-level drafter, not a self-draft spec
+    with pytest.raises(ValueError, match="prompt-lookup"):
+        parse_draft_spec("ngram")
 
 
 def test_self_draft_shares_weights():

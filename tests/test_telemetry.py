@@ -191,26 +191,28 @@ def test_latency_stats_keys_preserved():
     _stream(eng, n=3, max_new=4)
     st = eng.latency_stats()
     for k in ("n_finished", "tokens_generated", "decode_steps",
-              "prefill_jit_entries", "chunked_admissions",
+              "fallback_admissions", "chunked_admissions",
               "decode_ms_mean", "decode_ms_p50", "decode_ms_p99",
               "ttft_ms_mean", "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
               "itl_ms_mean", "itl_ms_p50", "itl_ms_p95", "itl_ms_p99"):
         assert k in st, k
+    # token-id requests never leave the fast path
+    assert st["fallback_admissions"] == 0
 
 
 def test_steady_state_recompile_warns():
-    """After reset_stats() (the warmed-bench boundary) a prompt landing
-    in a never-compiled prefill bucket must raise RecompileWarning and
-    count as a steady compile."""
-    eng = _engine(max_batch=1)
-    eng.submit(Request(uid=0, prompt=np.arange(5) % _CFG.vocab,
-                       max_new_tokens=3))
-    eng.run()                                   # warm bucket 8 + step
-    eng.reset_stats()                           # arm the watchdog
-    eng.submit(Request(uid=1, prompt=np.arange(20) % _CFG.vocab,
-                       max_new_tokens=3))       # bucket 32: cold
-    with pytest.warns(telemetry.RecompileWarning, match="prefill"):
-        eng.run()
+    """After reset_stats() (the warmed-bench boundary) the first request
+    to hit a still-cold program — here the ``materialize`` slot program
+    a prefix-cache hit compiles on first use — must raise
+    RecompileWarning and count as a steady compile."""
+    eng = _engine(max_batch=1, prefix_cache_tokens=64, prefill_chunk=4)
+    prompt = np.arange(12) % _CFG.vocab
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=3))
+    eng.run()                  # warm the step/mixed/reset programs and
+    eng.reset_stats()          # publish the prefix; arm the watchdog
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=3))
+    with pytest.warns(telemetry.RecompileWarning, match="materialize"):
+        eng.run()              # prefix hit -> cold materialize program
     c = eng.metrics.snapshot()["counters"]
     assert c["steady_compiles"] >= 1
     assert c["compiles_total"] > c["steady_compiles"]   # warmup counted too
